@@ -1,0 +1,96 @@
+"""Paper Fig. 6: influence of TR rank on operator quality vs acceleration.
+
+Micro-scale proxy (CPU container): gpt-micro -> width / depth / both growth,
+ranks {1, 4, 7, 10}.  For each (growth-type, rank): train the Mango operator
+a few steps and report the operator-trained loss (paper's "operator
+accuracy" analogue, lower=better).  For rank 1 vs 10 additionally measure
+steps-to-target of continued training (paper's acceleration ratio): the
+paper's finding — quality rises with rank, acceleration stays flat, rank 1
+suffices — is what this reproduces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import flops_saving_ratio, train_to_target
+from repro.configs.base import get_config
+from repro.core import grow as growlib
+from repro.data.synthetic import lm_data_iter
+from repro.models import get_family
+from repro.train.loss import loss_for
+
+RANKS = (1, 4, 7, 10)
+OP_STEPS = 30
+SEQ, BATCH = 64, 8
+
+
+def _loss_fn(cfg):
+    fam = get_family(cfg)
+    lf = loss_for(cfg)
+
+    def fn(params, batch):
+        logits, aux = fam.forward(params, batch, cfg)
+        return lf(logits, aux, batch, cfg)[0]
+
+    return fn
+
+
+def _pretrained_small(cfg_s, steps=150):
+    fam = get_family(cfg_s)
+    params = fam.init(jax.random.PRNGKey(0), cfg_s)
+    _, hist = train_to_target(cfg_s, params, target_loss=-1.0,
+                              max_steps=steps, batch=BATCH, seq=SEQ)
+    # re-train (train_to_target donates params); rebuild quickly
+    params = fam.init(jax.random.PRNGKey(0), cfg_s)
+    from repro.optim import OptimizerConfig, make_optimizer
+    from repro.train.steps import make_train_step
+    opt_cfg = OptimizerConfig(lr=1e-3)
+    init_fn, _ = make_optimizer(opt_cfg)
+    opt = init_fn(params)
+    step = jax.jit(make_train_step(cfg_s, opt_cfg))
+    data = lm_data_iter(cfg_s.vocab_size, BATCH, SEQ, seed=0)
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, m = step(params, opt, b, jnp.int32(s + 1))
+    return params, float(m["loss"])
+
+
+def run(print_fn=print, quick=False):
+    cfg_s = get_config("gpt-micro")
+    growths = {
+        "width": cfg_s.replace(name="w", d_model=128, n_heads=8,
+                               n_kv_heads=8, d_ff=512),
+        "depth": cfg_s.replace(name="d", n_layers=8),
+        "both": get_config("gpt-micro-big"),
+    }
+    small, small_loss = _pretrained_small(cfg_s, steps=60 if quick else 150)
+    print_fn(f"fig6/small_pretrained_loss,{small_loss:.4f},")
+    ranks = RANKS[:2] if quick else RANKS
+    results = {}
+    for gname, cfg_t in growths.items():
+        for rank in ranks:
+            gop, op_params = growlib.build("mango", cfg_s, cfg_t, rank=rank,
+                                           rng=jax.random.PRNGKey(rank))
+            data = lm_data_iter(cfg_t.vocab_size, BATCH, SEQ, seed=3)
+            op_params, losses = growlib.train_operator(
+                gop, op_params, small, _loss_fn(cfg_t),
+                iter({k: jnp.asarray(v) for k, v in b.items()}
+                     for b in data), steps=OP_STEPS, lr=2e-3)
+            results[(gname, rank)] = (losses[0], losses[-1])
+            print_fn(f"fig6/{gname}_rank{rank},"
+                     f"{losses[-1]:.4f},op_loss_start={losses[0]:.4f}")
+            if rank in (1, ranks[-1]):
+                big = growlib.grow_params(gop, op_params, small)
+                target = small_loss * 1.02
+                steps_used, _ = train_to_target(
+                    cfg_t, big, target_loss=target,
+                    max_steps=60 if quick else 200, batch=BATCH, seq=SEQ,
+                    seed=7)
+                print_fn(f"fig6/{gname}_rank{rank}_steps_to_small_loss,"
+                         f"{steps_used},target={target:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

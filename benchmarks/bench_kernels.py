@@ -1,0 +1,45 @@
+"""Kernel microbenchmarks: interpret-mode vs jnp-reference wall time.
+
+On CPU the interpreter is NOT the perf story (TPU is the target); this
+bench is here so the harness exercises every kernel end-to-end and records
+the reference-path timings used to sanity-check relative costs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels import ops, ref
+
+
+def run(print_fn=print):
+    k = jax.random.PRNGKey(0)
+    # tr_sandwich
+    x = jax.random.normal(k, (4, 256, 256), jnp.float32)
+    ai = 0.05 * jax.random.normal(jax.random.PRNGKey(1), (256, 256))
+    ao = 0.05 * jax.random.normal(jax.random.PRNGKey(2), (256, 256))
+    us = time_call(jax.jit(ref.tr_sandwich_ref), x, ai, ao)
+    print_fn(f"kernels/tr_sandwich_ref,{us:.0f},shape=4x256x256")
+
+    q = jax.random.normal(k, (1, 4, 512, 64), jnp.float32)
+    kk = jax.random.normal(k, (1, 2, 512, 64), jnp.float32)
+    vv = jax.random.normal(k, (1, 2, 512, 64), jnp.float32)
+    us = time_call(jax.jit(lambda a, b, c: ref.flash_attention_ref(
+        a, b, c, causal=True)), q, kk, vv)
+    print_fn(f"kernels/flash_attention_ref,{us:.0f},shape=1x4x512x64")
+
+    qd = jax.random.normal(k, (2, 8, 64), jnp.float32)
+    us = time_call(jax.jit(lambda a, b, c: ref.decode_attention_ref(
+        a, b, c, 500)), qd, kk.repeat(2, 0), vv.repeat(2, 0))
+    print_fn(f"kernels/decode_attention_ref,{us:.0f},cache=512")
+
+    a = jax.nn.sigmoid(jax.random.normal(k, (2, 512, 256)))
+    b = 0.1 * jax.random.normal(k, (2, 512, 256))
+    us = time_call(jax.jit(ref.rglru_scan_ref), a, b)
+    print_fn(f"kernels/rglru_scan_ref,{us:.0f},shape=2x512x256")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,114 @@
+"""Roofline analysis over the dry-run results (§Roofline deliverable).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and derives,
+per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs        [s]
+    memory term     = HLO_bytes_per_device / HBM_bw            [s]
+    collective term = wire_bytes_per_device / (links * link_bw) [s]
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Also reports MODEL_FLOPS = 6*N(_active)*D tokens and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs (catches remat/dispatch/causal-waste).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import SHAPES, get_config
+from repro.models import get_family
+from repro.utils.pytree import tree_param_count
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def active_param_count(cfg):
+    """Params touched per token (MoE: top_k of routed experts + shared)."""
+    import jax
+    fam = get_family(cfg)
+    shapes = jax.eval_shape(
+        lambda: fam.init(jax.random.PRNGKey(0), cfg))
+    total = tree_param_count(shapes)
+    if not cfg.moe:
+        return total, total
+    moe = shapes.get("moe_blocks", {}).get("moe", {})
+    routed = sum(tree_param_count(moe.get(k, {}))
+                 for k in ("w_up", "w_gate", "w_down"))
+    active = total - routed + routed * cfg.top_k / cfg.n_experts
+    return total, int(active)
+
+
+def model_flops(cfg, shape):
+    """6*N*D for train, 2*N*D for prefill, 2*N per token for decode."""
+    shp = SHAPES[shape]
+    total, active = active_param_count(cfg)
+    n = active
+    if shp.kind == "train":
+        tokens = shp.global_batch * shp.seq_len
+        return 6.0 * n * tokens
+    if shp.kind == "prefill":
+        tokens = shp.global_batch * shp.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shp.global_batch  # decode: one token per row
+
+
+def analyze(result):
+    n_dev = result["n_devices"]
+    flops = result.get("flops_per_device")
+    nbytes = result.get("bytes_accessed_per_device")
+    colls = result.get("collective_bytes_per_device", {})
+    coll_bytes = sum(colls.values())
+    t_compute = flops / PEAK_FLOPS
+    t_memory = nbytes / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    cfg = get_config(result["arch"])
+    mf = model_flops(cfg, result["shape"]) if result["shape"] in SHAPES \
+        else None
+    out = {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "step_time_bound_s": max(terms.values()),
+        "model_flops_global": mf,
+        "useful_compute_ratio":
+            (mf / (flops * n_dev)) if mf else None,
+        "roofline_fraction":
+            (t_compute / max(terms.values())) if mf else None,
+        "hbm_gib_per_device": (result["memory"]["argument_bytes"]
+                               + result["memory"]["temp_bytes"]) / 2**30,
+    }
+    return out
+
+
+def run(print_fn=print):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok" or "flops_per_device" not in r:
+            continue
+        a = analyze(r)
+        key = f"{r['arch']}__{r['shape']}__{r['mesh']}"
+        print_fn(
+            f"roofline/{key},{a['step_time_bound_s'] * 1e6:.0f},"
+            f"bottleneck={a['bottleneck']};"
+            f"compute_s={a['compute_s']:.3f};"
+            f"memory_s={a['memory_s']:.3f};"
+            f"collective_s={a['collective_s']:.3f};"
+            f"useful={a['useful_compute_ratio'] or 0:.3f};"
+            f"hbm_gib={a['hbm_gib_per_device']:.1f}")
+        rows.append((key, a))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

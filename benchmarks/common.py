@@ -1,0 +1,64 @@
+"""Shared benchmark harness helpers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import lm_data_iter
+from repro.models import get_family
+from repro.optim import OptimizerConfig, make_optimizer
+from repro.train.steps import make_train_step
+
+
+def time_call(fn, *args, reps=3, warmup=1):
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def train_to_target(cfg, params, *, target_loss, max_steps, batch=8,
+                    seq=64, lr=1e-3, seed=0, flops_per_step=1.0):
+    """Train until loss <= target; returns (steps_used, history).
+
+    steps_used = max_steps+1 when the target is never reached.
+    """
+    fam = get_family(cfg)
+    opt_cfg = OptimizerConfig(lr=lr, weight_decay=1e-2)
+    init_fn, _ = make_optimizer(opt_cfg)
+    opt = init_fn(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    data = lm_data_iter(cfg.vocab_size, batch, seq, seed=seed)
+    hist = []
+    reached = max_steps + 1
+    ema = None
+    for step in range(max_steps):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, m = step_fn(params, opt, b, jnp.int32(step + 1))
+        loss = float(m["loss"])
+        ema = loss if ema is None else 0.8 * ema + 0.2 * loss
+        hist.append(ema)
+        if ema <= target_loss and reached > max_steps:
+            reached = step + 1
+            break
+    return reached, hist
+
+
+def flops_saving_ratio(steps_scratch, steps_method, warm_steps=0,
+                       op_overhead_frac=0.0):
+    """Paper Eq. 8 with FLOPs proportional to steps at fixed batch/model;
+    operator warm-training counted via ``op_overhead_frac`` (its 100 steps
+    run at target-model cost too)."""
+    xi_scratch = float(steps_scratch)
+    xi_method = float(steps_method) + warm_steps * (1.0 + op_overhead_frac)
+    return (xi_scratch - xi_method) / xi_scratch

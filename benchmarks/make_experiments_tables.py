@@ -1,0 +1,91 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+results/dryrun/*.json.  Usage:
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables > tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.bench_roofline import RESULTS_DIR, analyze
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def load_all(include_variants=False):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if not include_variants and \
+                r.get("variant", "baseline") != "baseline":
+            continue
+        rows.append(r)
+    return rows
+
+
+def dryrun_table(rows, mesh):
+    out = ["| arch | shape | status | compile s | HBM GiB/dev | "
+           "arg GiB | temp GiB | collectives GiB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP "
+                       f"({r['reason'][:40]}…) | | | | | |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | **FAIL** | | | | | |")
+            continue
+        m = r["memory"]
+        coll = sum(r.get("collective_bytes_per_device", {}).values())
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} | "
+            f"{fmt_bytes(m['argument_bytes'] + m['temp_bytes'])} | "
+            f"{fmt_bytes(m['argument_bytes'])} | "
+            f"{fmt_bytes(m['temp_bytes'])} | {fmt_bytes(coll)} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="pod_16x16"):
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL_FLOPS | useful | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh or r["status"] != "ok" \
+                or "flops_per_device" not in r:
+            continue
+        a = analyze(r)
+        mf = a["model_flops_global"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {a['compute_s']:.3f} | "
+            f"{a['memory_s']:.3f} | {a['collective_s']:.3f} | "
+            f"**{a['bottleneck']}** | "
+            f"{mf:.2e} | {a['useful_compute_ratio']:.3f} | "
+            f"{a['roofline_fraction']:.3f} |"
+            if mf else
+            f"| {r['arch']} | {r['shape']} | {a['compute_s']:.3f} | "
+            f"{a['memory_s']:.3f} | {a['collective_s']:.3f} | "
+            f"**{a['bottleneck']}** | n/a | n/a | n/a |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load_all()
+    print("### Dry-run — single pod (16x16 = 256 chips)\n")
+    print(dryrun_table(rows, "pod_16x16"))
+    print("\n### Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(rows, "multipod_2x16x16"))
+    print("\n### Roofline — single pod (v5e: 197 TF/s bf16, 819 GB/s HBM, "
+          "50 GB/s/link)\n")
+    print(roofline_table(rows, "pod_16x16"))
+    print("\n### Roofline — multi-pod\n")
+    print(roofline_table(rows, "multipod_2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness entry: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  ``--quick`` shrinks training
+budgets (CI); default budgets reproduce the EXPERIMENTS.md numbers.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,fig6,fig7,transfer,roofline,"
+                         "kernels")
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+
+    def section(name):
+        return only is None or name in only
+
+    if section("table1"):
+        from benchmarks.bench_table1_complexity import run as t1
+        t1()
+    if section("kernels"):
+        from benchmarks.bench_kernels import run as bk
+        bk()
+    if section("roofline"):
+        from benchmarks.bench_roofline import run as rf
+        rf()
+    if section("fig6"):
+        from benchmarks.bench_fig6_rank_ablation import run as f6
+        f6(quick=args.quick)
+    if section("fig7"):
+        from benchmarks.bench_fig7_growth_curves import run as f7
+        f7(quick=args.quick)
+    if section("transfer"):
+        from benchmarks.bench_transfer import run as tr
+        tr(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""The ~100M end-to-end driver: train a 100M-parameter GPT for a few
+hundred steps (optionally grown from a 25M model first).
+
+On this CPU container a full run takes a while; ``--steps`` controls the
+budget (EXPERIMENTS.md records a real run).  On TPU this exact script is
+the single-pod trainer.
+
+Run:  PYTHONPATH=src:. python examples/train_100m.py --steps 200
+"""
+import argparse
+
+import repro.configs.base as base
+from repro.configs.base import ModelConfig, register_named
+from repro.launch.train import train
+
+
+@register_named("gpt-100m")
+def gpt_100m():
+    # 12L x 768 GPT-2-small-like on a 32k synthetic vocab: ~110M params
+    return ModelConfig(
+        name="gpt-100m", family="transformer", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=12, d_ff=3072, vocab_size=32768,
+        causal=True, rope="standard", norm="rms", act="swiglu",
+        max_seq_len=1024)
+
+
+@register_named("gpt-25m")
+def gpt_25m():
+    return gpt_100m().replace(name="gpt-25m", n_layers=6, d_model=384,
+                              n_heads=6, n_kv_heads=6, d_ff=1536)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--grow", action="store_true",
+                    help="pretrain gpt-25m briefly and grow via Mango")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
+    args = ap.parse_args()
+
+    if args.grow:
+        print("=== pretraining the 25M source ===")
+        train("gpt-25m", steps=max(args.steps // 4, 20), batch=args.batch,
+              seq=args.seq, log_every=10)
+        print("=== growing 25M -> 100M (Mango) + training ===")
+        train("gpt-100m", steps=args.steps, batch=args.batch, seq=args.seq,
+              ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 3, 1),
+              grow_from="gpt-25m", grow_method="mango", grow_steps=20,
+              log_every=10, watchdog_s=600)
+    else:
+        train("gpt-100m", steps=args.steps, batch=args.batch, seq=args.seq,
+              ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 3, 1),
+              log_every=10, watchdog_s=600)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    save_checkpoint,
+    load_checkpoint,
+    latest_step,
+)

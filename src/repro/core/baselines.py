@@ -1,0 +1,126 @@
+"""Growth baselines expressed in the same tensor-diagram algebra as Mango.
+
+Per the paper's Fig. 5 / Table 1, bert2BERT and LiGO are special cases of
+the TR-MPO operator:
+
+  * bert2BERT — frozen cores: S_I = Net2Net split map, S_O = duplicate map,
+    S_L = layer copy (AKI variant copies the *next* layer's knowledge for
+    new depth), S_B = identity.  Nothing is trained.
+  * LiGO      — trainable rank-1 S_I, S_O, S_L; S_B frozen to identity
+    (no same-layer cross-weight mixing — the partial mapping the paper
+    criticizes).
+  * StackBERT — width-preserving, S_L = block-stacking map; S_I=S_O=S_B=I.
+
+Implementing them through the identical packing/contract path makes the
+comparison exact: the only difference between methods is which cores exist
+and which are trainable.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import mango
+
+
+def layer_map_stack(l1, l2):
+    """StackBERT map: block-stack copies (l2 % l1 -> l2)."""
+    mat = np.zeros((l1, l2), np.float32)
+    for j in range(l2):
+        mat[j % l1, j] = 1.0
+    return jnp.asarray(mat)
+
+
+def layer_map_aki(l1, l2):
+    """bert2BERT AKI-flavoured map: duplicated depth takes the *next*
+    source layer's knowledge (advanced knowledge initialization)."""
+    mat = np.zeros((l1, l2), np.float32)
+    for j in range(l2):
+        base = int(j * l1 / l2)
+        src = min(base + (1 if j >= l1 else 0), l1 - 1)
+        mat[src, j] = 1.0
+    return jnp.asarray(mat)
+
+
+def _identity_cores(dims, s_i, s_o, s_l, s_b=None):
+    """Assemble rank-1 cores from explicit (mode) matrices."""
+    def lift(m):
+        return m[None, :, :, None].astype(jnp.float32)
+    if s_b is None:
+        s_b = jnp.eye(dims["B1"], dims["B2"])
+    return {"S_B": lift(s_b), "S_I": lift(s_i), "S_O": lift(s_o),
+            "S_L": lift(s_l)}
+
+
+def init_bert2bert_params(op: mango.MangoOperator, aki=True):
+    """Frozen function-preserving cores (not trained)."""
+    p = {"groups": {}, "aux": {}}
+    d1, d2 = op.plan_src.d_model, op.plan_tgt.d_model
+    for g in op.plan_src.groups:
+        dims = op.dims(g.name)
+        lm = (layer_map_aki if aki else mango.layer_map_matrix)(
+            dims["L1"], dims["L2"])
+        p["groups"][g.name] = _identity_cores(
+            dims,
+            s_i=mango.width_expand_matrix(d1, d2, normalized=True),
+            s_o=mango.width_expand_matrix(d1, d2, normalized=False),
+            s_l=lm)
+        p["aux"][f"{g.name}.layers"] = lm
+    p["aux"]["width"] = {
+        f"{d1}->{d2}": mango.width_expand_matrix(d1, d2, normalized=False)}
+    return p
+
+
+def init_ligo_params(rng, op: mango.MangoOperator, noise=0.01):
+    """Trainable S_I/S_O/S_L, frozen-identity S_B.
+
+    Returned params hold only the mode *matrices*; ``ligo_to_cores``
+    assembles full rank-1 cores at grow time so gradients never touch S_B.
+    """
+    d1, d2 = op.plan_src.d_model, op.plan_tgt.d_model
+    keys = jax.random.split(rng, 3 * len(op.plan_src.groups))
+    ki = iter(keys)
+    p = {"groups": {}, "aux": {}}
+    for g in op.plan_src.groups:
+        dims = op.dims(g.name)
+        p["groups"][g.name] = {
+            "W_I": mango.width_expand_matrix(d1, d2, True)
+            + noise * jax.random.normal(next(ki), (d1, d2)),
+            "W_O": mango.width_expand_matrix(d1, d2, False)
+            + noise * jax.random.normal(next(ki), (d1, d2)),
+            "W_L": mango.layer_map_matrix(dims["L1"], dims["L2"])
+            + noise * jax.random.normal(next(ki),
+                                        (dims["L1"], dims["L2"])),
+        }
+        p["aux"][f"{g.name}.layers"] = mango.layer_map_matrix(
+            dims["L1"], dims["L2"])
+    p["aux"]["width"] = {
+        f"{d1}->{d2}": mango.width_expand_matrix(d1, d2, False)}
+    return p
+
+
+def ligo_to_cores(op: mango.MangoOperator, ligo_params):
+    """LiGO mode matrices -> full core dict usable by mango.grow."""
+    p = {"groups": {}, "aux": ligo_params["aux"]}
+    for g in op.plan_src.groups:
+        dims = op.dims(g.name)
+        gp = ligo_params["groups"][g.name]
+        p["groups"][g.name] = _identity_cores(
+            dims, s_i=gp["W_I"], s_o=gp["W_O"], s_l=gp["W_L"])
+    return p
+
+
+def init_stackbert_params(op: mango.MangoOperator):
+    """Width-preserving depth stacking (requires d1 == d2)."""
+    d1, d2 = op.plan_src.d_model, op.plan_tgt.d_model
+    assert d1 == d2, "StackBERT only grows depth"
+    p = {"groups": {}, "aux": {}}
+    eye = jnp.eye(d1)
+    for g in op.plan_src.groups:
+        dims = op.dims(g.name)
+        lm = layer_map_stack(dims["L1"], dims["L2"])
+        p["groups"][g.name] = _identity_cores(dims, s_i=eye, s_o=eye, s_l=lm)
+        p["aux"][f"{g.name}.layers"] = lm
+    p["aux"]["width"] = {f"{d1}->{d2}": eye}
+    return p

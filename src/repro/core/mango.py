@@ -1,0 +1,301 @@
+"""Mango: the multi-linear (TR-MPO) full-mapping growth operator (Eq. 5/6).
+
+The full mapping tensor S ∈ R^{B1×I1×O1×L1×B2×I2×O2×L2} is decomposed into
+four ring-bonded cores
+
+    S_B (R1,B1,B2,R2)  S_O (R2,O1,O2,R3)  S_L (R3,L1,L2,R4)  S_I (R4,I1,I2,R1)
+
+and the growth M2 = M1 ×_S is evaluated as a chain of mode products (never
+materializing S):
+
+    T1[iolp,B,q] = Σ_b  M1[b,i,o,l]  S_B[p,b,B,q]
+    T2[il,pB,r,O] = Σ_{o,q} T1 S_O
+    T3[i,pB,O,s,L] = Σ_{l,r} T2 S_L
+    M2[B,I,O,L]  = Σ_{i,p,s} T3 S_I
+
+Every intermediate is ≤ R² × |M2| (paper uses rank 1), and each step is a
+plain matmul — MXU-shaped.  FLOPs of the chain are reported by
+``contract_flops`` for the grow-step roofline.
+
+Structured init: the rank-0 component of the cores reproduces a
+function-preserving-style expansion (Net2Net width duplication on S_I/S_O,
+modular layer copy on S_L, identity on S_B) so operator training (Eq. 7)
+starts from a sane growth instead of noise; remaining rank components start
+near zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.models import get_family
+
+
+# ------------------------------------------------------------ core tensors
+def width_expand_matrix(d1, d2, rng=None, normalized=True):
+    """Net2Net-style (d1, d2) expansion: col j2 copies col (j2 % d1);
+    duplicated source columns are split (divided by multiplicity) so that
+    compositions approximately preserve function."""
+    idx = np.arange(d2) % d1
+    mat = np.zeros((d1, d2), np.float32)
+    counts = np.bincount(idx, minlength=d1).astype(np.float32)
+    for j2, j1 in enumerate(idx):
+        mat[j1, j2] = 1.0 / counts[j1] if normalized else 1.0
+    return jnp.asarray(mat)
+
+
+def layer_map_matrix(l1, l2):
+    """(l1, l2): target layer copies source layer (interleaved stacking)."""
+    mat = np.zeros((l1, l2), np.float32)
+    for j in range(l2):
+        mat[int(j * l1 / l2), j] = 1.0
+    return jnp.asarray(mat)
+
+
+def init_cores(rng, dims, rank, noise=0.01, structured=True):
+    """dims: dict with B1,B2,I1,I2,O1,O2,L1,L2. rank: int or 4-tuple."""
+    if isinstance(rank, int):
+        rank = (rank,) * 4
+    R1, R2, R3, R4 = rank
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+
+    def core(key, r_in, a, b, r_out, base):
+        c = noise * jax.random.normal(key, (r_in, a, b, r_out), jnp.float32)
+        if structured:
+            c = c.at[0, :, :, 0].add(base)
+        return c
+
+    sb = core(k1, R1, dims["B1"], dims["B2"], R2,
+              jnp.eye(dims["B1"], dims["B2"]))
+    so = core(k2, R2, dims["O1"], dims["O2"], R3,
+              width_expand_matrix(dims["O1"], dims["O2"], normalized=False))
+    sl = core(k3, R3, dims["L1"], dims["L2"], R4,
+              layer_map_matrix(dims["L1"], dims["L2"]))
+    si = core(k4, R4, dims["I1"], dims["I2"], R1,
+              width_expand_matrix(dims["I1"], dims["I2"], normalized=True))
+    return {"S_B": sb, "S_O": so, "S_L": sl, "S_I": si}
+
+
+def contract(M1, cores):
+    """M1 (B1,I1,O1,L1) x cores -> M2 (B2,I2,O2,L2).
+
+    Sharding: intermediates keep the source I mode on the data axis and the
+    (growing) O mode on the model axis, so M2 is *born* in the target
+    model's FSDP+TP layout — it is never replicated (the §Perf fix that
+    took the grow-step cell from 61 GiB temp to fitting; see
+    EXPERIMENTS.md).
+    """
+    from repro.distributed.sharding import annotate
+
+    sb, so, sl, si = (cores[k] for k in ("S_B", "S_O", "S_L", "S_I"))
+    t = jnp.einsum("biol,pbcq->iolpcq", M1, sb)
+    t = annotate(t, ("grow_in", "grow_out", None, None, None, None))
+    t = jnp.einsum("iolpcq,qomr->ilpcrm", t, so)
+    t = annotate(t, ("grow_in", None, None, None, None, "grow_out"))
+    t = jnp.einsum("ilpcrm,rlns->ipcmsn", t, sl)
+    t = annotate(t, ("grow_in", None, None, "grow_out", None, None))
+    M2 = jnp.einsum("ipcmsn,sijp->cjmn", t, si)
+    M2 = annotate(M2, (None, "grow_in", "grow_out", None))
+    return M2  # (B2, I2, O2, L2)
+
+
+def contract_reference(M1, cores):
+    """Single 8-index einsum straight from Eq. 6 (oracle for tests)."""
+    return jnp.einsum(
+        "biol,pbcq,qomr,rlns,sijp->cjmn",
+        M1, cores["S_B"], cores["S_O"], cores["S_L"], cores["S_I"],
+        optimize=True)
+
+
+def contract_flops(dims, rank):
+    """Total multiply-add FLOPs (x2) of the 4-step chain."""
+    if isinstance(rank, int):
+        rank = (rank,) * 4
+    R1, R2, R3, R4 = rank
+    B1, B2 = dims["B1"], dims["B2"]
+    I1, I2 = dims["I1"], dims["I2"]
+    O1, O2 = dims["O1"], dims["O2"]
+    L1, L2 = dims["L1"], dims["L2"]
+    f = 0
+    f += B1 * I1 * O1 * L1 * R1 * B2 * R2          # step 1
+    f += I1 * O1 * L1 * R1 * B2 * R2 * O2 * R3     # step 2
+    f += I1 * L1 * R1 * B2 * O2 * R3 * L2 * R4     # step 3
+    f += I1 * R1 * B2 * O2 * L2 * R4 * I2          # step 4
+    return 2 * f
+
+
+# ------------------------------------------------------- the full operator
+@dataclasses.dataclass(frozen=True)
+class MangoOperator:
+    """Static description of a growth  M(cfg_src) -> M(cfg_tgt)."""
+    cfg_src: Any
+    cfg_tgt: Any
+    plan_src: packing.Plan
+    plan_tgt: packing.Plan
+    rank: Any = 1
+    trainable: bool = True  # False: frozen structured init (ablations)
+
+    def dims(self, gname):
+        gs = {g.name: g for g in self.plan_src.groups}[gname]
+        gt = {g.name: g for g in self.plan_tgt.groups}[gname]
+        assert len(gs.slots) == len(gt.slots), (
+            f"slot mismatch in {gname}: {len(gs.slots)} vs {len(gt.slots)}")
+        return {
+            "B1": len(gs.slots), "B2": len(gt.slots),
+            "I1": self.plan_src.d_model, "I2": self.plan_tgt.d_model,
+            "O1": self.plan_src.d_model, "O2": self.plan_tgt.d_model,
+            "L1": gs.n_layers, "L2": gt.n_layers,
+        }
+
+
+def build_operator(cfg_src, cfg_tgt, rank=1) -> MangoOperator:
+    fam_s, fam_t = get_family(cfg_src), get_family(cfg_tgt)
+    assert cfg_src.family == cfg_tgt.family
+    shapes_src = jax.eval_shape(lambda: fam_s.init(jax.random.PRNGKey(0),
+                                                   cfg_src))
+    shapes_tgt = jax.eval_shape(lambda: fam_t.init(jax.random.PRNGKey(0),
+                                                   cfg_tgt))
+    plan_src = packing.build_plan(cfg_src, shapes_src)
+    plan_tgt = packing.build_plan(cfg_tgt, shapes_tgt)
+    return MangoOperator(cfg_src, cfg_tgt, plan_src, plan_tgt, rank)
+
+
+def init_operator_params(rng, op: MangoOperator, noise=0.01):
+    """Trainable params: per-group TR cores + aux vector/width operators."""
+    keys = jax.random.split(rng, 2 + 2 * len(op.plan_src.groups))
+    ki = iter(keys)
+    p: Dict[str, Any] = {"groups": {}, "aux": {}}
+    for g_src, g_tgt in zip(op.plan_src.groups, op.plan_tgt.groups):
+        dims = op.dims(g_src.name)
+        p["groups"][g_src.name] = init_cores(next(ki), dims, op.rank,
+                                             noise=noise)
+        # aux layer-mix for per-layer vectors of this group
+        p["aux"][f"{g_src.name}.layers"] = layer_map_matrix(
+            g_src.n_layers, g_tgt.n_layers)
+    # width matrices, one per distinct (d1 -> d2) pair encountered.
+    # duplication (not split) is the function-preserving choice for
+    # embeddings/norm scales: downstream consumers see duplicated features.
+    p["aux"]["width"] = {}
+    d1, d2 = op.plan_src.d_model, op.plan_tgt.d_model
+    p["aux"]["width"][f"{d1}->{d2}"] = width_expand_matrix(
+        d1, d2, normalized=False)
+    return p
+
+
+def _grow_vector_stack(vec1, layer_mat, width_mats, d1, d2, tgt_shape):
+    """(L1, n1) -> (L2, n2): layer mix then width expansion on last axis."""
+    L2, n2 = tgt_shape
+    v = jnp.einsum("ln,lm->mn", vec1.astype(jnp.float32), layer_mat)
+    n1 = v.shape[-1]
+    if n1 != n2:
+        w = _width_for(width_mats, n1, n2, d1, d2)
+        v = v @ w
+    return v
+
+
+def _width_for(width_mats, n1, n2, d1, d2):
+    """Width matrix for an (n1 -> n2) axis, derived from the trainable
+    (d1 -> d2) matrix when the axis is a multiple of d_model, else a fixed
+    Net2Net map (cheap, non-trainable — e.g. odd head_dim paddings)."""
+    key = f"{n1}->{n2}"
+    if key in width_mats:
+        return width_mats[key]
+    base = width_mats[f"{d1}->{d2}"]
+    if n1 == d1 and n2 == d2:
+        return base
+    if n1 % d1 == 0 and n2 % d2 == 0 and n1 // d1 == n2 // d2:
+        k = n1 // d1
+        return jax.scipy.linalg.block_diag(*([base] * k))
+    return width_expand_matrix(n1, n2)
+
+
+def grow(op: MangoOperator, op_params, params_src, dtype=None):
+    """Differentiable growth: source params -> target params."""
+    fam_t = get_family(op.cfg_tgt)
+    shapes_tgt = jax.eval_shape(
+        lambda: fam_t.init(jax.random.PRNGKey(0), op.cfg_tgt))
+    dtype = dtype or jnp.dtype(op.cfg_tgt.param_dtype)
+    d1, d2 = op.plan_src.d_model, op.plan_tgt.d_model
+    width_mats = op_params["aux"]["width"]
+    out: Dict[str, Any] = {}
+
+    for g_src, g_tgt in zip(op.plan_src.groups, op.plan_tgt.groups):
+        gname = g_src.name
+        M1 = packing.pack_group(
+            g_src, params_src[gname], d1,
+            dtype=jnp.dtype(op.cfg_src.param_dtype))
+        M2 = contract(M1, op_params["groups"][gname]).astype(dtype)
+        grown = packing.unpack_group(g_tgt, M2, shapes_tgt[gname], d2)
+        # per-layer vectors via aux ops
+        lmat = op_params["aux"][f"{gname}.layers"]
+        for v in g_src.vectors:
+            leaf1 = packing._get(params_src[gname], v.path)
+            tgt_shape = tuple(packing._get(shapes_tgt[gname], v.path).shape)
+            grown[v.path] = _grow_vector_stack(
+                leaf1, lmat, width_mats, d1, d2, tgt_shape)
+        out[gname] = _unflatten_group(grown)
+
+    # global leaves: every mismatched axis expanded by a width matrix
+    for wref in op.plan_tgt.widths:
+        leaf1 = packing._get(params_src, wref.path)
+        tgt_shape = tuple(packing._get(shapes_tgt, wref.path).shape)
+        x = leaf1.astype(jnp.float32)
+        for ax, (n1, n2) in enumerate(zip(leaf1.shape, tgt_shape)):
+            if n1 != n2:
+                x = jnp.moveaxis(
+                    jnp.moveaxis(x, ax, -1) @ _width_for(
+                        width_mats, n1, n2, d1, d2), -1, ax)
+        _nested_set(out, wref.path, x)
+    # any leaves not covered (e.g. same-shape scalars) copied through
+    _copy_missing(out, params_src, shapes_tgt)
+    return jax.tree.map(lambda a, s: a.astype(dtype).reshape(s.shape),
+                        out, _as_tree_template(out, shapes_tgt))
+
+
+def _unflatten_group(flat: Dict[str, Any]):
+    tree: Dict[str, Any] = {}
+    for path, val in flat.items():
+        parts = path.split(".")
+        node = tree
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def _nested_set(tree, path, val):
+    parts = path.split(".")
+    node = tree
+    for part in parts[:-1]:
+        node = node.setdefault(part, {})
+    node[parts[-1]] = val
+
+
+def _copy_missing(out, params_src, shapes_tgt):
+    flat_t, _ = jax.tree_util.tree_flatten_with_path(shapes_tgt)
+    for p, leaf in flat_t:
+        path = packing.path_str(p)
+        try:
+            packing._get(out, path)
+        except (KeyError, TypeError):
+            src = packing._get(params_src, path)
+            assert tuple(src.shape) == tuple(leaf.shape), \
+                f"uncovered leaf {path}: {src.shape} vs {leaf.shape}"
+            _nested_set(out, path, src)
+
+
+def _as_tree_template(out, shapes_tgt):
+    """shapes_tgt re-ordered to match out's structure."""
+    def pick(path):
+        return packing._get(shapes_tgt, path)
+    flat, _ = jax.tree_util.tree_flatten_with_path(out)
+    tmpl = {}
+    for p, _leaf in flat:
+        path = packing.path_str(p)
+        _nested_set(tmpl, path, pick(path))
+    return tmpl

@@ -1,0 +1,256 @@
+"""Packing: model params  <->  Mango weight tensor  M ∈ (B, I, O, L).
+
+The paper concatenates a vanilla transformer layer's {W^Q, W^K, W^V, W^O,
+W^IN, W^OUT} into B = 2k+4 slots of (D × D) tiles (Fig. 4).  The assigned
+architectures are not vanilla (GQA, MLA low-rank factors, MoE experts,
+RG-LRU gates, mLSTM projections), so we generalize:
+
+ * every per-layer *matrix* leaf (L, a, b) is cut into ceil(a/D) x ceil(b/D)
+   zero-padded (D x D) tiles — each tile is one B-slot; for a vanilla block
+   this reduces exactly to the paper's 2k+4 layout;
+ * 4-D expert leaves (L, E, a, b) contribute E x tiles slots — expert-expert
+   interaction lands in the S_B mode (same-layer correlation, which is
+   precisely what S_B models);
+ * block-diagonal leaves (L, H, w, w) are embedded as one dense (HW x HW)
+   block-diagonal tile (the true linear map), blocks re-extracted after
+   growth;
+ * per-layer vectors (norm scales, biases, conv taps) are grown by a small
+   auxiliary operator (layer-mix matrix + width matrix) — the LiGO-style
+   treatment, since a rank-anything S-mapping of a vector degenerates;
+ * global leaves (embeddings, lm head, positional embeddings) are grown on
+   their width axis by shared trainable width matrices.
+
+Slot identity between source and target models is structural: both models
+are walked in the same sorted-leaf order and must produce identical slot
+counts (asserted), which holds whenever both configs are the same family
+with proportionally scaled dims — the paper's setting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import path_str
+
+# params groups that hold per-layer stacked weights, per family
+BLOCK_GROUPS = ("dense_blocks", "moe_blocks", "rec_blocks", "attn_blocks",
+                "m_blocks", "s_blocks")
+# leaves excluded from matrix packing (semantic: routers map to expert ids,
+# not a spatial axis; grown as vectors along their embed axis instead)
+VECTOR_LIKE_MIN = 8  # matrices smaller than this on any side -> vectors
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotRef:
+    path: str          # leaf path inside the group subtree
+    kind: str          # "matrix" | "expert" | "blockdiag"
+    leaf_shape: Tuple[int, ...]
+    ti: int            # tile row index (input axis)
+    tj: int            # tile col index (output axis)
+    expert: int = -1   # expert index for 4-D leaves / head for blockdiag
+
+
+@dataclasses.dataclass(frozen=True)
+class VecRef:
+    path: str
+    leaf_shape: Tuple[int, ...]
+    tap: int = -1      # for (L, K, W) leaves: tap index
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    name: str
+    n_layers: int
+    slots: Tuple[SlotRef, ...]
+    vectors: Tuple[VecRef, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class WidthRef:
+    path: str          # top-level leaf path
+    axis: int          # axis carrying d_model
+    leaf_shape: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    d_model: int
+    groups: Tuple[GroupPlan, ...]
+    widths: Tuple[WidthRef, ...]
+
+    @property
+    def n_slots(self):
+        return {g.name: len(g.slots) for g in self.groups}
+
+
+def _leaves(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return sorted(((path_str(p), l) for p, l in flat), key=lambda t: t[0])
+
+
+def _n_tiles(dim, d):
+    return max(1, math.ceil(dim / d))
+
+
+def build_plan(cfg, shapes) -> Plan:
+    """shapes: pytree of ShapeDtypeStructs (jax.eval_shape of init)."""
+    D = cfg.d_model
+    groups: List[GroupPlan] = []
+    widths: List[WidthRef] = []
+
+    for gname in BLOCK_GROUPS:
+        if gname not in shapes:
+            continue
+        sub = shapes[gname]
+        slots: List[SlotRef] = []
+        vecs: List[VecRef] = []
+        n_layers = None
+        for path, leaf in _leaves(sub):
+            shp = tuple(leaf.shape)
+            if n_layers is None:
+                n_layers = shp[0]
+            assert shp[0] == n_layers, (path, shp, n_layers)
+            if len(shp) == 2:
+                vecs.append(VecRef(path, shp))
+            elif len(shp) == 3:
+                _, a, b = shp
+                # NOTE: small/semantic axes (conv taps, router expert dim,
+                # per-head gate outputs) are packed as zero-padded tiles too —
+                # the structured core init is identity on the valid region, so
+                # they start out preserved and the operator may learn to mix
+                # them (the full-mapping philosophy).
+                for ti in range(_n_tiles(a, D)):
+                    for tj in range(_n_tiles(b, D)):
+                        slots.append(SlotRef(path, "matrix", shp, ti, tj))
+            elif len(shp) == 4:
+                _, e, a, b = shp
+                if a == b and a * e <= 4 * D and a < D:
+                    # block-diagonal gate (L, H, w, w): one dense tile
+                    nt = _n_tiles(a * e, D)
+                    for ti in range(nt):
+                        for tj in range(nt):
+                            slots.append(
+                                SlotRef(path, "blockdiag", shp, ti, tj))
+                else:
+                    for ex in range(e):
+                        for ti in range(_n_tiles(a, D)):
+                            for tj in range(_n_tiles(b, D)):
+                                slots.append(
+                                    SlotRef(path, "expert", shp, ti, tj, ex))
+            else:
+                raise ValueError(f"unsupported leaf rank: {path} {shp}")
+        groups.append(GroupPlan(gname, n_layers, tuple(slots), tuple(vecs)))
+
+    for path, leaf in _leaves(
+            {k: v for k, v in shapes.items() if k not in BLOCK_GROUPS}):
+        shp = tuple(leaf.shape)
+        widths.append(WidthRef(path, -1, shp))
+
+    return Plan(D, tuple(groups), tuple(widths))
+
+
+def _get(tree, path):
+    node = tree
+    for part in path.split("."):
+        node = node[int(part) if part.isdigit() else part]
+    return node
+
+
+def _set(tree, path, val):
+    parts = path.split(".")
+    node = tree
+    for part in parts[:-1]:
+        node = node[int(part) if part.isdigit() else part]
+    node[parts[-1]] = val
+
+
+def _to_blockdiag(w):
+    """(L, H, a, a) -> (L, H*a, H*a) dense block diagonal."""
+    L, H, a, _ = w.shape
+    eye = jnp.eye(H, dtype=w.dtype)
+    return (eye[None, :, None, :, None] *
+            w[:, :, :, None, :]).reshape(L, H * a, H * a)
+
+
+def _from_blockdiag(m, H, a):
+    """(L, H*a, H*a) -> (L, H, a, a) extracting diagonal blocks."""
+    L = m.shape[0]
+    blocks = m.reshape(L, H, a, H, a)
+    return blocks[:, jnp.arange(H), :, jnp.arange(H), :].transpose(
+        1, 0, 2, 3)
+
+
+def pack_group(group: GroupPlan, params_group, d_model: int,
+               dtype=jnp.float32):
+    """-> M (B, D, D, L) in ``dtype`` (bf16 halves the packed-stack HBM at
+    growth time; the contraction still accumulates per-einsum in f32)."""
+    D = d_model
+    tiles = []
+    bd_cache = {}
+    for s in group.slots:
+        w = _get(params_group, s.path)
+        if s.kind == "blockdiag":
+            if s.path not in bd_cache:
+                bd_cache[s.path] = _to_blockdiag(w)
+            w2 = bd_cache[s.path]  # (L, Ha, Ha)
+        elif s.kind == "expert":
+            w2 = w[:, s.expert]
+        else:
+            w2 = w
+        a, b = w2.shape[1], w2.shape[2]
+        i0, j0 = s.ti * D, s.tj * D
+        tile = w2[:, i0:i0 + D, j0:j0 + D]
+        pad = ((0, 0), (0, D - tile.shape[1]), (0, D - tile.shape[2]))
+        tile = jnp.pad(tile, pad) if (tile.shape[1] < D or
+                                      tile.shape[2] < D) else tile
+        tiles.append(tile.astype(dtype))
+    # (B, L, D, D) -> (B, D, D, L)
+    M = jnp.stack(tiles, 0).transpose(0, 2, 3, 1)
+    from repro.distributed.sharding import annotate
+    return annotate(M, ("stack", "grow_in", "grow_out", None))
+
+
+def unpack_group(group: GroupPlan, M2, target_group_shapes, d_model: int):
+    """M2 (B, D2, D2, L2) -> dict of target-group matrix leaves."""
+    D = d_model
+    out = {}
+    # gather slots per path
+    per_path = {}
+    for b_idx, s in enumerate(group.slots):
+        per_path.setdefault(s.path, []).append((b_idx, s))
+    for path, entries in per_path.items():
+        shp = tuple(_get(target_group_shapes, path).shape)
+        kind = entries[0][1].kind
+        if kind == "blockdiag":
+            L, H, a, _ = shp
+            nt = _n_tiles(a * H, D)
+            full = jnp.zeros((L, nt * D, nt * D), M2.dtype)
+            for b_idx, s in entries:
+                tile = M2[b_idx].transpose(2, 0, 1)  # (L2, D2, D2)
+                full = jax.lax.dynamic_update_slice(
+                    full, tile, (0, s.ti * D, s.tj * D))
+            out[path] = _from_blockdiag(full[:, :a * H, :a * H], H, a)
+        elif kind == "expert":
+            L, E, a, b = shp
+            nt_i, nt_j = _n_tiles(a, D), _n_tiles(b, D)
+            full = jnp.zeros((L, E, nt_i * D, nt_j * D), M2.dtype)
+            for b_idx, s in entries:
+                tile = M2[b_idx].transpose(2, 0, 1)
+                full = jax.lax.dynamic_update_slice(
+                    full, tile[:, None], (0, s.expert, s.ti * D, s.tj * D))
+            out[path] = full[:, :, :a, :b]
+        else:
+            L, a, b = shp
+            nt_i, nt_j = _n_tiles(a, D), _n_tiles(b, D)
+            full = jnp.zeros((L, nt_i * D, nt_j * D), M2.dtype)
+            for b_idx, s in entries:
+                tile = M2[b_idx].transpose(2, 0, 1)
+                full = jax.lax.dynamic_update_slice(
+                    full, tile, (0, s.ti * D, s.tj * D))
+            out[path] = full[:, :a, :b]
+    return out

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (
+    lm_batch,
+    lm_data_iter,
+    vision_batch,
+    frames_batch,
+)

@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (
+    LOGICAL_RULES_SINGLE_POD,
+    LOGICAL_RULES_MULTI_POD,
+    logical_to_spec,
+    sharding_rules_for_mesh,
+    annotate,
+    use_rules,
+    params_shardings,
+    named_sharding_tree,
+)

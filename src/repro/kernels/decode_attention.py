@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: flash-decode (one query token vs a long KV cache).
+
+Decode attention is memory-bound: the whole KV cache streams through VMEM
+once per step.  Grid (B, KV, Sk/BK) with the cache axis innermost; a running
+(m, l, acc) per (batch, kv-head) lives in VMEM scratch — all G query heads
+of a kv group are processed together as a (G, hd) tile so the cache block is
+read exactly once per group (the GQA bandwidth win).
+
+``kv_len`` masks the unwritten cache tail (padded caches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bk, scale):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+
+    @pl.when(ki * bk < kv_len)
+    def _body():
+        q = q_ref[0, 0]  # (G, hd)
+        k = k_ref[0, 0]  # (BK, hd)
+        v = v_ref[0, 0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = ki * bk + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q, k, v, kv_len, *, bk=256, interpret=False):
+    """q: (B, H, hd); k, v: (B, KV, S, hd); kv_len: scalar -> (B, H, hd)."""
+    B, H, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    assert S % bk == 0, (S, bk)
+    qg = q.reshape(B, KV, g, hd)
+    scale = hd ** -0.5
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    grid = (B, KV, S // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bk, hd),
+                             lambda b, h, j, *_: (b, h, j, 0)),
+                pl.BlockSpec((1, 1, bk, hd),
+                             lambda b, h, j, *_: (b, h, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda b, h, j, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, hd), q.dtype),
+        interpret=interpret,
+    )(kv_len, qg, k, v)
+    return out.reshape(B, H, hd)

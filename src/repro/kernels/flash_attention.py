@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: causal flash attention (prefill), GQA-aware.
+
+Online-softmax schedule (FlashAttention-2): grid (B, H, Sq/BQ, Sk/BK) with
+the KV axis innermost; running (m, l, acc) persist in VMEM scratch across KV
+iterations for a fixed query block, so logits never exist in HBM.  Causal
+blocks beyond the diagonal are skipped with ``pl.when`` (the dry-run's jnp
+chunked path pays the 2x masked-compute tax; this kernel does not — that
+delta is part of the §Perf story).
+
+GQA: the kv-head index of q-head h is h // (H // KV), mapped in the
+BlockSpec index map — repeated KV heads are never materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq, bk, scale, causal):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        run = ki * bk <= qi * bq + bq - 1  # any kv pos <= any q pos
+
+    @pl.when(run if causal else True)
+    def _body():
+        q = q_ref[0, 0]  # (BQ, hd)
+        k = k_ref[0, 0]  # (BK, hd)
+        v = v_ref[0, 0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128,
+                    interpret=False):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    g = H // KV
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = hd ** -0.5
+
+    grid = (B, H, S // bq, S // bk)
+    kern = functools.partial(_kernel, bq=bq, bk=bk, scale=scale,
+                             causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),  # output acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

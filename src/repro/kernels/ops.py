@@ -1,0 +1,52 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+TPU is the TARGET; this container is CPU-only, so ``interpret=True`` (the
+Pallas CPU interpreter) validates kernel-body semantics and the jnp refs in
+``ref.py`` serve as oracles.  On a real TPU deployment these wrappers run
+compiled (interpret=False) — callers select via ``mode``:
+
+  mode="auto"      — compiled on TPU backends, interpret elsewhere
+  mode="interpret" — force the interpreter (tests)
+  mode="reference" — the jnp oracle (lowering/dry-run path)
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+from repro.kernels.tr_sandwich import tr_sandwich as _sandwich
+
+
+def _interp(mode: str) -> bool:
+    if mode == "interpret":
+        return True
+    if mode == "auto":
+        return jax.default_backend() != "tpu"
+    raise ValueError(mode)
+
+
+def tr_sandwich(x, a_i, a_o, *, mode="auto", **kw):
+    if mode == "reference":
+        return ref.tr_sandwich_ref(x, a_i, a_o)
+    return _sandwich(x, a_i, a_o, interpret=_interp(mode), **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, mode="auto", **kw):
+    if mode == "reference":
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash(q, k, v, causal=causal, interpret=_interp(mode), **kw)
+
+
+def decode_attention(q, k, v, kv_len, *, mode="auto", **kw):
+    if mode == "reference":
+        return ref.decode_attention_ref(q, k, v, kv_len)
+    return _decode(q, k, v, kv_len, interpret=_interp(mode), **kw)
+
+
+def rglru_scan(a, b, h0=None, *, mode="auto", **kw):
+    if mode == "reference":
+        return ref.rglru_scan_ref(a, b, h0)
+    return _rglru(a, b, h0, interpret=_interp(mode), **kw)

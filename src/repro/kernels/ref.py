@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tr_sandwich_ref(x, a_i, a_o):
+    """Mango fused I/O mode product: Y[n] = A_I^T @ X[n] @ A_O.
+
+    x: (N, D1i, D1o); a_i: (D1i, D2i); a_o: (D1o, D2o) -> (N, D2i, D2o).
+    """
+    return jnp.einsum("nio,ij,ok->njk", x.astype(jnp.float32),
+                      a_i.astype(jnp.float32),
+                      a_o.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgqh,bksh->bkgqs", qg,
+                        k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", p, v.astype(jnp.float32))
+    return out.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B, H, hd); k, v: (B, KV, S, hd); kv_len: int -> (B, H, hd)."""
+    B, H, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgh,bksh->bkgs", qg,
+                        k.astype(jnp.float32)) * hd ** -0.5
+    mask = jnp.arange(k.shape[2]) < kv_len
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (B, S, W) f32; h0: (B, W) or None -> h: (B, S, W).
+    """
+    if h0 is None:
+        h0 = jnp.zeros(a[:, 0].shape, jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (a.transpose(1, 0, 2).astype(jnp.float32),
+                          b.transpose(1, 0, 2).astype(jnp.float32)))
+    return hs.transpose(1, 0, 2).astype(a.dtype)

@@ -1,0 +1,543 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, and the production meshes need 512
+placeholder host devices.  Never set this flag globally (tests and benches
+must see 1 device).
+
+For every cell we record, into results/dryrun/<cell>.json:
+  * per-device memory stats (argument/output/temp/generated code)
+  * cost_analysis flops + bytes accessed (per device)
+  * collective wire bytes parsed from the post-SPMD HLO
+  * lowering/compile wall times
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import SHAPES, get_config  # noqa: E402
+from repro.configs.archs import ARCH_IDS  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    logical_to_spec,
+    params_shardings,
+    sharding_rules_for_mesh,
+    use_rules,
+    zero_shardings,
+)
+from repro.launch import specs as specs_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import get_family  # noqa: E402
+from repro.optim import OptimizerConfig, make_optimizer  # noqa: E402
+from repro.train.steps import (  # noqa: E402
+    make_decode_step,
+    make_grow_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# --- cell skip rules (documented in DESIGN.md §Arch-applicability) --------
+FULL_ATTENTION = {"phi3.5-moe-42b", "deepseek-v3-671b", "stablelm-3b",
+                  "qwen1.5-0.5b", "qwen3-0.6b", "yi-9b", "qwen2-vl-72b"}
+ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def cell_skip_reason(arch: str, shape: str):
+    if shape in ("decode_32k", "long_500k") and arch in ENCODER_ONLY:
+        return "encoder-only arch has no decode step"
+    if shape == "long_500k" and arch in FULL_ATTENTION:
+        return "long_500k needs sub-quadratic attention (pure full-attn arch)"
+    return None
+
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\(?)([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+# wire-bytes factor per collective (ring algorithms, large-N limit)
+WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum wire bytes over collectives in post-SPMD HLO (per device)."""
+    totals = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        _, dt, dims, op, suffix = m.groups()
+        if suffix == "-done":  # -start carries the shape; skip the done
+            continue
+        nbytes = DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        totals[op] = totals.get(op, 0.0) + n * nbytes * WIRE_FACTOR[op]
+    return totals
+
+
+def _opt_cfg(clip=1.0):
+    return OptimizerConfig(lr=1e-4, moment_dtype="bfloat16",
+                           master_weights=True, clip_norm=clip)
+
+
+def build_cell(arch: str, shape_name: str, mesh, fsdp=True,
+               n_microbatches=None, variant="baseline"):
+    """-> (fn, arg_specs, in_shardings, out_shardings, rules, donate).
+
+    ``variant``: "baseline" (pjit-automatic step) or "lazy" (manual ZeRO-3
+    lazy-sync step, train shapes only) — the §Perf comparison axis.
+    """
+    cfg = get_config(arch)
+    fam = get_family(cfg)
+    shp = SHAPES[shape_name] if shape_name in SHAPES else None
+    inference = shp is not None and shp.kind in ("prefill", "decode")
+    rules = sharding_rules_for_mesh(mesh, fsdp=fsdp and not inference,
+                                    inference=inference)
+
+    params_abs = specs_lib.params_specs_abstract(cfg)
+    p_specs = fam.param_specs(cfg)
+    p_shard = params_shardings(p_specs, mesh, rules, shapes=params_abs)
+    repl = NamedSharding(mesh, P())
+
+    def shard_of(logical_tree, abs_tree):
+        return jax.tree.map(
+            lambda lg, ab: NamedSharding(
+                mesh, logical_to_spec(lg, ab.shape, mesh, rules)),
+            logical_tree, abs_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    if shape_name.startswith("grow"):
+        return _build_grow_cell(arch, mesh, rules, fsdp) + (rules, (0, 1))
+
+    if shp.kind == "train":
+        if n_microbatches is None:
+            # auto: big models need microbatching to bound the per-layer
+            # activation stash (block remat saves one (B,S,D) per layer)
+            n_microbatches = 8 if cfg.d_model >= 4096 else 1
+        if variant == "lazy":
+            # distributed grad-norm clip is out of scope for the manual
+            # body; compared against a matched no-clip baseline in §Perf
+            from repro.train.lazy_sync import make_lazy_sync_train_step
+            opt_cfg = _opt_cfg(clip=None)
+            step = make_lazy_sync_train_step(
+                cfg, opt_cfg, mesh, p_shard,
+                n_microbatches=max(n_microbatches, 1))
+            init_fn, _ = make_optimizer(opt_cfg)
+            opt_abs = jax.eval_shape(init_fn, params_abs)
+            # lazy body assumes state layout == param layout
+            opt_shard = {"m": p_shard, "v": p_shard, "master": p_shard}
+        else:
+            if variant == "baseline-m8":
+                n_microbatches = 8
+            clip = None if variant.startswith("baseline-") else 1.0
+            step = make_train_step(cfg, _opt_cfg(clip),
+                                   n_microbatches=n_microbatches)
+            init_fn, _ = make_optimizer(_opt_cfg(clip))
+            opt_abs = jax.eval_shape(init_fn, params_abs)
+            zaxes = tuple(a for a in ("pod", "data")
+                          if a in mesh.axis_names)
+            zshard = zero_shardings(p_shard, params_abs, mesh,
+                                    zero_axes=zaxes)
+            opt_shard = {"m": zshard, "v": zshard, "master": zshard}
+        batch_abs = specs_lib.batch_specs(cfg, shp.global_batch, shp.seq_len)
+        batch_shard = shard_of(specs_lib.batch_logical(cfg), batch_abs)
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (params_abs, opt_abs, batch_abs, step_abs)
+        in_sh = (p_shard, opt_shard, batch_shard, repl)
+        out_sh = (p_shard, opt_shard, None)
+        return step, args, in_sh, out_sh, rules, (0, 1)
+
+    cache_len = shp.seq_len
+    cache_abs = specs_lib.cache_specs_abstract(cfg, shp.global_batch,
+                                               cache_len)
+    cache_shard = shard_of(specs_lib.cache_logical(cfg), cache_abs)
+
+    if shp.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        batch_abs = specs_lib.batch_specs(cfg, shp.global_batch, shp.seq_len)
+        batch_shard = shard_of(specs_lib.batch_logical(cfg), batch_abs)
+        args = (params_abs, batch_abs, cache_abs)
+        in_sh = (p_shard, batch_shard, cache_shard)
+        out_sh = (None, cache_shard)
+        return fn, args, in_sh, out_sh, rules, (2,)
+
+    # decode: one new token against a seq_len cache
+    fn = make_decode_step(cfg)
+    tok_abs = jax.ShapeDtypeStruct((shp.global_batch,), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_shard = NamedSharding(
+        mesh, logical_to_spec(("batch",), (shp.global_batch,), mesh, rules))
+    args = (params_abs, tok_abs, pos_abs, cache_abs)
+    in_sh = (p_shard, tok_shard, repl, cache_shard)
+    out_sh = (tok_shard, cache_shard)
+    return fn, args, in_sh, out_sh, rules, (3,)
+
+
+def _build_grow_cell(arch, mesh, rules, fsdp):
+    """Mango operator-training step at scale (the paper's technique)."""
+    from repro.core import grow as growlib
+
+    cfg_tgt = get_config(arch)
+    cfg_src = get_config(f"{arch}-half")
+    fam_t = get_family(cfg_tgt)
+    gop, op_params0 = growlib.build("mango", cfg_src, cfg_tgt, rank=1)
+    op_abs = jax.eval_shape(lambda: op_params0)
+    step = make_grow_step(gop, cfg_tgt, _opt_cfg(), n_microbatches=8)
+    init_fn, _ = make_optimizer(_opt_cfg())
+    opt_abs = jax.eval_shape(init_fn, op_abs)
+
+    fam_s = get_family(cfg_src)
+    small_abs = specs_lib.params_specs_abstract(cfg_src)
+    small_shard = params_shardings(fam_s.param_specs(cfg_src), mesh, rules,
+                                   shapes=small_abs)
+    repl = NamedSharding(mesh, P())
+    op_shard = jax.tree.map(lambda _: repl, op_abs)
+    opt_shard = jax.tree.map(lambda _: repl, opt_abs)
+    shp = SHAPES["train_4k"]
+    batch_abs = specs_lib.batch_specs(cfg_tgt, shp.global_batch, shp.seq_len)
+    batch_shard = jax.tree.map(
+        lambda ab: NamedSharding(
+            mesh, logical_to_spec(("batch", "seq"), ab.shape, mesh, rules)),
+        {"tokens": batch_abs["tokens"]})
+    step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (op_abs, opt_abs, small_abs, {"tokens": batch_abs["tokens"]},
+            step_abs)
+    in_sh = (op_shard, opt_shard, small_shard, batch_shard, repl)
+    out_sh = (op_shard, opt_shard, None)
+    return step, args, in_sh, out_sh
+
+
+# ---------------------------------------------------------- cost calibration
+# XLA's cost_analysis() counts while-loop bodies ONCE (scan trip counts are
+# not multiplied in).  All layer stacks / attention chunk loops / microbatch
+# loops here are scans, so raw numbers are large under-counts.  We therefore
+# lower reduced-DEPTH variants of each cell at full width/batch with inner
+# chunk scans unrolled (cfg.unroll_scans) and a single microbatch, solve
+#     cost(L_a, L_b) = base + a*L_a + b*L_b
+# exactly, and extrapolate to the real depth.  The full-config compile is
+# still what proves sharding coherence and measures memory.
+
+def _depth_counts(cfg):
+    """-> (A, B): real per-type layer counts for the two block types."""
+    if cfg.family == "transformer":
+        nd = cfg.n_dense_layers
+        return nd, cfg.n_layers - nd
+    if cfg.family == "griffin":
+        from repro.models.griffin import block_pattern
+        pat = block_pattern(cfg)
+        nr = sum(1 for t in pat if t == "rec")
+        return nr, len(pat) - nr
+    if cfg.family == "xlstm":
+        from repro.models.xlstm import block_types
+        ts = block_types(cfg)
+        nm = sum(1 for t in ts if t == "m")
+        return nm, len(ts) - nm
+    raise ValueError(cfg.family)
+
+
+def _with_depth(cfg, a, b):
+    """Same-arch config with a blocks of type A and b of type B."""
+    kw = dict(unroll_scans=True)
+    if cfg.family == "transformer":
+        if cfg.moe:
+            return cfg.replace(n_layers=a + b, moe_layer_start=a, **kw)
+        return cfg.replace(n_layers=a, **kw)
+    if cfg.family == "griffin":
+        return cfg.replace(n_layers=a + b,
+                           block_pattern=("rec",) * a + ("attn",) * b, **kw)
+    if cfg.family == "xlstm":
+        return cfg.replace(n_layers=a + b,
+                           block_pattern=("m",) * a + ("s",) * b, **kw)
+    raise ValueError(cfg.family)
+
+
+def _calib_variants(cfg):
+    """[(a, b)] probe depths. 3 probes when both types exist, else 2."""
+    A, B = _depth_counts(cfg)
+    if A and B:
+        return [(1, 1), (2, 1), (1, 2)]
+    if A:
+        return [(1, 0), (2, 0)]
+    return [(0, 1), (0, 2)]
+
+
+def _slstm_flops_correction(cfg, batch, seq, train: bool):
+    """sLSTM's per-timestep scan cannot be unrolled (true recurrence);
+    analytic recurrence flops: R-gate matmul 2*B*S*NH*dh*4dh per layer,
+    x(2 fwd+bwd)(+1 remat) for training."""
+    if cfg.family != "xlstm":
+        return 0.0
+    from repro.models.xlstm import block_types
+    n_s = sum(1 for t in block_types(cfg) if t == "s")
+    if not n_s:
+        return 0.0
+    dh = cfg.d_model // cfg.n_heads
+    per_layer = 2.0 * batch * seq * cfg.n_heads * dh * 4 * dh
+    return n_s * per_layer * (4.0 if train else 1.0)
+
+
+def _measure_costs(arch, cfg_variant, shape_name, mesh, fsdp,
+                   variant="baseline"):
+    """Lower+compile one reduced variant, return (flops, bytes, colls)."""
+    import repro.configs.base as base_mod
+    key = f"__calib_{arch}_{id(cfg_variant)}"
+    base_mod._REGISTRY[key] = lambda: cfg_variant
+    try:
+        fn, args, in_sh, out_sh, rules, donate = build_cell(
+            key, shape_name, mesh, fsdp=fsdp,
+            n_microbatches=8 if variant in ("lazy", "baseline-m8") else 1,
+            variant=variant)
+        with mesh, use_rules(mesh, rules):
+            compiled = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        colls = collective_bytes(compiled.as_text())
+        return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
+                colls)
+    finally:
+        del base_mod._REGISTRY[key]
+
+
+def calibrate_cell(arch, shape_name, mesh, fsdp, variant="baseline"):
+    """-> dict with extrapolated per-device flops/bytes/collectives."""
+    cfg = get_config(arch)
+    A, B = _depth_counts(cfg)
+    probes = _calib_variants(cfg)
+    # xLSTM prefill: chunkwise-mLSTM cost is exactly linear in S at fixed
+    # chunk size (attention-free), but unrolling 32k/256 = 128 chunk bodies
+    # makes probe compiles pathological on this host — probe at a reduced
+    # sequence and scale linearly.
+    seq_scale = 1.0
+    probe_shape = shape_name
+    shp = SHAPES.get(shape_name)
+    if (cfg.family == "xlstm" and shp is not None
+            and shp.kind == "prefill" and shp.seq_len > 4096):
+        import dataclasses as _dc
+        short = _dc.replace(shp, name=f"{shape_name}_calib", seq_len=2048)
+        SHAPES[short.name] = short
+        probe_shape = short.name
+        seq_scale = shp.seq_len / short.seq_len
+    meas = []
+    for (a, b) in probes:
+        m = _measure_costs(
+            arch, _with_depth(cfg, a, b), probe_shape, mesh, fsdp,
+            variant=variant)
+        if seq_scale != 1.0:
+            m = (m[0] * seq_scale, m[1] * seq_scale,
+                 {k: v * seq_scale for k, v in m[2].items()})
+        meas.append(m)
+    if probe_shape != shape_name:
+        del SHAPES[probe_shape]
+
+    def solve(vals):
+        if len(probes) == 3:
+            c11, c21, c12 = vals
+            pa, pb = c21 - c11, c12 - c11
+            base = c11 - pa - pb
+        else:
+            c1, c2 = vals
+            per = c2 - c1
+            pa, pb = (per, 0.0) if probes[0][0] else (0.0, per)
+            base = c1 - per
+        return max(base, 0.0) + pa * A + pb * B
+
+    flops = solve([m[0] for m in meas])
+    nbytes = solve([m[1] for m in meas])
+    ops = set()
+    for m in meas:
+        ops.update(m[2])
+    colls = {op: solve([m[2].get(op, 0.0) for m in meas]) for op in ops}
+
+    shp = SHAPES.get(shape_name)
+    if shp is not None:
+        flops += _slstm_flops_correction(
+            cfg, shp.global_batch,
+            shp.seq_len if shp.kind != "decode" else 1,
+            shp.kind == "train") / mesh.devices.size
+    return {"flops_per_device": flops, "bytes_accessed_per_device": nbytes,
+            "collective_bytes_per_device": colls,
+            "raw_probes": [[list(p), list(m[:2])]
+                           for p, m in zip(probes, meas)]}
+
+
+def _resolve_variant_arch(arch, variant):
+    """Register a config override for non-structural variants and return
+    the registry key to use."""
+    if variant == "opt":
+        cfg = get_config(arch).replace(moe_dispatch_dtype="bfloat16",
+                                       attn_prefix_chunks=True)
+    elif variant == "remat-dots":
+        cfg = get_config(arch).replace(remat="dots")
+    else:
+        return arch
+    import repro.configs.base as base_mod
+    key = f"__{variant}_{arch}"
+    base_mod._REGISTRY[key] = (lambda c: (lambda: c))(cfg)
+    return key
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, fsdp=True,
+             save=True, keep_hlo=False, variant="baseline"):
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    skip = cell_skip_reason(arch, shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "fsdp": fsdp, "variant": variant}
+    if skip:
+        result["status"] = "skipped"
+        result["reason"] = skip
+        _save(result, save)
+        return result
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    run_arch = _resolve_variant_arch(arch, variant)
+    try:
+        t0 = time.time()
+        fn, args, in_sh, out_sh, rules, donate = build_cell(
+            run_arch, shape_name, mesh, fsdp=fsdp, variant=variant)
+        with mesh, use_rules(mesh, rules):
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        text = compiled.as_text()
+        colls = collective_bytes(text)
+        n_dev = mesh.devices.size
+        result.update({
+            "status": "ok",
+            "n_devices": int(n_dev),
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "raw_loopcounted_flops_per_device": cost.get("flops", 0.0),
+            "raw_loopcounted_bytes_per_device": cost.get(
+                "bytes accessed", 0.0),
+            "raw_loopcounted_collectives": colls,
+            "hlo_chars": len(text),
+        })
+        if keep_hlo:
+            result["hlo_path"] = _save_hlo(arch, shape_name, mesh_name, text)
+        del text, compiled, lowered
+        if shape_name in SHAPES:
+            t3 = time.time()
+            calib = calibrate_cell(run_arch, shape_name, mesh, fsdp,
+                                   variant=variant)
+            calib["calib_s"] = round(time.time() - t3, 2)
+            result.update(calib)
+        else:  # grow cells: contraction flops reported analytically
+            from repro.core import grow as growlib
+            from repro.core import mango as mango_lib
+            gop, _ = growlib.build("mango", get_config(f"{arch}-half"),
+                                   get_config(arch), rank=1)
+            result["analytic_contract_flops"] = sum(
+                mango_lib.contract_flops(gop.op.dims(g.name), 1)
+                for g in gop.op.plan_src.groups)
+    except Exception as e:  # record failures — they are bugs to fix
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    _save(result, save)
+    return result
+
+
+def _save(result, save):
+    if not save:
+        return
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "" if result.get("variant", "baseline") == "baseline" \
+        else f"__{result['variant']}"
+    name = (f"{result['arch']}__{result['shape']}__{result['mesh']}"
+            f"{suffix}.json")
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def _save_hlo(arch, shape, mesh_name, text):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}.hlo")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--grow", action="store_true",
+                    help="include the mango grow_step cells")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "baseline-noclip", "baseline-m8",
+                             "lazy", "opt", "remat-dots"])
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+    if args.grow:
+        cells.append(("yi-9b", "grow_4k"))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            r = run_cell(arch, shape, multi_pod=mp, fsdp=not args.no_fsdp,
+                         keep_hlo=args.keep_hlo, variant=args.variant)
+            tag = f"{arch} x {shape} x {r['mesh']}"
+            if r["status"] == "ok":
+                mem_gb = (r["memory"]["argument_bytes"]
+                          + r["memory"]["temp_bytes"]) / 2**30
+                print(f"[ok]   {tag}: compile {r['compile_s']}s, "
+                      f"{mem_gb:.2f} GiB/dev, "
+                      f"{r['flops_per_device']:.3e} flops/dev", flush=True)
+            elif r["status"] == "skipped":
+                print(f"[skip] {tag}: {r['reason']}", flush=True)
+            else:
+                failures += 1
+                print(f"[FAIL] {tag}: {r['error']}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

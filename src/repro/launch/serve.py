@@ -1,0 +1,66 @@
+"""Batched serving loop: prefill + greedy decode with KV/recurrent caches.
+
+Drives the same ``prefill``/``decode_step`` functions the dry-run lowers at
+production scale.  Usable as a library (examples) or CLI:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.synthetic import lm_batch
+from repro.models import get_family
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+def generate(cfg, params, prompt_tokens, *, max_new_tokens=16,
+             max_len=None):
+    """prompt_tokens: (B, P) int32 -> (B, max_new_tokens) greedy tokens."""
+    fam = get_family(cfg)
+    B, P = prompt_tokens.shape
+    max_len = max_len or (P + max_new_tokens)
+    cache = fam.init_cache(cfg, B, max_len)
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    logits, cache = prefill(params, {"tokens": prompt_tokens}, cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    for t in range(max_new_tokens - 1):
+        tok, cache = decode(params, tok, jnp.int32(P + t), cache)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    prompts = jnp.asarray(lm_batch(cfg.vocab_size, args.batch,
+                                   args.prompt_len))
+    t0 = time.time()
+    toks = generate(cfg, params, prompts, max_new_tokens=args.gen)
+    toks.block_until_ready()
+    dt = time.time() - t0
+    print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print(np.asarray(toks[:2]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Abstract input specs (ShapeDtypeStruct) for every lowered entry point.
+
+No device allocation ever happens here — these are the stand-ins the
+dry-run lowers against (weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import get_family
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int):
+    """Training/prefill batch: the model's input dict."""
+    specs = {}
+    if cfg.continuous_inputs:
+        specs["inputs"] = S((batch, seq, cfg.continuous_inputs),
+                            jnp.dtype(cfg.compute_dtype))
+        specs["tokens"] = S((batch, seq), jnp.int32)
+        specs["mask"] = S((batch, seq), jnp.float32)
+    else:
+        specs["tokens"] = S((batch, seq), jnp.int32)
+    if cfg.rope == "mrope":
+        specs["positions"] = S((3, batch, seq), jnp.int32)
+    return specs
+
+
+def batch_logical(cfg: ModelConfig):
+    specs = {"tokens": ("batch", "seq")}
+    if cfg.continuous_inputs:
+        specs["inputs"] = ("batch", "seq", None)
+        specs["mask"] = ("batch", "seq")
+    if cfg.rope == "mrope":
+        specs["positions"] = (None, "batch", "seq")
+    return specs
+
+
+def params_specs_abstract(cfg: ModelConfig):
+    fam = get_family(cfg)
+    return jax.eval_shape(lambda: fam.init(jax.random.PRNGKey(0), cfg))
+
+
+def cache_specs_abstract(cfg: ModelConfig, batch: int, max_len: int):
+    fam = get_family(cfg)
+    return jax.eval_shape(lambda: fam.init_cache(cfg, batch, max_len))
+
+
+def cache_logical(cfg: ModelConfig):
+    fam = get_family(cfg)
+    return fam.cache_specs(cfg)

@@ -1,0 +1,22 @@
+"""Model zoo: family registry.
+
+Every family module exposes the same functional interface:
+  init(rng, cfg) -> params
+  forward(params, batch, cfg) -> (logits, aux)
+  param_specs(cfg) -> pytree of logical-axis tuples
+  init_cache(cfg, batch, max_len) / prefill / decode_step   (decoders only)
+"""
+from __future__ import annotations
+
+import importlib
+
+_FAMILIES = {
+    "transformer": "repro.models.transformer",
+    "griffin": "repro.models.griffin",
+    "xlstm": "repro.models.xlstm",
+}
+
+
+def get_family(cfg_or_name):
+    name = getattr(cfg_or_name, "family", cfg_or_name)
+    return importlib.import_module(_FAMILIES[name])

@@ -1,0 +1,178 @@
+"""Attention: GQA/MQA grouped einsum with memory-efficient chunking.
+
+Naive attention materializes the (B, H, S, S) logits tensor — at the assigned
+shapes (e.g. train_4k: B=256, S=4096; prefill_32k: S=32768) that is TBs of
+HBM, so the *default* lowering path is a FlashAttention-style query-chunk scan
+(Rabe & Staats, arXiv:2112.05682): O(S * chunk) live memory, with
+``jax.remat`` on the chunk body so the backward pass recomputes chunk logits
+instead of saving them.  The Pallas ``flash_attention`` kernel in
+``repro/kernels`` is the TPU-native realization of the same schedule; this
+module is the partitioner-friendly jnp form used for lowering/dry-run.
+
+GQA is computed grouped — queries reshaped to (B, S, KV, G, hd) — so repeated
+KV heads are never materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _band_mask(qpos, kpos, *, causal: bool, window: Optional[int],
+               kv_len=None):
+    """(..., Sq, Sk) bool mask. qpos/kpos are int32 position vectors."""
+    m = jnp.ones((qpos.shape[-1], kpos.shape[-1]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    if kv_len is not None:
+        m &= kpos[None, :] < kv_len
+    return m
+
+
+def _sdpa(q, k, v, mask, scale, logits_dtype=jnp.float32):
+    """q: (B,Sq,KV,G,hd)  k,v: (B,Sk,KV,hd)  mask: (Sq,Sk) or (B,Sq,Sk).
+
+    ``logits_dtype=bf16`` halves the S x S intermediate chain (max-shifted
+    exp stays well-conditioned in bf16) — the jnp-path approximation of
+    what the Pallas flash kernel gets for free by keeping logits in VMEM.
+    """
+    logits = jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if mask.ndim == 2:
+        mask = mask[None, None, None]
+    else:
+        mask = mask[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    if logits_dtype != jnp.float32:
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp((logits - m).astype(logits_dtype))
+        denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+        probs = p.astype(jnp.float32) / denom
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskh->bqkgh", probs.astype(v.dtype), v
+    )
+    return out
+
+
+def attention(q, k, v, *, causal=True, window=None, q_offset=0,
+              kv_len=None, scale=None, chunk_q=512, unroll=False,
+              logits_dtype=jnp.float32, prefix_chunks=False):
+    """Grouped-query attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd_k/hd_v); returns (B, Sq, H, hd_v).
+    ``q_offset``  — absolute position of q[0] (prefill chunking / decode).
+    ``kv_len``    — valid prefix length of k/v (padded caches), traced scalar ok.
+    ``prefix_chunks`` — causal self-attention only: unroll the query-chunk
+    loop in python so chunk i attends a *static KV prefix* [0, (i+1)*chunk)
+    instead of the full masked S — cuts the ~2x causal masked-compute waste
+    of the scan path at the cost of O(nc) HLO size (§Perf optimization).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd)
+
+    Sk = k.shape[1]
+    kpos = jnp.arange(Sk, dtype=jnp.int32)
+
+    if Sq <= chunk_q:
+        qpos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+        mask = _band_mask(qpos, kpos, causal=causal, window=window,
+                          kv_len=kv_len)
+        out = _sdpa(qg, k, v, mask, scale, logits_dtype)
+        return out.reshape(B, Sq, H, v.shape[-1])
+
+    if Sq % chunk_q:  # ragged tail (e.g. MTP's S-1 stream): pad + slice
+        pad = chunk_q - Sq % chunk_q
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = attention(qp, k, v, causal=causal, window=window,
+                        q_offset=q_offset, kv_len=kv_len, scale=scale,
+                        chunk_q=chunk_q, unroll=unroll,
+                        logits_dtype=logits_dtype)
+        return out[:, :Sq]
+    nc = Sq // chunk_q
+    qc = qg.reshape(B, nc, chunk_q, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    if (prefix_chunks and causal and window is None and kv_len is None
+            and Sq == Sk and q_offset == 0):
+        sdpa = jax.remat(_sdpa, prevent_cse=False,
+                         static_argnums=(4, 5))
+        outs = []
+        for ci in range(nc):
+            hi = (ci + 1) * chunk_q
+            qpos = ci * chunk_q + jnp.arange(chunk_q, dtype=jnp.int32)
+            kpos_c = jnp.arange(hi, dtype=jnp.int32)
+            mask = _band_mask(qpos, kpos_c, causal=True, window=None)
+            outs.append(sdpa(qc[ci], k[:, :hi], v[:, :hi], mask, scale,
+                             logits_dtype))
+        out = jnp.stack(outs, 0)
+        return out.transpose(1, 0, 2, 3, 4, 5).reshape(
+            B, Sq, H, v.shape[-1])
+
+    if window is not None:
+        # local attention: each chunk only needs a static (window + chunk_q)
+        # KV slice — O(S * window) total work instead of O(S^2).
+        # look-back windows are causal by construction (griffin/gemma-style);
+        # a non-causal window would need forward KV context the slice
+        # doesn't cover.
+        assert causal, "windowed attention requires causal=True"
+        span = window + chunk_q
+        pad = span  # left-pad so every dynamic_slice start is in range
+        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+        def chunk_body(_, ci):
+            qi = qc[ci]
+            start = ci * chunk_q + pad - window
+            ks = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+            qpos = q_offset + ci * chunk_q + jnp.arange(chunk_q,
+                                                        dtype=jnp.int32)
+            kpos_c = start - pad + jnp.arange(span, dtype=jnp.int32)
+            mask = _band_mask(qpos, kpos_c, causal=causal, window=window,
+                              kv_len=kv_len) & (kpos_c >= 0)[None, :]
+            return None, _sdpa(qi, ks, vs, mask, scale, logits_dtype)
+
+        body = jax.remat(chunk_body, prevent_cse=False)
+        _, outs = jax.lax.scan(body, None, jnp.arange(nc), unroll=unroll)
+    else:
+        def chunk_body(_, ci):
+            qi = qc[ci]
+            qpos = q_offset + ci * chunk_q + jnp.arange(chunk_q,
+                                                        dtype=jnp.int32)
+            mask = _band_mask(qpos, kpos, causal=causal, window=None,
+                              kv_len=kv_len)
+            return None, _sdpa(qi, k, v, mask, scale, logits_dtype)
+
+        body = jax.remat(chunk_body, prevent_cse=False)
+        _, outs = jax.lax.scan(body, None, jnp.arange(nc), unroll=unroll)
+
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, v.shape[-1])
+    return out
+
+
+def reference_attention(q, k, v, *, causal=True, window=None, kv_len=None,
+                        scale=None):
+    """Tiny-oracle full attention (tests only — materializes S×S)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(B, Sq, KV, H // KV, hd)
+    qpos = jnp.arange(Sq, dtype=jnp.int32)
+    kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    mask = _band_mask(qpos, kpos, causal=causal, window=window, kv_len=kv_len)
+    out = _sdpa(qg, k, v, mask, scale)
+    return out.reshape(B, Sq, H, v.shape[-1])

@@ -1,0 +1,73 @@
+"""Shared building blocks: inits, norms, embeddings.
+
+All models in the zoo are *functional*: params are plain nested dicts of
+jnp arrays, stacked over the layer axis (leading ``L``) so that
+``jax.lax.scan`` can run the block stack with O(1) HLO size, and so the
+Mango growth operator can view the whole stack as one (B, I, O, L) tensor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- init utils
+def trunc_normal(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def keygen(key):
+    """Infinite stream of fresh keys."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def apply_norm(x, p, kind, eps=1e-6):
+    if kind == "rms":
+        return rms_norm(x, p["scale"], eps)
+    return layer_norm(x, p["scale"], p.get("bias"), eps)
+
+
+def init_norm(kind, dim, layers=None, dtype=jnp.float32):
+    shape = (dim,) if layers is None else (layers, dim)
+    p = {"scale": jnp.ones(shape, dtype)}
+    if kind == "ln":
+        p["bias"] = jnp.zeros(shape, dtype)
+    return p
+
+
+# ----------------------------------------------------------------- misc math
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def take_layer(stacked, i):
+    """Slice layer ``i`` from every leaf of a stacked-params subtree."""
+    return jax.tree.map(lambda a: a[i], stacked)
+
+
+def slice_layers(stacked, start, stop):
+    """Static sub-range of the layer axis on every leaf."""
+    return jax.tree.map(lambda a: a[start:stop], stacked)

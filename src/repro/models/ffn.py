@@ -1,0 +1,65 @@
+"""Feed-forward blocks: GELU MLP, SwiGLU / GeGLU gated MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import annotate
+from repro.models.common import gelu
+
+
+def mlp(x, p, act="swiglu"):
+    """x: (B,S,D). p has w_up (D,F) [+ w_gate (D,F)], w_down (F,D), opt biases."""
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if "b_up" in p:
+        h = h + p["b_up"].astype(x.dtype)
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        if "b_gate" in p:
+            g = g + p["b_gate"].astype(x.dtype)
+        g = jax.nn.silu(g) if act == "swiglu" else gelu(g)
+        h = g * h
+    else:
+        h = gelu(h)
+    h = annotate(h, ("batch", "seq", "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    if "b_down" in p:
+        y = y + p["b_down"].astype(x.dtype)
+    return y
+
+
+def init_mlp(keys, d_model, d_ff, *, layers=None, act="swiglu", bias=False,
+             dtype=jnp.float32, std=0.02):
+    from repro.models.common import trunc_normal
+
+    def shp(*s):
+        return s if layers is None else (layers, *s)
+
+    p = {
+        "w_up": trunc_normal(next(keys), shp(d_model, d_ff), std, dtype),
+        "w_down": trunc_normal(next(keys), shp(d_ff, d_model), std, dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = trunc_normal(next(keys), shp(d_model, d_ff), std, dtype)
+    if bias:
+        p["b_up"] = jnp.zeros(shp(d_ff), dtype)
+        p["b_down"] = jnp.zeros(shp(d_model), dtype)
+        if act in ("swiglu", "geglu"):
+            p["b_gate"] = jnp.zeros(shp(d_ff), dtype)
+    return p
+
+
+def mlp_specs(act="swiglu", bias=False, layers=True):
+    L = ("layers",) if layers else ()
+    s = {
+        "w_up": L + ("embed", "mlp"),
+        "w_down": L + ("mlp", "embed"),
+    }
+    if act in ("swiglu", "geglu"):
+        s["w_gate"] = L + ("embed", "mlp")
+    if bias:
+        s["b_up"] = L + ("mlp",)
+        s["b_down"] = L + ("embed",)
+        if act in ("swiglu", "geglu"):
+            s["b_gate"] = L + ("mlp",)
+    return s

@@ -1,0 +1,58 @@
+"""Rotary position embeddings: standard, partial-fraction, and M-RoPE.
+
+M-RoPE (Qwen2-VL, arXiv:2409.12191): head_dim frequencies are split into
+(temporal, height, width) sections; each section rotates with its own
+position stream.  For text-only tokens all three streams carry the same
+position, which reproduces 1-D RoPE exactly — that is the backbone behaviour
+exercised here (the vision frontend is a stub per the assignment).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(dim, theta=10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, *, theta=10000.0, fraction=1.0):
+    """x: (B, S, H, hd); positions: (B, S) int32.
+
+    ``fraction`` < 1 rotates only the first ``fraction * hd`` dims
+    (StableLM-2 style partial rotary).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    freqs = rope_freqs(rot, theta)  # (rot/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    xr = _rotate(xr, cos, sin)
+    return jnp.concatenate([xr, xp], axis=-1) if rot < hd else xr
+
+
+def apply_mrope(x, positions3, *, theta=10000.0, sections=(16, 24, 24)):
+    """x: (B, S, H, hd); positions3: (3, B, S) — (t, h, w) position streams.
+
+    ``sections`` are half-dim section sizes (sum == hd // 2), Qwen2-VL layout.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang_all = positions3.astype(jnp.float32)[..., None] * freqs  # (3,B,S,hd/2)
+    pieces = []
+    off = 0
+    for i, sec in enumerate(sections):
+        pieces.append(ang_all[i, :, :, off:off + sec])
+        off += sec
+    ang = jnp.concatenate(pieces, axis=-1)  # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return _rotate(x, cos, sin)

@@ -1,0 +1,7 @@
+from repro.optim.adamw import (
+    adamw_init,
+    adamw_update,
+    OptimizerConfig,
+    make_optimizer,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine

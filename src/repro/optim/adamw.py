@@ -1,0 +1,132 @@
+"""AdamW, hand-rolled (no optax in the container), scale-ready.
+
+Features needed at 1000+ nodes:
+  * optional bf16 first/second moments (halves optimizer HBM — the moments
+    are pure accumulators and tolerate bf16 at these decay rates);
+  * optional f32 master copy when params are stored bf16;
+  * global-norm clipping computed in f32;
+  * the state pytree mirrors the param pytree leaf-for-leaf, so the
+    ZeRO-style sharding rules in ``repro/distributed`` apply verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 1e-2
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"  # bfloat16 at scale
+    master_weights: bool = False   # keep f32 master copy of bf16 params
+
+
+# ------------------------------------------------- minimal functional form
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(params, state, grads, step, *, lr=1e-3, b1=0.9, b2=0.999,
+                 eps=1e-8, weight_decay=0.0):
+    stepf = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** stepf
+    c2 = 1.0 - b2 ** stepf
+
+    def upd(p, m, v, g):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, state["m"], state["v"], grads)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v}
+
+
+# -------------------------------------------------- full configurable form
+def global_norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def make_optimizer(cfg: OptimizerConfig, schedule=None):
+    """Returns (init_fn(params) -> state, update_fn(params, state, grads,
+    step) -> (params, state, metrics))."""
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init_fn(params):
+        state = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        }
+        if cfg.master_weights:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update_fn(params, state, grads, step):
+        stepf = step.astype(jnp.float32)
+        lr = cfg.lr if schedule is None else schedule(stepf)
+        gnorm = global_norm(grads)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        if cfg.clip_norm is not None:
+            scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                grads)
+        c1 = 1.0 - cfg.b1 ** stepf
+        c2 = 1.0 - cfg.b2 ** stepf
+        base = state.get("master", params)
+
+        def upd(p_master, m, v, g):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32)
+            v32 = v.astype(jnp.float32)
+            m32 = cfg.b1 * m32 + (1 - cfg.b1) * g32
+            v32 = cfg.b2 * v32 + (1 - cfg.b2) * g32 * g32
+            mh, vh = m32 / c1, v32 / c2
+            p32 = p_master.astype(jnp.float32)
+            p32 = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                              + cfg.weight_decay * p32)
+            return p32, m32.astype(mdt), v32.astype(mdt)
+
+        out = jax.tree.map(upd, base, state["m"], state["v"], grads)
+        pick = lambda i: jax.tree.map(
+            lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+        p32, new_m, new_v = pick(0), pick(1), pick(2)
+        new_state = {"m": new_m, "v": new_v}
+        if cfg.master_weights:
+            new_state["master"] = p32
+        new_params = jax.tree.map(
+            lambda p, q: q.astype(p.dtype), params, p32)
+        return new_params, new_state, metrics
+
+    return init_fn, update_fn
+
+
+def state_specs(param_specs, master_weights=False):
+    """Logical sharding specs for optimizer state (mirrors params)."""
+    s = {"m": param_specs, "v": param_specs}
+    if master_weights:
+        s["master"] = param_specs
+    return s

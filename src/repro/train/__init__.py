@@ -1,0 +1,8 @@
+from repro.train.loss import lm_loss, cls_loss
+from repro.train.steps import (
+    make_train_step,
+    make_eval_step,
+    make_prefill_step,
+    make_decode_step,
+    make_grow_step,
+)

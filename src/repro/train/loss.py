@@ -1,0 +1,52 @@
+"""Losses: next-token CE (with z-loss), classification, MTP, MoE aux."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ce(logits, targets, z_loss=0.0):
+    """logits (..., V) any dtype; targets (...) int32. f32 reduction."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], -1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss
+
+
+def lm_loss(logits, aux, batch, cfg, z_loss=1e-4):
+    """Causal LM loss (+ MoE aux + MTP).  Encoder configs (non-causal LM
+    heads, e.g. HuBERT units / BERT MLM) predict the *current* position of
+    a masked stream instead of shifting."""
+    tokens = batch["tokens"]
+    if cfg.causal:
+        loss = _ce(logits[:, :-1], tokens[:, 1:], z_loss).mean()
+    else:
+        mask = batch.get("mask")
+        per = _ce(logits, tokens, z_loss)
+        loss = (per * mask).sum() / jnp.maximum(mask.sum(), 1) \
+            if mask is not None else per.mean()
+    metrics = {"ce": loss}
+    if aux.get("moe_aux") is not None and cfg.moe:
+        moe_aux = aux["moe_aux"] * cfg.aux_loss_weight
+        loss = loss + moe_aux
+        metrics["moe_aux"] = moe_aux
+    if "mtp_logits" in aux:
+        # depth-1 MTP predicts token t+2 from position t
+        mtp = _ce(aux["mtp_logits"][:, :-1], tokens[:, 2:], z_loss).mean()
+        loss = loss + cfg.mtp_weight * mtp
+        metrics["mtp"] = mtp
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def cls_loss(logits, aux, batch, cfg, z_loss=0.0):
+    loss = _ce(logits, batch["labels"], z_loss).mean()
+    acc = (logits.argmax(-1) == batch["labels"]).mean()
+    return loss, {"loss": loss, "acc": acc}
+
+
+def loss_for(cfg):
+    return cls_loss if cfg.head == "cls" else lm_loss

@@ -1,0 +1,7 @@
+from repro.utils.pytree import (
+    tree_size_bytes,
+    tree_param_count,
+    tree_flatten_with_paths,
+    path_str,
+)
+from repro.utils.dtypes import DTypePolicy, canonical_dtype

@@ -1,0 +1,43 @@
+"""Mixed-precision policy.
+
+Large-scale TPU training convention:
+  * ``param_dtype``   — how weights are stored (bf16 at scale, f32 for tests)
+  * ``compute_dtype`` — matmul/activation dtype (bf16 on the MXU)
+  * reductions (softmax denominators, loss, norms) always in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+def canonical_dtype(name):
+    if isinstance(name, str):
+        return jnp.dtype(
+            {"bf16": jnp.bfloat16, "f32": jnp.float32, "f16": jnp.float16}.get(
+                name, name
+            )
+        )
+    return jnp.dtype(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    @property
+    def param(self):
+        return canonical_dtype(self.param_dtype)
+
+    @property
+    def compute(self):
+        return canonical_dtype(self.compute_dtype)
+
+    def cast_compute(self, x):
+        return x.astype(self.compute)
+
+
+TRAIN_BF16 = DTypePolicy(param_dtype="bfloat16", compute_dtype="bfloat16")
+TEST_F32 = DTypePolicy()

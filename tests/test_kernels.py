@@ -1,0 +1,97 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs jnp oracles.
+
+Shapes/dtypes swept per kernel per the deliverable; block sizes kept small
+so the CPU interpreter stays fast.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,d1,d2", [(2, 128, 128), (3, 256, 128),
+                                     (1, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tr_sandwich(n, d1, d2, dtype):
+    kx, ki, ko = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(kx, (n, d1, d1), dtype)
+    a_i = (0.05 * jax.random.normal(ki, (d1, d2))).astype(dtype)
+    a_o = (0.05 * jax.random.normal(ko, (d1, d2))).astype(dtype)
+    y = ops.tr_sandwich(x, a_i, a_o, mode="interpret", ti=128, to=128,
+                        tk=128)
+    yr = ref.tr_sandwich_ref(x, a_i, a_o)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b,h,kv,s,hd", [(1, 4, 4, 256, 64),
+                                         (2, 4, 2, 256, 64),
+                                         (1, 8, 1, 128, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, h, kv, s, hd, causal, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (b, h, s, hd), dtype)
+    k = jax.random.normal(keys[1], (b, kv, s, hd), dtype)
+    v = jax.random.normal(keys[2], (b, kv, s, hd), dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, mode="interpret",
+                            bq=128, bk=128)
+    orf = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b,h,kv,s,hd,kvlen", [(2, 8, 2, 512, 64, 300),
+                                               (1, 4, 4, 256, 128, 256),
+                                               (2, 16, 1, 512, 64, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, kv, s, hd, kvlen, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(keys[0], (b, h, hd), dtype)
+    k = jax.random.normal(keys[1], (b, kv, s, hd), dtype)
+    v = jax.random.normal(keys[2], (b, kv, s, hd), dtype)
+    o = ops.decode_attention(q, k, v, kvlen, mode="interpret", bk=256)
+    orf = ref.decode_attention_ref(q, k, v, kvlen)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,w", [(2, 256, 256), (1, 128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_h0", [True, False])
+def test_rglru_scan(b, s, w, dtype, with_h0):
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    a = jax.nn.sigmoid(jax.random.normal(keys[0], (b, s, w))).astype(dtype)
+    bb = (0.1 * jax.random.normal(keys[1], (b, s, w))).astype(dtype)
+    h0 = jax.random.normal(keys[2], (b, w), jnp.float32) if with_h0 else None
+    h = ops.rglru_scan(a, bb, h0, mode="interpret", bs=128, bw=256)
+    hr = ref.rglru_scan_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(hr, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the model's chunked-jnp attention path."""
+    from repro.models.attention import attention
+
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    B, H, KV, S, hd = 2, 4, 2, 256, 64
+    q = jax.random.normal(keys[0], (B, S, H, hd))
+    k = jax.random.normal(keys[1], (B, S, KV, hd))
+    v = jax.random.normal(keys[2], (B, S, KV, hd))
+    o_model = attention(q, k, v, causal=True, chunk_q=64)
+    o_kernel = ops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, mode="interpret",
+        bq=128, bk=128).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o_model), np.asarray(o_kernel),
+                               rtol=2e-4, atol=2e-4)

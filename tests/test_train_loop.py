@@ -1,0 +1,62 @@
+"""Trainer integration: loss goes down, growth helps, resume works,
+microbatch accumulation is consistent with full-batch."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.data.synthetic import lm_batch
+from repro.launch.train import train
+from repro.optim import OptimizerConfig, make_optimizer
+from repro.train.steps import make_train_step
+
+
+def test_training_reduces_loss():
+    _, hist = train("gpt-micro", steps=80, batch=8, seq=64, lr=1e-3,
+                    warmup=5, log_every=10, log_fn=lambda *_: None)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.9, hist
+
+
+def test_resume_from_checkpoint(tmp_path):
+    d = str(tmp_path / "ck")
+    train("gpt-micro", steps=20, batch=4, seq=48, ckpt_dir=d, ckpt_every=10,
+          log_fn=lambda *_: None)
+    _, hist = train("gpt-micro", steps=30, batch=4, seq=48, ckpt_dir=d,
+                    resume=True, log_every=5, log_fn=lambda *_: None)
+    assert hist[0]["step"] >= 20  # continued, not restarted
+
+
+def test_grown_run_beats_scratch_early(tmp_path):
+    src_dir = str(tmp_path / "gpt-micro")
+    train("gpt-micro", steps=60, batch=4, seq=48, lr=2e-3, warmup=5,
+          ckpt_dir=src_dir, ckpt_every=60, log_fn=lambda *_: None)
+    _, hist_g = train("gpt-micro-big", steps=8, batch=4, seq=48,
+                      grow_from="gpt-micro", grow_src_ckpt=src_dir,
+                      grow_method="mango", grow_steps=15, log_every=4,
+                      log_fn=lambda *_: None)
+    _, hist_s = train("gpt-micro-big", steps=8, batch=4, seq=48,
+                      log_every=4, log_fn=lambda *_: None)
+    assert hist_g[0]["loss"] < hist_s[0]["loss"] - 0.5, \
+        (hist_g[0], hist_s[0])
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_config("gpt-micro")
+    from repro.models import get_family
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    opt_cfg = OptimizerConfig(lr=1e-3, clip_norm=None)
+    init_fn, _ = make_optimizer(opt_cfg)
+    batch = {"tokens": jnp.asarray(lm_batch(cfg.vocab_size, 8, 32))}
+
+    s1 = jax.jit(make_train_step(cfg, opt_cfg, n_microbatches=1))
+    s4 = jax.jit(make_train_step(cfg, opt_cfg, n_microbatches=4))
+    p1, _, m1 = s1(params, init_fn(params), batch, jnp.int32(1))
+    p4, _, m4 = s4(params, init_fn(params), batch, jnp.int32(1))
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert d < 5e-5, d
