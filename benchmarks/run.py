@@ -13,7 +13,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig6,fig7,transfer,roofline,"
-                         "kernels")
+                         "kernels,serve")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -31,6 +31,9 @@ def main() -> None:
     if section("roofline"):
         from benchmarks.bench_roofline import run as rf
         rf()
+    if section("serve"):
+        from benchmarks.bench_serve_engine import run as sv
+        sv(quick=args.quick)
     if section("fig6"):
         from benchmarks.bench_fig6_rank_ablation import run as f6
         f6(quick=args.quick)

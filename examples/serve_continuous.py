@@ -1,0 +1,67 @@
+"""Continuous-batching serving example.
+
+A stream of requests with mixed prompt lengths and mixed generation
+lengths flows through a fixed-capacity slot pool: sequences are admitted
+as slots free up, decode runs as ONE batched step per engine iteration
+regardless of how sequences come and go, and retired slots are backfilled
+without recompiling.  Compare with ``serve_batched.py``, which must run
+every sequence lock-step to the longest request.
+
+Also shows the paper's end-to-end story at serve time: growing a small
+pretrained model into the target architecture (Mango operator) and serving
+the grown weights through the same engine.
+
+Run:  PYTHONPATH=src:. python examples/serve_continuous.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.synthetic import lm_batch
+from repro.launch.serve import build_params
+from repro.models import get_family
+from repro.serve import ContinuousBatchingEngine, Request
+
+
+def mixed_trace(cfg, n, *, seed=0, max_prompt=24, max_gen=12):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n):
+        plen = int(rng.integers(4, max_prompt + 1))
+        gen = int(rng.integers(2, max_gen + 1))
+        prompt = lm_batch(cfg.vocab_size, 1, plen, seed=100 + uid)[0]
+        reqs.append(Request(uid=uid, prompt=prompt, max_new_tokens=gen))
+    return reqs
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b-smoke")
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    engine = ContinuousBatchingEngine(cfg, params, capacity=4, max_len=64)
+    reqs = mixed_trace(cfg, 10)
+    t0 = time.time()
+    out = engine.run(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(v) for v in out.values())
+    print(f"{cfg.name:24s} served {len(reqs)} mixed-length requests "
+          f"({n_tok} tokens) in {dt:.2f}s via {engine.n_decode_steps} "
+          f"batched decode steps")
+    for uid in (0, 1):
+        print(f"  req {uid}: {out[uid]}")
+
+    # serve a Mango-grown model through the same engine
+    cfg_big = get_config("gpt-micro-big")
+    grown = build_params(cfg_big, grow_from="gpt-micro",
+                         grow_method="mango", grow_steps=0)
+    engine = ContinuousBatchingEngine(cfg_big, grown, capacity=4,
+                                      max_len=64)
+    out = engine.run(mixed_trace(cfg_big, 6))
+    print(f"{cfg_big.name:24s} served {len(out)} requests on Mango-grown "
+          f"params; sample: {out[0][:8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,40 @@ def operator_param_count(gop: GrowthOperator, op_params) -> int:
     return sum(int(x.size) for x in leaves)
 
 
+def grow_from_source(cfg_src, cfg_tgt, *, method="mango", rank=1, steps=0,
+                     data_iter=None, params_src=None, rng=None,
+                     log_fn=print):
+    """Full grow bootstrap: source init -> operator -> (optional Eq. 7
+    operator training on ``data_iter``) -> grown target params.
+
+    Shared by the train and serve launchers; pass ``params_src`` to grow
+    from pretrained (e.g. checkpoint-restored) weights instead of a fresh
+    init.
+    """
+    from repro.train.loss import loss_for
+
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    if params_src is None:
+        params_src = get_family(cfg_src).init(rng, cfg_src)
+    gop, op_params = build(method, cfg_src, cfg_tgt, rank=rank, rng=rng)
+    if steps:
+        if data_iter is None:
+            raise ValueError("operator training (steps > 0) needs data_iter")
+        fam_tgt = get_family(cfg_tgt)
+        loss_fn = loss_for(cfg_tgt)
+
+        def op_loss(big, batch):
+            logits, aux = fam_tgt.forward(big, batch, cfg_tgt)
+            return loss_fn(logits, aux, batch, cfg_tgt)[0]
+
+        op_params, losses = train_operator(gop, op_params, params_src,
+                                           op_loss, data_iter, steps=steps)
+        if losses:
+            log_fn(f"[grow] {method} operator trained {len(losses)} "
+                   f"steps: {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return grow_params(gop, op_params, params_src)
+
+
 def train_operator(gop: GrowthOperator, op_params, params_src, loss_fn,
                    data_iter, *, steps=100, lr=1e-3, weight_decay=1e-2):
     """Stage-(ii): optimize the operator on the task loss (Eq. 7).

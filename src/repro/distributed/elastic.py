@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.distributed.sharding import params_shardings, \
     sharding_rules_for_mesh
+from repro.utils.compat import make_mesh_compat
 
 
 def choose_mesh_shape(n_devices: int, prefer_model: int = 16):
@@ -36,9 +37,7 @@ def choose_mesh_shape(n_devices: int, prefer_model: int = 16):
 def make_elastic_mesh(prefer_model: int = 16):
     n = len(jax.devices())
     shape = choose_mesh_shape(n, prefer_model)
-    return jax.make_mesh(
-        shape, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat(shape, ("data", "model"))
 
 
 def reshard_restore(ckpt_dir: str, template, param_specs, *,

@@ -6,7 +6,10 @@ once per step.  Grid (B, KV, Sk/BK) with the cache axis innermost; a running
 of a kv group are processed together as a (G, hd) tile so the cache block is
 read exactly once per group (the GQA bandwidth win).
 
-``kv_len`` masks the unwritten cache tail (padded caches).
+``kv_len`` masks the unwritten cache tail (padded caches); it may be a
+scalar (uniform batch) or a (B,) vector — the continuous-batching case
+where every batch row is a cache slot at its own sequence length.  Rows
+with kv_len == 0 (idle slots) return zeros.
 """
 from __future__ import annotations
 
@@ -31,7 +34,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    kv_len = len_ref[0]
+    kv_len = len_ref[pl.program_id(0)]
 
     @pl.when(ki * bk < kv_len)
     def _body():
@@ -59,14 +62,16 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
 def decode_attention(q, k, v, kv_len, *, bk=256, interpret=False):
-    """q: (B, H, hd); k, v: (B, KV, S, hd); kv_len: scalar -> (B, H, hd)."""
+    """q: (B, H, hd); k, v: (B, KV, S, hd); kv_len: scalar or (B,) vector
+    of valid lengths -> (B, H, hd)."""
     B, H, hd = q.shape
     KV, S = k.shape[1], k.shape[2]
     g = H // KV
     assert S % bk == 0, (S, bk)
     qg = q.reshape(B, KV, g, hd)
     scale = hd ** -0.5
-    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    kv_len = jnp.broadcast_to(
+        jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
 
     grid = (B, KV, S // bk)
     out = pl.pallas_call(

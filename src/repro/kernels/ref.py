@@ -32,17 +32,21 @@ def flash_attention_ref(q, k, v, *, causal=True):
 
 
 def decode_attention_ref(q, k, v, kv_len):
-    """q: (B, H, hd); k, v: (B, KV, S, hd); kv_len: int -> (B, H, hd)."""
+    """q: (B, H, hd); k, v: (B, KV, S, hd); kv_len: int or (B,) per-row
+    valid lengths -> (B, H, hd).  Rows with kv_len == 0 (idle slots)
+    return zeros, matching the kernel's empty-accumulator convention."""
     B, H, hd = q.shape
     KV = k.shape[1]
     G = H // KV
     qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
     logits = jnp.einsum("bkgh,bksh->bkgs", qg,
                         k.astype(jnp.float32)) * hd ** -0.5
-    mask = jnp.arange(k.shape[2]) < kv_len
-    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    kvl = jnp.broadcast_to(jnp.asarray(kv_len).reshape(-1), (B,))
+    mask = jnp.arange(k.shape[2])[None] < kvl[:, None]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
+    out = out * (kvl > 0).astype(out.dtype)[:, None, None, None]
     return out.reshape(B, H, hd).astype(q.dtype)
 
 

@@ -8,13 +8,14 @@ from __future__ import annotations
 
 import jax
 
+from repro.utils.compat import make_mesh_compat  # noqa: F401  (re-export)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh():
@@ -24,6 +25,4 @@ def make_host_mesh():
     subprocess tests with forced host device counts.
     """
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((n, 1), ("data", "model"))

@@ -1,14 +1,25 @@
-"""Batched serving loop: prefill + greedy decode with KV/recurrent caches.
+"""Serving launcher: naive lock-step batch or continuous batching.
 
 Drives the same ``prefill``/``decode_step`` functions the dry-run lowers at
 production scale.  Usable as a library (examples) or CLI:
 
+  # naive fixed-batch loop
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
       --batch 4 --prompt-len 32 --gen 16
+
+  # continuous batching over a slot pool
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
+      --engine continuous --batch 8 --gen 16
+
+  # serve a model grown from a pretrained source (the paper's operator,
+  # end-to-end at serve time)
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt-micro-big \
+      --engine continuous --grow gpt-micro --grow-method mango
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -18,7 +29,17 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.data.synthetic import lm_batch
 from repro.models import get_family
+from repro.serve import ContinuousBatchingEngine, Request
 from repro.train.steps import make_decode_step, make_prefill_step
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_steps(cfg):
+    """One jitted prefill/decode pair per config — ``cfg`` is a frozen
+    dataclass, so repeated ``generate`` calls (and the test suite's many
+    per-request baselines) reuse the compile cache instead of re-tracing
+    fresh closures every call."""
+    return (jax.jit(make_prefill_step(cfg)), jax.jit(make_decode_step(cfg)))
 
 
 def generate(cfg, params, prompt_tokens, *, max_new_tokens=16,
@@ -28,8 +49,7 @@ def generate(cfg, params, prompt_tokens, *, max_new_tokens=16,
     B, P = prompt_tokens.shape
     max_len = max_len or (P + max_new_tokens)
     cache = fam.init_cache(cfg, B, max_len)
-    prefill = jax.jit(make_prefill_step(cfg))
-    decode = jax.jit(make_decode_step(cfg))
+    prefill, decode = _jitted_steps(cfg)
 
     logits, cache = prefill(params, {"tokens": prompt_tokens}, cache)
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
@@ -40,26 +60,86 @@ def generate(cfg, params, prompt_tokens, *, max_new_tokens=16,
     return jnp.stack(out, axis=1)
 
 
+def build_params(cfg, *, grow_from=None, grow_method="mango", grow_rank=1,
+                 grow_steps=0, seed=0, log_fn=print):
+    """Init params — directly, or grown from a source architecture via the
+    paper's multi-linear operator (``core/grow.py``)."""
+    fam = get_family(cfg)
+    rng = jax.random.PRNGKey(seed)
+    if not grow_from:
+        return fam.init(rng, cfg)
+
+    from repro.core import grow as growlib
+    from repro.data.synthetic import lm_data_iter
+
+    return growlib.grow_from_source(
+        get_config(grow_from), cfg, method=grow_method, rank=grow_rank,
+        steps=grow_steps,
+        data_iter=lm_data_iter(cfg.vocab_size, 4, 32, seed=seed + 1),
+        rng=rng, log_fn=log_fn)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="naive",
+                    choices=["naive", "continuous"])
+    ap.add_argument("--batch", type=int, default=4,
+                    help="naive: batch size; continuous: request count")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="continuous: decode slot-pool size")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="continuous: per-slot cache length (0 = auto)")
+    ap.add_argument("--grow", default=None, metavar="SRC_ARCH",
+                    help="grow params from this source arch before serving")
+    ap.add_argument("--grow-method", default="mango",
+                    choices=["mango", "ligo", "bert2bert", "stackbert",
+                             "net2net"])
+    ap.add_argument("--grow-rank", type=int, default=1)
+    ap.add_argument("--grow-steps", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    fam = get_family(cfg)
-    params = fam.init(jax.random.PRNGKey(0), cfg)
-    prompts = jnp.asarray(lm_batch(cfg.vocab_size, args.batch,
-                                   args.prompt_len))
+    params = build_params(cfg, grow_from=args.grow,
+                          grow_method=args.grow_method,
+                          grow_rank=args.grow_rank,
+                          grow_steps=args.grow_steps)
+
+    if args.engine == "naive":
+        prompts = jnp.asarray(lm_batch(cfg.vocab_size, args.batch,
+                                       args.prompt_len))
+        t0 = time.time()
+        toks = generate(cfg, params, prompts, max_new_tokens=args.gen)
+        toks.block_until_ready()
+        dt = time.time() - t0
+        print(f"[naive] generated {args.batch}x{args.gen} tokens in "
+              f"{dt:.2f}s ({args.batch * args.gen / dt:.1f} tok/s)")
+        print(np.asarray(toks[:2]))
+        return
+
+    max_len = args.max_len or (args.prompt_len + args.gen)
+    engine = ContinuousBatchingEngine(cfg, params, capacity=args.capacity,
+                                      max_len=max_len)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for uid in range(args.batch):
+        plen = int(rng.integers(max(1, args.prompt_len // 2),
+                                args.prompt_len + 1))
+        prompt = lm_batch(cfg.vocab_size, 1, plen, seed=uid)[0]
+        reqs.append(Request(uid=uid, prompt=prompt,
+                            max_new_tokens=args.gen))
     t0 = time.time()
-    toks = generate(cfg, params, prompts, max_new_tokens=args.gen)
-    toks.block_until_ready()
+    out = engine.run(reqs)
     dt = time.time() - t0
-    print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print(np.asarray(toks[:2]))
+    n_tok = sum(len(v) for v in out.values())
+    print(f"[continuous] served {len(reqs)} requests / {n_tok} tokens in "
+          f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, "
+          f"{engine.n_decode_steps} decode steps, "
+          f"{engine.n_prefills} prefills)")
+    for uid in sorted(out)[:2]:
+        print(uid, out[uid])
 
 
 if __name__ == "__main__":

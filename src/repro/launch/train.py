@@ -86,7 +86,6 @@ def train(arch: str, *, steps=100, batch=8, seq=None, lr=3e-4,
     history = []
     if grow_from:
         from repro.core import grow as growlib
-        from repro.train.loss import loss_for
 
         cfg_src = get_config(grow_from)
         src_ckpt = grow_src_ckpt or (
@@ -99,22 +98,10 @@ def train(arch: str, *, steps=100, batch=8, seq=None, lr=3e-4,
                 src_ckpt, {"p": params_src, "o": None})
             params_src = tree["p"]
             log_fn(f"[grow] source weights from {src_ckpt} @ step {sstep}")
-        gop, op_params = growlib.build(grow_method, cfg_src, cfg,
-                                       rank=grow_rank, rng=rng)
-        loss_fn_ = loss_for(cfg)
-
-        def op_loss(big, b):
-            logits, aux = fam.forward(big, b, cfg)
-            return loss_fn_(logits, aux, b, cfg)[0]
-
-        op_params, op_losses = growlib.train_operator(
-            gop, op_params, params_src, op_loss,
-            data_for(cfg, batch, seq, seed + 1), steps=grow_steps)
-        if op_losses:
-            log_fn(f"[grow] {grow_method} operator trained "
-                   f"{len(op_losses)} steps: {op_losses[0]:.4f} -> "
-                   f"{op_losses[-1]:.4f}")
-        params = growlib.grow_params(gop, op_params, params_src)
+        params = growlib.grow_from_source(
+            cfg_src, cfg, method=grow_method, rank=grow_rank,
+            steps=grow_steps, data_iter=data_for(cfg, batch, seq, seed + 1),
+            params_src=params_src, rng=rng, log_fn=log_fn)
     else:
         params = fam.init(rng, cfg)
     opt_state = init_fn(params)

@@ -25,14 +25,23 @@ NEG_INF = -1e30
 
 def _band_mask(qpos, kpos, *, causal: bool, window: Optional[int],
                kv_len=None):
-    """(..., Sq, Sk) bool mask. qpos/kpos are int32 position vectors."""
+    """(Sq, Sk) bool mask — or (B, Sq, Sk) when ``kv_len`` is per-row (B,).
+
+    qpos/kpos are int32 position vectors; a vector ``kv_len`` is the
+    continuous-batching case where every batch row is a slot at its own
+    sequence length.
+    """
     m = jnp.ones((qpos.shape[-1], kpos.shape[-1]), bool)
     if causal:
         m &= kpos[None, :] <= qpos[:, None]
     if window is not None:
         m &= kpos[None, :] > (qpos[:, None] - window)
     if kv_len is not None:
-        m &= kpos[None, :] < kv_len
+        kvl = jnp.asarray(kv_len)
+        if kvl.ndim == 0:
+            m &= kpos[None, :] < kvl
+        else:
+            m = m[None] & (kpos[None, None, :] < kvl[:, None, None])
     return m
 
 

@@ -147,15 +147,22 @@ def _split_heads(x, n, hd):
 
 
 def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
-                  kv_len=None, window=None):
-    """Returns (out, new_cache_entry). x: (B,S,D)."""
+                  kv_len=None, window=None, slot_positions=None):
+    """Returns (out, new_cache_entry). x: (B,S,D).
+
+    ``slot_positions`` (B,) switches to the continuous-batching decode path:
+    S must be 1, each batch row is an independent cache slot at its own
+    length, the new K/V is scattered to ``cache[b, slot_positions[b]]`` and
+    attention masks per-row to ``kv_len = slot_positions + 1``.
+    """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     cdt = x.dtype
 
     if cfg.mla:
         return _mla_forward(x, p, cfg, positions, cache=cache,
-                            q_offset=q_offset, kv_len=kv_len)
+                            q_offset=q_offset, kv_len=kv_len,
+                            slot_positions=slot_positions)
 
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(cdt))
     k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(cdt))
@@ -185,6 +192,27 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
     v = annotate(v, ("batch", "seq", "kv_heads", "head_dim"))
 
     new_cache = None
+    if slot_positions is not None:
+        if window is not None:
+            raise NotImplementedError(
+                "per-slot decode over ring-buffer window caches")
+        # Scatter this step's K/V to each row's own write position, then
+        # attend with a per-row valid length.  Row arithmetic is identical
+        # to the scalar-offset decode path (same einsums, same masked
+        # softmax), which is what makes continuous batching token-exact
+        # against sequential generate().
+        b_idx = jnp.arange(B)
+        ck = cache["k"].at[b_idx, slot_positions].set(
+            k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[b_idx, slot_positions].set(
+            v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        out = attn_lib.attention(
+            q, ck.astype(cdt), cv.astype(cdt), causal=False,
+            kv_len=slot_positions + 1, chunk_q=cfg.attn_chunk,
+            unroll=cfg.unroll_scans,
+            logits_dtype=jnp.dtype(cfg.attn_logits_dtype))
+        return _attn_out(out, p, cfg, cdt), new_cache
     if cache is not None:
         # cache: {"k": (B, Smax, KV, hd), "v": ...} — window caches are ring
         # buffers of size ``window`` (slot = abs_pos % window).
@@ -255,7 +283,8 @@ def _ring_window_attend(q, ck, cv, kpos_abs, q_offset, cfg):
     return out.reshape(B, S, H, hd)
 
 
-def _mla_forward(x, p, cfg, positions, *, cache=None, q_offset=0, kv_len=None):
+def _mla_forward(x, p, cfg, positions, *, cache=None, q_offset=0, kv_len=None,
+                 slot_positions=None):
     """DeepSeek-V3 Multi-head Latent Attention (arXiv:2412.19437)."""
     B, S, D = x.shape
     cdt = x.dtype
@@ -275,6 +304,20 @@ def _mla_forward(x, p, cfg, positions, *, cache=None, q_offset=0, kv_len=None):
                     theta=cfg.rope_theta)[:, :, 0]
 
     new_cache = None
+    if slot_positions is not None:
+        # continuous-batching decode: per-row latent-cache scatter + the
+        # absorbed-weight attention with per-row valid lengths
+        b_idx = jnp.arange(B)
+        cc = cache["ckv"].at[b_idx, slot_positions].set(
+            ckv[:, 0].astype(cache["ckv"].dtype))
+        cr = cache["kr"].at[b_idx, slot_positions].set(
+            kr[:, 0].astype(cache["kr"].dtype))
+        new_cache = {"ckv": cc, "kr": cr}
+        out = _mla_absorbed_decode(
+            q_nope, q_rope, cc.astype(cdt), cr.astype(cdt), p, cfg,
+            kv_len=slot_positions + 1)
+        y = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
+        return y, new_cache
     if cache is not None:
         cc, cr = cache["ckv"], cache["kr"]
         cc = jax.lax.dynamic_update_slice_in_dim(
@@ -335,8 +378,12 @@ def _mla_absorbed_decode(q_nope, q_rope, ckv, kr, p, cfg, *, kv_len):
     logits += jnp.einsum("bqhd,bsd->bhqs", q_rope, kr,
                          preferred_element_type=jnp.float32)
     logits *= (dn + cfg.qk_rope_dim) ** -0.5
-    mask = jnp.arange(ckv.shape[1]) < kv_len
-    logits = jnp.where(mask[None, None, None], logits, attn_lib.NEG_INF)
+    kvl = jnp.asarray(kv_len)
+    if kvl.ndim == 0:
+        mask = (jnp.arange(ckv.shape[1]) < kvl)[None, None, None]
+    else:  # per-row lengths (continuous batching)
+        mask = (jnp.arange(ckv.shape[1])[None] < kvl[:, None])[:, None, None]
+    logits = jnp.where(mask, logits, attn_lib.NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(ckv.dtype)
     o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv_n)  # (B,1,H,R)
     w_uv = p["w_uv"].astype(ckv.dtype).reshape(R, H, dv)
@@ -345,10 +392,11 @@ def _mla_absorbed_decode(q_nope, q_rope, ckv, kr, p, cfg, *, kv_len):
 
 
 def _block(x, bp, cfg, positions, *, moe, cache=None, q_offset=0,
-           window=None):
+           window=None, slot_positions=None):
     h, new_cache = _attn_forward(
         apply_norm(x, bp["ln1"], cfg.norm), bp["attn"], cfg, positions,
-        cache=cache, q_offset=q_offset, window=window)
+        cache=cache, q_offset=q_offset, window=window,
+        slot_positions=slot_positions)
     x = x + h
     hin = apply_norm(x, bp["ln2"], cfg.norm)
     if moe:
@@ -360,7 +408,8 @@ def _block(x, bp, cfg, positions, *, moe, cache=None, q_offset=0,
     return x, aux, new_cache
 
 
-def _run_group(x, group, cfg, positions, *, moe, caches=None, q_offset=0):
+def _run_group(x, group, cfg, positions, *, moe, caches=None, q_offset=0,
+               slot_positions=None):
     """Scan a stacked block group. caches: stacked (n, ...) or None."""
     def body(carry, xs):
         xc, aux_sum = carry
@@ -371,7 +420,8 @@ def _run_group(x, group, cfg, positions, *, moe, caches=None, q_offset=0):
             return (xc, aux_sum + aux), None
         bp, cache_l = xs
         xc, aux, nc = _block(xc, bp, cfg, positions, moe=moe, cache=cache_l,
-                             q_offset=q_offset, window=cfg.window)
+                             q_offset=q_offset, window=cfg.window,
+                             slot_positions=slot_positions)
         return (xc, aux_sum + aux), nc
 
     if cfg.remat == "block":
@@ -541,7 +591,55 @@ def decode_step(params, tokens, pos, cache, cfg):
     Returns (logits (B, V), new_cache).
     """
     batch = {"tokens": tokens[:, None]}
+    if cfg.learned_pos:
+        # absolute learned positions must track the decode offset (rope
+        # models get this through q_offset already)
+        batch["positions"] = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
     logits, cache = _forward_cached(params, batch, cfg, cache, q_offset=pos)
+    return logits[:, -1], cache
+
+
+def prefill_full(params, batch, cfg, cache):
+    """Prefill returning logits at EVERY prompt position: (B, S, V).
+
+    The continuous-batching engine pads prompts to a bucket length to bound
+    prefill recompiles; it reads the logits at each request's true last
+    prompt token, so it needs the whole sequence of logits.
+    """
+    return _forward_cached(params, batch, cfg, cache, q_offset=0)
+
+
+def _forward_cached_slots(params, batch, cfg, cache, slot_positions):
+    x = embed_inputs(params, batch, cfg)
+    B, S = x.shape[:2]
+    positions = slot_positions[:, None]
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, S))
+    new_cache = {}
+    if "dense_blocks" in params:
+        x, _, nc = _run_group(x, params["dense_blocks"], cfg, positions,
+                              moe=False, caches=cache["dense"],
+                              slot_positions=slot_positions)
+        new_cache["dense"] = nc
+    if "moe_blocks" in params:
+        x, _, nc = _run_group(x, params["moe_blocks"], cfg, positions,
+                              moe=True, caches=cache["moe"],
+                              slot_positions=slot_positions)
+        new_cache["moe"] = nc
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return _head(params, x, cfg), new_cache
+
+
+def decode_step_slots(params, tokens, positions, cache, cfg):
+    """Continuous-batching decode: one token per slot at per-slot lengths.
+
+    tokens: (B,) int32 — the last generated token of each slot;
+    positions: (B,) int32 — each slot's current length (the write position
+    of this step's K/V).  Returns (logits (B, V), new_cache).
+    """
+    batch = {"tokens": tokens[:, None], "positions": positions[:, None]}
+    logits, cache = _forward_cached_slots(params, batch, cfg, cache,
+                                          positions)
     return logits[:, -1], cache
 
 

@@ -1,0 +1,4 @@
+"""Continuous-batching serving (slot-pool scheduler over family caches)."""
+from repro.serve.engine import ContinuousBatchingEngine, Request
+
+__all__ = ["ContinuousBatchingEngine", "Request"]

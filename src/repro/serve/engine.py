@@ -1,0 +1,279 @@
+"""Continuous-batching serve engine.
+
+The naive loop in ``launch/serve.py`` runs one fixed batch lock-step:
+every sequence prefills together, decodes together, and the batch ends
+when the *longest* request finishes.  Under real traffic (mixed prompt
+lengths, mixed generation lengths, asynchronous arrivals) that wastes
+most decode FLOPs on finished or not-yet-admitted rows.
+
+This engine serves a *stream* of requests through a fixed-capacity slot
+pool instead:
+
+  * ``Request``       — prompt + max_new_tokens (+ optional eos, arrival
+                        time for trace replay);
+  * slot cache pool   — one ``fam.init_cache(cfg, capacity, max_len)``
+                        allocation; row ``i`` is an independent sequence
+                        slot that is initialized at admission, read/written
+                        per-step at its own length, and zero-evicted at
+                        retirement;
+  * admission (FIFO)  — waiting requests claim free slots; admission
+                        prefils the prompt into a single-row cache (padded
+                        to ``prefill_bucket`` to bound recompiles) and
+                        scatters the row into the pool;
+  * step loop         — one batched slot-decode over the whole pool per
+                        step, retiring finished sequences and backfilling
+                        their slots with newly admitted ones.  The decode
+                        step compiles exactly once (fixed capacity), no
+                        matter how sequences come and go.
+
+Invariant (tested in ``tests/test_serve_engine.py``): greedy tokens are
+*exactly* the sequential ``generate()`` tokens for every request, for any
+interleaving — per-row decode arithmetic is identical to the scalar-offset
+path, and masked (softmax-zero) cache positions contribute exact zeros.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_family
+from repro.train.steps import make_prefill_full_step, make_slot_decode_step
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_engine_fns(cfg):
+    """Shared jitted (prefill_full, slot_decode, write_slot, evict_slot)
+    per config: every engine instance over the same frozen config reuses
+    one compile cache.  The cache-pool argument is donated throughout —
+    the engine always rebinds the returned pool, so scatter/evict update
+    in place instead of copying the whole pool each step."""
+    prefill = jax.jit(make_prefill_full_step(cfg), donate_argnums=(2,))
+    decode = jax.jit(make_slot_decode_step(cfg), donate_argnums=(3,))
+    write = jax.jit(lambda pool, row, slot: jax.tree.map(
+        lambda p, r: p.at[:, slot].set(r[:, 0]), pool, row),
+        donate_argnums=(0,))
+    evict = jax.jit(lambda pool, slot: jax.tree.map(
+        lambda p: p.at[:, slot].set(0), pool), donate_argnums=(0,))
+    return prefill, decode, write, evict
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request."""
+    uid: int
+    prompt: np.ndarray  # (P,) int32 prompt tokens
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    arrival: float = 0.0  # seconds since trace start (trace replay only)
+
+
+@dataclasses.dataclass
+class _Sequence:
+    """In-flight state of an admitted request."""
+    req: Request
+    slot: int
+    pos: int  # current length == write position of the next decode step
+    tokens: List[int]
+    t_first: float = 0.0  # wall time of first token (admission prefill)
+    t_done: float = 0.0
+
+
+class ContinuousBatchingEngine:
+    """Slot-pool continuous batching over a family's cache layout.
+
+    Supports the transformer family's standard KV and MLA latent caches
+    (ring-buffer window caches and recurrent states are not slot-addressable
+    by position yet).
+    """
+
+    def __init__(self, cfg, params, *, capacity: int = 8,
+                 max_len: int = 256, prefill_bucket: int = 16):
+        if cfg.family != "transformer":
+            raise NotImplementedError(
+                f"continuous batching supports the transformer family only "
+                f"(got {cfg.family!r})")
+        if cfg.window:
+            raise NotImplementedError(
+                "ring-buffer window caches are not slot-addressable")
+        if not cfg.causal or cfg.continuous_inputs:
+            # bucket-padded prefill positions would be visible to
+            # bidirectional attention, silently breaking token-exactness
+            raise NotImplementedError(
+                "continuous batching requires a causal token LM "
+                f"(causal={cfg.causal}, "
+                f"continuous_inputs={cfg.continuous_inputs})")
+        limit = cfg.max_seq_len
+        if cfg.learned_pos:
+            limit = min(limit, cfg.learned_pos)
+        if max_len > limit:
+            # beyond this, position lookups clamp silently instead of erroring
+            raise ValueError(
+                f"max_len {max_len} exceeds the model's position range "
+                f"{limit}")
+        self.cfg = cfg
+        self.params = params
+        self.fam = get_family(cfg)
+        self.capacity = capacity
+        self.max_len = max_len
+        self.prefill_bucket = prefill_bucket
+
+        self.pool = self.fam.init_cache(cfg, capacity, max_len)
+        self.free: List[int] = list(range(capacity))[::-1]  # pop -> slot 0..
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.active: Dict[int, _Sequence] = {}
+        self.finished: Dict[int, np.ndarray] = {}
+        self.retired: List[_Sequence] = []  # kept for latency accounting
+        self._seen_uids: set = set()
+        self.n_decode_steps = 0
+        self.n_prefills = 0
+
+        # _write_slot scatters one prefilled row (batch=1 cache) into pool
+        # slot ``slot``, overwriting the whole row — a reused slot can never
+        # see the previous tenant's KV
+        (self._prefill, self._decode, self._write_slot,
+         self._evict_slot) = _jitted_engine_fns(cfg)
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: Request):
+        if req.uid in self._seen_uids:
+            raise ValueError(f"request uid {req.uid} already submitted")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.uid}: max_new_tokens must be >= 1 "
+                "(prefill always emits the first token)")
+        if len(req.prompt) < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt {len(req.prompt)} + "
+                f"{req.max_new_tokens} new tokens exceeds max_len "
+                f"{self.max_len}")
+        self._seen_uids.add(req.uid)
+        self.waiting.append(req)
+
+    def _bucketed(self, n: int) -> int:
+        b = self.prefill_bucket
+        return min(-(-n // b) * b, self.max_len)
+
+    def _admit(self, req: Request):
+        slot = self.free.pop()
+        P = len(req.prompt)
+        padded = np.zeros((1, self._bucketed(P)), np.int32)
+        padded[0, :P] = req.prompt
+        # pad-tail cache entries are garbage but never visible: each decode
+        # step overwrites its own position before the per-row length mask
+        # reaches it
+        row = self.fam.init_cache(self.cfg, 1, self.max_len)
+        logits, row = self._prefill(self.params, {"tokens": jnp.asarray(padded)},
+                                    row)
+        first = int(jnp.argmax(logits[0, P - 1]))
+        self.pool = self._write_slot(self.pool, row, jnp.int32(slot))
+        self.n_prefills += 1
+        seq = _Sequence(req, slot, pos=P, tokens=[first],
+                        t_first=time.monotonic())
+        self.active[slot] = seq
+        self._finish_if_done(seq, first)
+
+    # ------------------------------------------------------------- lifecycle
+    # Retirement zero-evicts the slot even though admission's full-row
+    # overwrite already guarantees correctness: in multi-tenant serving a
+    # retired request's KV (derived from its prompt) must not outlive the
+    # request in device memory.  With donated buffers this is an in-place
+    # write of one slot, not a pool copy.
+    def _finish_if_done(self, seq: _Sequence, last_token: int):
+        done = (len(seq.tokens) >= seq.req.max_new_tokens
+                or (seq.req.eos_id is not None
+                    and last_token == seq.req.eos_id))
+        if not done:
+            return
+        seq.t_done = time.monotonic()
+        self.finished[seq.req.uid] = np.asarray(seq.tokens, np.int32)
+        self.retired.append(seq)
+        del self.active[seq.slot]
+        self.pool = self._evict_slot(self.pool, jnp.int32(seq.slot))
+        self.free.append(seq.slot)
+
+    def _pop_arrived(self, now: Optional[float]):
+        """First waiting request that has arrived (submission order may
+        differ from arrival order — scan, don't just peek the head)."""
+        for i, r in enumerate(self.waiting):
+            if now is None or r.arrival <= now:
+                del self.waiting[i]
+                return r
+        return None
+
+    # ------------------------------------------------------------- step loop
+    def step(self, now: Optional[float] = None):
+        """One engine iteration: admit arrived requests into free slots,
+        then one batched decode over all in-flight slots."""
+        while self.free and self.waiting:
+            req = self._pop_arrived(now)
+            if req is None:
+                break
+            self._admit(req)
+        if not self.active:
+            return
+
+        tokens = np.zeros((self.capacity,), np.int32)
+        positions = np.zeros((self.capacity,), np.int32)
+        for slot, seq in self.active.items():
+            tokens[slot] = seq.tokens[-1]
+            positions[slot] = seq.pos
+        nxt, self.pool = self._decode(self.params, jnp.asarray(tokens),
+                                      jnp.asarray(positions), self.pool)
+        self.n_decode_steps += 1
+        nxt = np.asarray(nxt)
+        for slot, seq in list(self.active.items()):
+            seq.pos += 1
+            tok = int(nxt[slot])
+            seq.tokens.append(tok)
+            self._finish_if_done(seq, tok)
+
+    def run(self, requests=None, *, realtime: bool = False):
+        """Serve until every submitted request finishes.
+
+        ``realtime=True`` replays ``Request.arrival`` offsets against the
+        wall clock (benchmark traces); otherwise arrivals are ignored and
+        admission is purely slot-limited FIFO.
+
+        Returns {uid: np.ndarray of generated tokens} for the requests that
+        finished during THIS call (``self.finished`` keeps the full
+        history across calls).
+        """
+        already = set(self.finished)
+        for r in requests or ():
+            self.submit(r)
+        t0 = time.monotonic()
+        while self.waiting or self.active:
+            if realtime:
+                now = time.monotonic() - t0
+                if not self.active and self.waiting:
+                    next_arrival = min(r.arrival for r in self.waiting)
+                    if next_arrival > now:
+                        time.sleep(next_arrival - now)
+                        now = time.monotonic() - t0
+                self.step(now=now)
+            else:
+                self.step()
+        return {uid: toks for uid, toks in self.finished.items()
+                if uid not in already}
+
+    def drain(self):
+        """Return and clear all accumulated results and latency history.
+
+        A long-lived server must call this periodically — ``finished``,
+        ``retired``, and the uid-dedup set otherwise grow with every
+        request ever served.  Drained uids become submittable again.
+        """
+        out = self.finished
+        self.finished = {}
+        self.retired = []
+        self._seen_uids.difference_update(out)
+        return out

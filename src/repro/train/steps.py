@@ -114,6 +114,41 @@ def make_decode_step(cfg, sample: str = "greedy"):
     return decode_fn
 
 
+def make_prefill_full_step(cfg):
+    """Prefill that returns logits at every position (continuous batching:
+    prompts are padded to bucket lengths, the engine reads each request's
+    true last-token logits)."""
+    fam = get_family(cfg)
+    if not hasattr(fam, "prefill_full"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no full-logits prefill")
+
+    def prefill_fn(params, batch, cache):
+        return fam.prefill_full(params, batch, cfg, cache)
+
+    return prefill_fn
+
+
+def make_slot_decode_step(cfg):
+    """Continuous-batching decode: every batch row is an independent cache
+    slot at its own sequence length.
+
+    fn(params, tokens (B,), positions (B,), cache) -> (next (B,), cache).
+    """
+    fam = get_family(cfg)
+    if not hasattr(fam, "decode_step_slots"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no slot-indexed decode path")
+
+    def decode_fn(params, tokens, positions, cache):
+        logits, cache = fam.decode_step_slots(params, tokens, positions,
+                                              cache, cfg)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return decode_fn
+
+
 def make_grow_step(gop, cfg_tgt, opt_cfg: OptimizerConfig,
                    n_microbatches: int = 1):
     """Operator-training step (paper Eq. 7): one Adam update on the TR cores.

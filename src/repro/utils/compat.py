@@ -1,0 +1,70 @@
+"""jax version-compat shims.
+
+The repo targets the modern jax API (explicit mesh axis types, top-level
+``jax.shard_map``, abstract-mesh introspection) but must also run on older
+releases (0.4.x) where those surfaces either do not exist or live under
+``jax.experimental``.  Every call site goes through these helpers so the
+version split lives in exactly one file.
+"""
+from __future__ import annotations
+
+import jax
+
+# ``hasattr`` is safe here: jax's deprecation module raises AttributeError
+# for names that have never existed on this version.
+HAS_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+
+
+def get_abstract_mesh():
+    """Current abstract mesh, or None on jax versions without the concept."""
+    if not HAS_ABSTRACT_MESH:
+        return None
+    return jax.sharding.get_abstract_mesh()
+
+
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` across jax versions.
+
+    Newer jax wants explicit ``axis_types`` (``jax.sharding.AxisType.Auto``)
+    to keep meshes in auto-sharding mode; older releases predate ``AxisType``
+    and their ``make_mesh`` takes no such kwarg — plain construction is
+    already Auto there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map_compat(f, mesh, *, in_specs, out_specs, manual_axes=None):
+    """``shard_map`` with optional partial-manual axes, on any jax.
+
+    ``manual_axes=None`` maps every mesh axis (classic shard_map); otherwise
+    only the named axes are manual and the rest stay under the automatic
+    partitioner.  New jax expresses this as ``axis_names=<manual>``, old jax
+    as the complement ``auto=<rest>``.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {}
+        if manual_axes is not None:
+            kw["axis_names"] = set(manual_axes)
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False, **kw)
+        except TypeError:
+            # intermediate versions export top-level shard_map but keep the
+            # old check_rep=/auto= signature
+            pass
+    from jax.experimental.shard_map import shard_map as sm_old
+    kw = {}
+    if manual_axes is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+        if auto:
+            kw["auto"] = auto
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False, **kw)

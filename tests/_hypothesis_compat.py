@@ -1,0 +1,117 @@
+"""``hypothesis`` shim: property tests degrade to fixed parametrized cases.
+
+The container image does not ship ``hypothesis``; importing it at module
+scope used to kill collection of three whole test modules.  Import
+``given``/``settings``/``st`` from here instead:
+
+  * when hypothesis IS installed, the real objects are re-exported and the
+    property tests run at full strength;
+  * when it is absent, ``@given`` expands each strategy into a small
+    deterministic case set (both bounds + seeded draws) via
+    ``pytest.mark.parametrize``, and ``@settings`` is a no-op.
+
+The fallback draws are seeded from the test name, so the sweep is stable
+across runs and machines.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    N_FALLBACK_EXAMPLES = 6  # 2 bound cases + 4 seeded draws per test
+
+    class _Strategy:
+        def low(self):
+            raise NotImplementedError
+
+        def high(self):
+            raise NotImplementedError
+
+        def draw(self, rng):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def low(self):
+            return self.lo
+
+        def high(self):
+            return self.hi
+
+        def draw(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def low(self):
+            return self.lo
+
+        def high(self):
+            return self.hi
+
+        def draw(self, rng):
+            return self.lo + (self.hi - self.lo) * rng.random()
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elems):
+            self.elems = list(elems)
+
+        def low(self):
+            return self.elems[0]
+
+        def high(self):
+            return self.elems[-1]
+
+        def draw(self, rng):
+            return rng.choice(self.elems)
+
+    class _Booleans(_SampledFrom):
+        def __init__(self):
+            super().__init__([False, True])
+
+    class st:  # noqa: N801  (mimics ``hypothesis.strategies`` module)
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elems):
+            return _SampledFrom(elems)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+    def settings(*_args, **_kw):
+        return lambda fn: fn
+
+    def given(**strategies):
+        names = sorted(strategies)
+
+        def deco(fn):
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            cases = [
+                tuple(strategies[n].low() for n in names),
+                tuple(strategies[n].high() for n in names),
+            ]
+            for _ in range(N_FALLBACK_EXAMPLES - len(cases)):
+                cases.append(tuple(strategies[n].draw(rng) for n in names))
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+        return deco

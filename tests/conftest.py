@@ -1,0 +1,36 @@
+"""Shared fixtures + marker registration for the tier-1 suite.
+
+Keeping fixture configs tiny (2 layers, d_model 64) is what holds the
+default ``pytest -x -q`` run under the ~2-minute budget; anything that
+genuinely needs scale belongs behind ``@pytest.mark.slow``.
+"""
+import jax
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import get_family
+
+
+@pytest.fixture(scope="session")
+def qwen_smoke_cfg():
+    """Tiny dense decoder (qkv-bias, tied embeddings) — the default serve
+    test subject."""
+    return get_config("qwen1.5-0.5b-smoke")
+
+
+@pytest.fixture(scope="session")
+def qwen_smoke_params(qwen_smoke_cfg):
+    fam = get_family(qwen_smoke_cfg)
+    return fam.init(jax.random.PRNGKey(0), qwen_smoke_cfg)
+
+
+@pytest.fixture(scope="session")
+def gpt_micro_cfg():
+    """The paper's micro GPT (learned positions) — growth-source model."""
+    return get_config("gpt-micro")
+
+
+@pytest.fixture(scope="session")
+def gpt_micro_big_cfg():
+    """Growth target for gpt-micro (2x layers, 2x width)."""
+    return get_config("gpt-micro-big")

@@ -17,6 +17,15 @@ from repro.train.steps import make_train_step
 
 B, S = 2, 32
 
+# recurrent/scan-heavy families compile slowly on CPU; their train steps run
+# in the slow tier (forward smoke stays in the default run for all 10)
+_HEAVY_TRAIN = {"recurrentgemma-2b", "xlstm-1.3b", "deepseek-v3-671b",
+                "hubert-xlarge", "yi-9b"}
+_TRAIN_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_TRAIN
+    else pytest.param(a) for a in ARCH_IDS
+]
+
 
 def _batch_for(cfg):
     if cfg.continuous_inputs:
@@ -41,7 +50,7 @@ def test_smoke_forward(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _TRAIN_PARAMS)
 def test_smoke_train_step(arch):
     cfg = get_config(f"{arch}-smoke")
     fam = get_family(cfg)

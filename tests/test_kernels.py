@@ -16,8 +16,16 @@ def _tol(dtype):
         else dict(rtol=2e-4, atol=2e-4)
 
 
-@pytest.mark.parametrize("n,d1,d2", [(2, 128, 128), (3, 256, 128),
-                                     (1, 128, 384)])
+def _p(*vals, slow=False):
+    """One representative case per kernel runs in the default tier; the
+    full interpret-mode sweep stays available under ``-m slow``."""
+    return pytest.param(*vals, marks=pytest.mark.slow) if slow \
+        else pytest.param(*vals)
+
+
+@pytest.mark.parametrize("n,d1,d2", [_p(2, 128, 128, slow=True),
+                                     _p(3, 256, 128),
+                                     _p(1, 128, 384, slow=True)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_tr_sandwich(n, d1, d2, dtype):
     kx, ki, ko = jax.random.split(jax.random.PRNGKey(0), 3)
@@ -31,9 +39,9 @@ def test_tr_sandwich(n, d1, d2, dtype):
                                np.asarray(yr, np.float32), **_tol(dtype))
 
 
-@pytest.mark.parametrize("b,h,kv,s,hd", [(1, 4, 4, 256, 64),
-                                         (2, 4, 2, 256, 64),
-                                         (1, 8, 1, 128, 128)])
+@pytest.mark.parametrize("b,h,kv,s,hd", [_p(1, 4, 4, 256, 64, slow=True),
+                                         _p(2, 4, 2, 256, 64),
+                                         _p(1, 8, 1, 128, 128, slow=True)])
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_attention(b, h, kv, s, hd, causal, dtype):
@@ -48,9 +56,10 @@ def test_flash_attention(b, h, kv, s, hd, causal, dtype):
                                np.asarray(orf, np.float32), **_tol(dtype))
 
 
-@pytest.mark.parametrize("b,h,kv,s,hd,kvlen", [(2, 8, 2, 512, 64, 300),
-                                               (1, 4, 4, 256, 128, 256),
-                                               (2, 16, 1, 512, 64, 1)])
+@pytest.mark.parametrize("b,h,kv,s,hd,kvlen",
+                         [_p(2, 8, 2, 512, 64, 300, slow=True),
+                          _p(1, 4, 4, 256, 128, 256),
+                          _p(2, 16, 1, 512, 64, 1, slow=True)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_decode_attention(b, h, kv, s, hd, kvlen, dtype):
     keys = jax.random.split(jax.random.PRNGKey(2), 3)
@@ -63,7 +72,35 @@ def test_decode_attention(b, h, kv, s, hd, kvlen, dtype):
                                np.asarray(orf, np.float32), **_tol(dtype))
 
 
-@pytest.mark.parametrize("b,s,w", [(2, 256, 256), (1, 128, 512)])
+def test_decode_attention_per_row_lengths():
+    """Vector kv_len (continuous batching): every row masks with its own
+    length and matches the scalar-length kernel run row by row."""
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    b, h, kv, s, hd = 3, 4, 2, 256, 64
+    q = jax.random.normal(keys[0], (b, h, hd))
+    k = jax.random.normal(keys[1], (b, kv, s, hd))
+    v = jax.random.normal(keys[2], (b, kv, s, hd))
+    lens = jnp.asarray([1, 100, 256], jnp.int32)
+    o = ops.decode_attention(q, k, v, lens, mode="interpret", bk=64)
+    orf = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-4,
+                               atol=2e-4)
+    for i in range(b):
+        oi = ops.decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                  int(lens[i]), mode="interpret", bk=64)
+        np.testing.assert_allclose(np.asarray(o[i]), np.asarray(oi[0]),
+                                   rtol=2e-5, atol=2e-5, err_msg=f"row {i}")
+    # idle slots (kv_len == 0) return zeros in kernel and oracle alike
+    zlens = jnp.asarray([0, 1, 256], jnp.int32)
+    oz = ops.decode_attention(q, k, v, zlens, mode="interpret", bk=64)
+    assert (np.asarray(oz[0]) == 0).all()
+    np.testing.assert_allclose(
+        np.asarray(oz), np.asarray(ref.decode_attention_ref(q, k, v, zlens)),
+        rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("b,s,w", [_p(2, 256, 256),
+                                   _p(1, 128, 512, slow=True)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("with_h0", [True, False])
 def test_rglru_scan(b, s, w, dtype, with_h0):

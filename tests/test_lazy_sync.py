@@ -4,9 +4,12 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
+@pytest.mark.slow
 def test_lazy_sync_matches_baseline():
     code = """
         import jax, jax.numpy as jnp, numpy as np
@@ -27,8 +30,8 @@ def test_lazy_sync_matches_baseline():
         init_fn, _ = make_optimizer(opt_cfg)
         batch = {"tokens": jnp.asarray(lm_batch(cfg.vocab_size, 16, 32))}
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         rules = sharding_rules_for_mesh(mesh, fsdp=True)
         p_sh = params_shardings(fam.param_specs(cfg), mesh, rules,
                                 shapes=params)

@@ -51,6 +51,7 @@ def test_dense_gqa():
     _run(cfg)
 
 
+@pytest.mark.slow
 def test_moe():
     cfg = ModelConfig(name="m", n_layers=4, d_model=64, n_heads=4,
                       n_kv_heads=4, d_ff=128, vocab_size=97, moe=True,
@@ -69,6 +70,7 @@ def test_mla():
     _run(cfg)
 
 
+@pytest.mark.slow
 def test_local_window():
     cfg = ModelConfig(name="w", n_layers=2, d_model=64, n_heads=4,
                       n_kv_heads=1, d_ff=128, vocab_size=97, window=6,
@@ -76,6 +78,7 @@ def test_local_window():
     _run(cfg)
 
 
+@pytest.mark.slow
 def test_griffin():
     cfg = ModelConfig(name="g", family="griffin", n_layers=5, d_model=64,
                       n_heads=4, n_kv_heads=1, d_ff=128, vocab_size=97,
@@ -84,6 +87,7 @@ def test_griffin():
     _run(cfg, atol=5e-4)
 
 
+@pytest.mark.slow
 def test_xlstm():
     cfg = ModelConfig(name="x", family="xlstm", n_layers=4, d_model=64,
                       n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=97,

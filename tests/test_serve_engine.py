@@ -1,0 +1,182 @@
+"""Continuous-batching engine invariants.
+
+The engine's contract is *token-exactness*: for any interleaving of
+admissions, retirements, and slot reuse, every request's greedy tokens
+equal what the sequential ``generate()`` loop produces for that request
+alone.  Per-row decode arithmetic is identical to the scalar-offset path
+and masked cache positions contribute exact softmax zeros, so this holds
+bit-for-bit, not just approximately.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import lm_batch
+from repro.launch.serve import build_params, generate
+from repro.serve import ContinuousBatchingEngine, Request
+
+MAX_LEN = 32
+
+
+def _mixed_requests(cfg, specs, *, uid0=0, seed0=50):
+    """specs: list of (prompt_len, max_new_tokens)."""
+    reqs = []
+    for i, (plen, gen) in enumerate(specs):
+        prompt = lm_batch(cfg.vocab_size, 1, plen, seed=seed0 + i)[0]
+        reqs.append(Request(uid=uid0 + i, prompt=prompt,
+                            max_new_tokens=gen))
+    return reqs
+
+
+def _sequential_baseline(cfg, params, reqs):
+    """Each request alone through the naive prefill+decode loop, with the
+    same cache length the engine uses (padding never changes the math —
+    masked positions are exact softmax zeros — but equal shapes make the
+    comparison airtight)."""
+    out = {}
+    for r in reqs:
+        toks = generate(cfg, params, jnp.asarray(r.prompt)[None],
+                        max_new_tokens=r.max_new_tokens, max_len=MAX_LEN)
+        out[r.uid] = np.asarray(toks[0])
+    return out
+
+
+def test_continuous_matches_sequential_mixed_trace(qwen_smoke_cfg,
+                                                   qwen_smoke_params):
+    """(a) a mixed-length trace through a small slot pool reproduces the
+    sequential tokens exactly — including requests that queue behind a full
+    pool and land in recycled slots."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    specs = [(3, 6), (9, 2), (5, 8), (12, 4), (4, 7), (7, 1), (6, 5)]
+    reqs = _mixed_requests(cfg, specs)
+    engine = ContinuousBatchingEngine(cfg, params, capacity=3,
+                                      max_len=MAX_LEN, prefill_bucket=4)
+    got = engine.run(reqs)
+    want = _sequential_baseline(cfg, params, reqs)
+    assert set(got) == set(want)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid], err_msg=f"uid {uid}")
+    # the pool was actually oversubscribed (slots reused), not one wave
+    assert len(reqs) > engine.capacity
+
+
+def test_slot_eviction_no_stale_kv(qwen_smoke_cfg, qwen_smoke_params):
+    """(b) a slot's next tenant sees exactly what it would in a fresh
+    engine — eviction + admission-overwrite never leak the previous
+    sequence's KV."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    wave1 = _mixed_requests(cfg, [(8, 6), (11, 6)], uid0=0, seed0=10)
+    wave2 = _mixed_requests(cfg, [(5, 8), (9, 3)], uid0=100, seed0=90)
+
+    used = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                    max_len=MAX_LEN, prefill_bucket=4)
+    used.run(wave1)  # dirty every slot
+    got = used.run(wave2)  # same slots, recycled
+
+    fresh = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                     max_len=MAX_LEN, prefill_bucket=4)
+    want = fresh.run(_mixed_requests(cfg, [(5, 8), (9, 3)], uid0=100,
+                                     seed0=90))
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid], err_msg=f"uid {uid}")
+    # and both equal the sequential tokens
+    seq = _sequential_baseline(cfg, params, wave2)
+    for uid in seq:
+        np.testing.assert_array_equal(got[uid], seq[uid], err_msg=f"uid {uid}")
+
+
+def test_continuous_matches_sequential_mla():
+    """The MLA latent-cache slot path (per-row scatter + absorbed-weight
+    decode with per-row lengths) is token-exact too."""
+    from repro.configs.base import ModelConfig
+    from repro.models import get_family
+    cfg = ModelConfig(name="mla-serve", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=4, d_ff=128, vocab_size=97, mla=True,
+                      q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                      qk_rope_dim=8, v_head_dim=16, attn_chunk=8)
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    reqs = _mixed_requests(cfg, [(4, 5), (9, 3), (6, 6)], seed0=40)
+    engine = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                      max_len=MAX_LEN, prefill_bucket=4)
+    got = engine.run(reqs)
+    want = _sequential_baseline(cfg, params, reqs)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid], err_msg=f"uid {uid}")
+
+
+def test_serves_mango_grown_params(gpt_micro_big_cfg):
+    """(c) the engine serves Mango-grown params with the same consistency
+    invariant as ``test_serve_consistency``: continuous tokens == the
+    sequential prefill/decode tokens, on weights produced by the paper's
+    operator."""
+    cfg = gpt_micro_big_cfg
+    params = build_params(cfg, grow_from="gpt-micro", grow_method="mango")
+    specs = [(4, 6), (10, 3), (6, 5)]
+    reqs = _mixed_requests(cfg, specs, seed0=70)
+    engine = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                      max_len=MAX_LEN, prefill_bucket=4)
+    got = engine.run(reqs)
+    want = _sequential_baseline(cfg, params, reqs)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid], err_msg=f"uid {uid}")
+
+
+def test_rejects_oversized_and_wrong_family(qwen_smoke_cfg,
+                                            qwen_smoke_params):
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    engine = ContinuousBatchingEngine(cfg, params, capacity=1,
+                                      max_len=MAX_LEN)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        engine.submit(Request(uid=0,
+                              prompt=np.zeros(MAX_LEN, np.int32),
+                              max_new_tokens=4))
+    engine.run([Request(uid=7, prompt=np.zeros(4, np.int32),
+                        max_new_tokens=2)])
+    with pytest.raises(ValueError, match="already submitted"):
+        engine.submit(Request(uid=7, prompt=np.zeros(4, np.int32),
+                              max_new_tokens=2))
+    # drain clears history and frees the uid for reuse
+    out = engine.drain()
+    assert set(out) == {7} and not engine.finished and not engine.retired
+    engine.run([Request(uid=7, prompt=np.zeros(4, np.int32),
+                        max_new_tokens=2)])
+    from repro.configs.base import get_config
+    griffin = get_config("recurrentgemma-2b-smoke")
+    with pytest.raises(NotImplementedError):
+        ContinuousBatchingEngine(griffin, {}, capacity=1, max_len=MAX_LEN)
+
+
+def test_admission_by_arrival_not_submission_order(qwen_smoke_cfg,
+                                                   qwen_smoke_params):
+    """A later-submitted but earlier-arriving request must not queue behind
+    an unarrived head-of-line request when slots are free."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    late, early = _mixed_requests(cfg, [(4, 3), (5, 6)], seed0=20)
+    late.arrival, early.arrival = 5.0, 0.1
+    engine = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                      max_len=MAX_LEN, prefill_bucket=4)
+    engine.submit(late)
+    engine.submit(early)
+    engine.step(now=0.2)  # only `early` has arrived
+    assert [s.req.uid for s in engine.active.values()] == [early.uid]
+    engine.step(now=6.0)
+    assert {s.req.uid for s in engine.active.values()} == {late.uid,
+                                                           early.uid}
+
+
+def test_eos_early_exit_frees_slot(qwen_smoke_cfg, qwen_smoke_params):
+    """EOS retirement must free the slot early and still produce a prefix
+    of the no-EOS sequential tokens."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    reqs = _mixed_requests(cfg, [(6, 10), (8, 10)], seed0=30)
+    base = _sequential_baseline(cfg, params, reqs)
+    # pick the first request's 3rd token as its EOS so it retires early
+    eos = int(base[0][2])
+    reqs[0].eos_id = eos
+    engine = ContinuousBatchingEngine(cfg, params, capacity=1,
+                                      max_len=MAX_LEN, prefill_bucket=4)
+    got = engine.run(reqs)
+    stop = int(np.argmax(base[0] == eos)) + 1
+    np.testing.assert_array_equal(got[0], base[0][:stop])
+    np.testing.assert_array_equal(got[1], base[1])

@@ -81,6 +81,7 @@ def _run_subprocess(code, devices=8):
     return out.stdout
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """The pjit train step on an 8-device mesh computes the same loss as
     1 device (data parallel + tensor parallel correctness)."""
@@ -106,8 +107,8 @@ def test_sharded_train_step_matches_single_device():
         # single device result
         p1, o1, m1 = jax.jit(step)(params, opt, batch, jnp.int32(1))
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         rules = sharding_rules_for_mesh(mesh)
         p_sh = params_shardings(fam.param_specs(cfg), mesh, rules,
                                 shapes=params)
@@ -162,8 +163,8 @@ def test_gradient_compression():
         from repro.distributed.compression import (make_crosspod_psum,
             init_error_feedback)
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
         grads = {"w": jnp.asarray(np.random.default_rng(0)
                                   .standard_normal((8, 16)), jnp.float32)}
         # replicated grads: psum/n == identity -> lossless check of plumbing

@@ -14,6 +14,7 @@ from repro.optim import OptimizerConfig, make_optimizer
 from repro.train.steps import make_train_step
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     _, hist = train("gpt-micro", steps=80, batch=8, seq=64, lr=1e-3,
                     warmup=5, log_every=10, log_fn=lambda *_: None)
@@ -29,6 +30,7 @@ def test_resume_from_checkpoint(tmp_path):
     assert hist[0]["step"] >= 20  # continued, not restarted
 
 
+@pytest.mark.slow
 def test_grown_run_beats_scratch_early(tmp_path):
     src_dir = str(tmp_path / "gpt-micro")
     train("gpt-micro", steps=60, batch=4, seq=48, lr=2e-3, warmup=5,
