@@ -1,17 +1,26 @@
-"""Serving benchmark: continuous batching vs the naive lock-step loop.
+"""Serving benchmark: naive lock-step vs per-token vs macro-step engines.
 
 A Poisson arrival trace of mixed-length requests is replayed against
-wall-clock time through both engines:
+wall-clock time through three serving paths:
 
   * naive      — requests are collected into fixed batches; each batch
                  waits for all its members to arrive, then runs prefill +
                  lock-step decode to the LONGEST request's length
                  (``launch/serve.generate``); the next batch waits behind;
-  * continuous — the slot-pool engine admits each request as soon as a
-                 slot frees up and decodes all in-flight slots in one step.
+  * per-token  — the slot-pool engine with K=1 and no readback pipeline:
+                 one jitted decode dispatch AND one blocking host sync per
+                 generated token (the PR 1 engine's host-interaction
+                 pattern);
+  * macro-step — the slot-pool engine with K>1: K decode steps run on
+                 device under one ``lax.scan`` dispatch, readback is
+                 double-buffered, and admission is batched — the host
+                 syncs ~1/K times per token.
 
-Reported: total tok/s and per-request completion-latency percentiles
-(p50/p99, seconds from arrival to last token).
+The arrival rate is set high enough that the engines (not the trace) are
+the bottleneck, so tok/s compares engine speed.  Reported per engine:
+total tok/s, per-request completion-latency percentiles (p50/p99, seconds
+from arrival to last token), and host syncs per generated token.  Results
+are also written to ``BENCH_serve_engine.json`` at the repo root.
 
 Run:  PYTHONPATH=src:. python benchmarks/bench_serve_engine.py [--quick]
 """
@@ -24,11 +33,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import write_bench_json
 from repro.configs.base import get_config
 from repro.data.synthetic import lm_batch
 from repro.launch.serve import generate
 from repro.models import get_family
 from repro.serve import ContinuousBatchingEngine, Request
+
+K_SWEEP = (4, 8, 16)
 
 
 def poisson_trace(cfg, n, *, rate_hz, seed=0, max_prompt=24, max_gen=16):
@@ -61,6 +73,24 @@ def warm_naive(cfg, params, reqs, batch):
                  max_new_tokens=gmax)
 
 
+def warm_engine(cfg, params, reqs, *, capacity, max_len, k):
+    """Compile every shape a (cfg, k) engine can hit on this trace: the
+    macro loop, and each (pow2 admission-group size, prefill bucket)
+    prefill/scatter pair."""
+    warm = ContinuousBatchingEngine(cfg, params, capacity=capacity,
+                                    max_len=max_len, k=k)
+    buckets = sorted({warm._bucketed(len(r.prompt)) for r in reqs})
+    uid = -1
+    n = 1
+    while n <= capacity:
+        for b in buckets:
+            warm.run([Request(uid=uid - i, prompt=np.ones(b, np.int32),
+                              max_new_tokens=2) for i in range(n)])
+            uid -= n
+        n *= 2
+    return warm
+
+
 def bench_naive(cfg, params, reqs, batch):
     t0 = time.monotonic()
     lat = []
@@ -82,56 +112,79 @@ def bench_naive(cfg, params, reqs, batch):
         for r in chunk:
             lat.append(done - r.arrival)
             n_tok += r.max_new_tokens
-    return n_tok / (time.monotonic() - t0), _pctl(lat)
+    tput = n_tok / (time.monotonic() - t0)
+    p50, p99 = _pctl(lat)
+    return {"tok_per_s": tput, "p50_s": p50, "p99_s": p99}
 
 
-def bench_continuous(cfg, params, reqs, *, capacity, max_len):
+def bench_engine(cfg, params, reqs, *, capacity, max_len, k, pipeline):
     engine = ContinuousBatchingEngine(cfg, params, capacity=capacity,
-                                      max_len=max_len)
+                                      max_len=max_len, k=k)
     t0 = time.monotonic()
-    engine.run(reqs, realtime=True)
+    engine.run(reqs, realtime=True, pipeline=pipeline)
     dt = time.monotonic() - t0
     n_tok = sum(len(v) for v in engine.finished.values())
     by_uid = {r.uid: r for r in reqs}
     # t_done stamps are absolute monotonic times; arrivals are trace offsets
     lat = [(s.t_done - t0) - by_uid[s.req.uid].arrival
            for s in engine.retired]
-    return n_tok / dt, _pctl(lat), engine
+    p50, p99 = _pctl(lat)
+    assert n_tok == engine.n_tokens  # engine accounting matches outputs
+    return {"tok_per_s": n_tok / dt, "p50_s": p50, "p99_s": p99,
+            "host_syncs_per_token": engine.n_host_syncs / max(n_tok, 1),
+            "decode_dispatches": engine.n_decode_dispatches,
+            "prefill_batches": engine.n_prefills, "k": k}
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, write_json: bool = True):
     cfg = get_config("qwen1.5-0.5b-smoke")
     fam = get_family(cfg)
     params = fam.init(jax.random.PRNGKey(0), cfg)
-    n = 12 if quick else 32
+    n = 12 if quick else 64
     capacity = 4
     max_len = 48
-    reqs = poisson_trace(cfg, n, rate_hz=8.0)
+    k_sweep = K_SWEEP[:2] if quick else K_SWEEP
+    # arrival rate far above the service rate, so the engine — not the
+    # trace — is the bottleneck and tok/s measures serving speed, not load
+    reqs = poisson_trace(cfg, n, rate_hz=2000.0,
+                         max_gen=16 if quick else 24)
 
-    # warm both engines' compile caches outside the timed runs — one
-    # request per distinct prefill-bucket shape the trace will hit
+    # warm every engine's compile cache outside the timed runs
     warm_naive(cfg, params, reqs, capacity)
-    warm = ContinuousBatchingEngine(cfg, params, capacity=capacity,
-                                    max_len=max_len)
-    buckets = {warm._bucketed(len(r.prompt)) for r in reqs}
-    warm.run([Request(uid=-1 - i, prompt=np.ones(b, np.int32),
-                      max_new_tokens=2)
-              for i, b in enumerate(sorted(buckets))])
+    for k in (1,) + tuple(k_sweep):
+        warm_engine(cfg, params, reqs, capacity=capacity, max_len=max_len,
+                    k=k)
 
-    tput_n, (p50_n, p99_n) = bench_naive(cfg, params, reqs, batch=capacity)
-    tput_c, (p50_c, p99_c), engine = bench_continuous(
-        cfg, params, reqs, capacity=capacity, max_len=max_len)
+    def fresh():
+        return [Request(uid=r.uid, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens, arrival=r.arrival)
+                for r in reqs]
 
-    print(f"serve_naive,tok_per_s,{tput_n:.1f}")
-    print(f"serve_naive,p50_s,{p50_n:.3f}")
-    print(f"serve_naive,p99_s,{p99_n:.3f}")
-    print(f"serve_continuous,tok_per_s,{tput_c:.1f}")
-    print(f"serve_continuous,p50_s,{p50_c:.3f}")
-    print(f"serve_continuous,p99_s,{p99_c:.3f}")
-    print(f"serve_continuous,decode_steps,{engine.n_decode_steps}")
+    results = {"naive": bench_naive(cfg, params, fresh(), batch=capacity),
+               "pertoken": bench_engine(cfg, params, fresh(),
+                                        capacity=capacity, max_len=max_len,
+                                        k=1, pipeline=False)}
+    for k in k_sweep:
+        results[f"macro_k{k}"] = bench_engine(
+            cfg, params, fresh(), capacity=capacity, max_len=max_len, k=k,
+            pipeline=True)
+
+    for name, m in results.items():
+        print(f"serve_{name},tok_per_s,{m['tok_per_s']:.1f}")
+        print(f"serve_{name},p50_s,{m['p50_s']:.3f}")
+        print(f"serve_{name},p99_s,{m['p99_s']:.3f}")
+        if "host_syncs_per_token" in m:
+            print(f"serve_{name},host_syncs_per_token,"
+                  f"{m['host_syncs_per_token']:.3f}")
+    if write_json:
+        path = write_bench_json("serve_engine", results)
+        print(f"# wrote {path}")
+    return results
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--no-json", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick, write_json=not a.no_json)

@@ -1,6 +1,8 @@
 """Shared benchmark harness helpers."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -11,6 +13,27 @@ from repro.data.synthetic import lm_data_iter
 from repro.models import get_family
 from repro.optim import OptimizerConfig, make_optimizer
 from repro.train.steps import make_train_step
+
+
+def write_bench_json(name, metrics, root=None):
+    """Write ``BENCH_<name>.json`` at the repo root (machine-readable perf
+    trajectory — one file per benchmark, overwritten per run).
+
+    ``metrics`` is any JSON-serializable dict; the payload records the
+    backend and a wall-clock stamp so trajectory tooling can order runs.
+    Returns the written path.
+    """
+    root = pathlib.Path(root) if root else \
+        pathlib.Path(__file__).resolve().parent.parent
+    path = root / f"BENCH_{name}.json"
+    payload = {
+        "name": name,
+        "backend": jax.default_backend(),
+        "unix_time": round(time.time(), 3),
+        "metrics": metrics,
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path
 
 
 def time_call(fn, *args, reps=3, warmup=1):

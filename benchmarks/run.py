@@ -2,6 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV lines.  ``--quick`` shrinks training
 budgets (CI); default budgets reproduce the EXPERIMENTS.md numbers.
+Benchmarks with machine-readable output (currently ``serve``) also write
+``BENCH_<name>.json`` at the repo root via ``common.write_bench_json``.
 """
 from __future__ import annotations
 

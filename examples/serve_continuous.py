@@ -47,8 +47,9 @@ def main():
     dt = time.time() - t0
     n_tok = sum(len(v) for v in out.values())
     print(f"{cfg.name:24s} served {len(reqs)} mixed-length requests "
-          f"({n_tok} tokens) in {dt:.2f}s via {engine.n_decode_steps} "
-          f"batched decode steps")
+          f"({n_tok} tokens) in {dt:.2f}s via {engine.n_decode_dispatches} "
+          f"on-device macro-steps ({engine.n_host_syncs / max(n_tok, 1):.2f} "
+          f"host syncs/token)")
     for uid in (0, 1):
         print(f"  req {uid}: {out[uid]}")
 

@@ -60,13 +60,42 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _pick_bk(S: int, cap: int = 256) -> int:
+    """Largest divisor of the cache length that is <= ``cap``.
+
+    The grid tiles the cache axis in ``bk``-sized blocks, so ``bk`` must
+    divide S exactly; short caches (e.g. a serve pool with max_len=48)
+    simply use one block instead of failing the old ``S % 256 == 0``
+    assert and falling back to the reference path.  Cache lengths whose
+    only divisors in range are tiny (e.g. prime S > 256) would silently
+    degenerate into a pathological one-element-block grid — fail loudly
+    instead and let the caller pad the cache or pass ``bk``.
+    """
+    bk = min(S, cap)
+    while S % bk:
+        bk -= 1
+    if S > cap and bk < 32:
+        raise ValueError(
+            f"cache length {S} has no block divisor in [32, {cap}]; pad "
+            f"the cache axis or pass bk explicitly")
+    return bk
+
+
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
-def decode_attention(q, k, v, kv_len, *, bk=256, interpret=False):
+def decode_attention(q, k, v, kv_len, *, bk=None, interpret=False):
     """q: (B, H, hd); k, v: (B, KV, S, hd); kv_len: scalar or (B,) vector
-    of valid lengths -> (B, H, hd)."""
+    of valid lengths -> (B, H, hd).
+
+    ``bk=None`` auto-picks the largest cache-axis block <= 256 that divides
+    S.  Rows with ``kv_len == 0`` (idle/finished slots — the
+    continuous-batching macro-step's ``done`` rows, folded into kv_len by
+    ``ops.decode_attention``) skip every KV block and return exact zeros.
+    """
     B, H, hd = q.shape
     KV, S = k.shape[1], k.shape[2]
     g = H // KV
+    if bk is None:
+        bk = _pick_bk(S)
     assert S % bk == 0, (S, bk)
     qg = q.reshape(B, KV, g, hd)
     scale = hd ** -0.5

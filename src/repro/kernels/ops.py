@@ -12,6 +12,7 @@ compiled (interpret=False) — callers select via ``mode``:
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode
@@ -40,7 +41,12 @@ def flash_attention(q, k, v, *, causal=True, mode="auto", **kw):
     return _flash(q, k, v, causal=causal, interpret=_interp(mode), **kw)
 
 
-def decode_attention(q, k, v, kv_len, *, mode="auto", **kw):
+def decode_attention(q, k, v, kv_len, *, mode="auto", done=None, **kw):
+    if done is not None:
+        # the macro-step done vector is sugar for kv_len = 0 — apply it
+        # here so the reference oracle and the kernel agree on done rows
+        kv_len = jnp.where(done, 0, jnp.broadcast_to(
+            jnp.asarray(kv_len, jnp.int32).reshape(-1), (q.shape[0],)))
     if mode == "reference":
         return ref.decode_attention_ref(q, k, v, kv_len)
     return _decode(q, k, v, kv_len, interpret=_interp(mode), **kw)

@@ -92,6 +92,9 @@ def main():
                     help="continuous: decode slot-pool size")
     ap.add_argument("--max-len", type=int, default=0,
                     help="continuous: per-slot cache length (0 = auto)")
+    ap.add_argument("--k", type=int, default=8,
+                    help="continuous: macro-step length (decode tokens per "
+                         "on-device dispatch; host syncs once per K tokens)")
     ap.add_argument("--grow", default=None, metavar="SRC_ARCH",
                     help="grow params from this source arch before serving")
     ap.add_argument("--grow-method", default="mango",
@@ -121,7 +124,7 @@ def main():
 
     max_len = args.max_len or (args.prompt_len + args.gen)
     engine = ContinuousBatchingEngine(cfg, params, capacity=args.capacity,
-                                      max_len=max_len)
+                                      max_len=max_len, k=args.k)
     rng = np.random.default_rng(0)
     reqs = []
     for uid in range(args.batch):
@@ -136,8 +139,9 @@ def main():
     n_tok = sum(len(v) for v in out.values())
     print(f"[continuous] served {len(reqs)} requests / {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, "
-          f"{engine.n_decode_steps} decode steps, "
-          f"{engine.n_prefills} prefills)")
+          f"{engine.n_decode_dispatches} macro-steps of K={args.k}, "
+          f"{engine.n_prefills} prefill batches, "
+          f"{engine.n_host_syncs / max(n_tok, 1):.2f} host syncs/token)")
     for uid in sorted(out)[:2]:
         print(uid, out[uid])
 

@@ -101,6 +101,13 @@ def attention(q, k, v, *, causal=True, window=None, q_offset=0,
         mask = _band_mask(qpos, kpos, causal=causal, window=window,
                           kv_len=kv_len)
         out = _sdpa(qg, k, v, mask, scale, logits_dtype)
+        if kv_len is not None and jnp.ndim(kv_len) == 1:
+            # rows with kv_len == 0 (idle/finished slots in the macro-step
+            # decode loop) have every key masked; the softmax degenerates to
+            # uniform garbage, so pin them to the Pallas decode kernel's
+            # semantics: exact zeros.
+            out = jnp.where(
+                (jnp.asarray(kv_len) > 0)[:, None, None, None, None], out, 0)
         return out.reshape(B, Sq, H, v.shape[-1])
 
     if Sq % chunk_q:  # ragged tail (e.g. MTP's S-1 stream): pad + slice

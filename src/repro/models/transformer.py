@@ -146,14 +146,29 @@ def _split_heads(x, n, hd):
     return x.reshape(B, S, n, hd)
 
 
+def _slot_kv_len(slot_positions, slot_done):
+    """Per-row valid cache length for the slot-decode path.
+
+    Finished/idle rows (``slot_done``) get ``kv_len == 0`` — the same
+    short-circuit the Pallas decode kernel takes for idle slots — so the
+    macro-step's no-op steps skip their attention reads entirely.
+    """
+    kv = slot_positions + 1
+    if slot_done is None:
+        return kv
+    return jnp.where(slot_done, 0, kv)
+
+
 def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
-                  kv_len=None, window=None, slot_positions=None):
+                  kv_len=None, window=None, slot_positions=None,
+                  slot_done=None):
     """Returns (out, new_cache_entry). x: (B,S,D).
 
     ``slot_positions`` (B,) switches to the continuous-batching decode path:
     S must be 1, each batch row is an independent cache slot at its own
     length, the new K/V is scattered to ``cache[b, slot_positions[b]]`` and
-    attention masks per-row to ``kv_len = slot_positions + 1``.
+    attention masks per-row to ``kv_len = slot_positions + 1`` — or 0 for
+    rows flagged in ``slot_done`` (macro-step no-op rows).
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -162,7 +177,8 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
     if cfg.mla:
         return _mla_forward(x, p, cfg, positions, cache=cache,
                             q_offset=q_offset, kv_len=kv_len,
-                            slot_positions=slot_positions)
+                            slot_positions=slot_positions,
+                            slot_done=slot_done)
 
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(cdt))
     k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(cdt))
@@ -200,7 +216,10 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
         # attend with a per-row valid length.  Row arithmetic is identical
         # to the scalar-offset decode path (same einsums, same masked
         # softmax), which is what makes continuous batching token-exact
-        # against sequential generate().
+        # against sequential generate().  Done rows scatter too: their
+        # token and position are frozen, so the write re-stores the exact
+        # same K/V values (a bit-identical no-op) while kv_len == 0 keeps
+        # the position unreadable.
         b_idx = jnp.arange(B)
         ck = cache["k"].at[b_idx, slot_positions].set(
             k[:, 0].astype(cache["k"].dtype))
@@ -209,8 +228,8 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
         new_cache = {"k": ck, "v": cv}
         out = attn_lib.attention(
             q, ck.astype(cdt), cv.astype(cdt), causal=False,
-            kv_len=slot_positions + 1, chunk_q=cfg.attn_chunk,
-            unroll=cfg.unroll_scans,
+            kv_len=_slot_kv_len(slot_positions, slot_done),
+            chunk_q=cfg.attn_chunk, unroll=cfg.unroll_scans,
             logits_dtype=jnp.dtype(cfg.attn_logits_dtype))
         return _attn_out(out, p, cfg, cdt), new_cache
     if cache is not None:
@@ -284,7 +303,7 @@ def _ring_window_attend(q, ck, cv, kpos_abs, q_offset, cfg):
 
 
 def _mla_forward(x, p, cfg, positions, *, cache=None, q_offset=0, kv_len=None,
-                 slot_positions=None):
+                 slot_positions=None, slot_done=None):
     """DeepSeek-V3 Multi-head Latent Attention (arXiv:2412.19437)."""
     B, S, D = x.shape
     cdt = x.dtype
@@ -315,7 +334,7 @@ def _mla_forward(x, p, cfg, positions, *, cache=None, q_offset=0, kv_len=None,
         new_cache = {"ckv": cc, "kr": cr}
         out = _mla_absorbed_decode(
             q_nope, q_rope, cc.astype(cdt), cr.astype(cdt), p, cfg,
-            kv_len=slot_positions + 1)
+            kv_len=_slot_kv_len(slot_positions, slot_done))
         y = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
         return y, new_cache
     if cache is not None:
@@ -388,15 +407,20 @@ def _mla_absorbed_decode(q_nope, q_rope, ckv, kr, p, cfg, *, kv_len):
     o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv_n)  # (B,1,H,R)
     w_uv = p["w_uv"].astype(ckv.dtype).reshape(R, H, dv)
     out = jnp.einsum("bqhr,rhv->bqhv", o_lat, w_uv)
+    if kvl.ndim == 1:
+        # fully-masked rows (kv_len == 0: idle/finished slots) degenerate
+        # to a uniform softmax over the cache — pin them to the exact
+        # zeros the standard attention path and Pallas kernel return
+        out = jnp.where((kvl > 0)[:, None, None, None], out, 0)
     return out.reshape(B, 1, H * dv)
 
 
 def _block(x, bp, cfg, positions, *, moe, cache=None, q_offset=0,
-           window=None, slot_positions=None):
+           window=None, slot_positions=None, slot_done=None):
     h, new_cache = _attn_forward(
         apply_norm(x, bp["ln1"], cfg.norm), bp["attn"], cfg, positions,
         cache=cache, q_offset=q_offset, window=window,
-        slot_positions=slot_positions)
+        slot_positions=slot_positions, slot_done=slot_done)
     x = x + h
     hin = apply_norm(x, bp["ln2"], cfg.norm)
     if moe:
@@ -409,7 +433,7 @@ def _block(x, bp, cfg, positions, *, moe, cache=None, q_offset=0,
 
 
 def _run_group(x, group, cfg, positions, *, moe, caches=None, q_offset=0,
-               slot_positions=None):
+               slot_positions=None, slot_done=None):
     """Scan a stacked block group. caches: stacked (n, ...) or None."""
     def body(carry, xs):
         xc, aux_sum = carry
@@ -421,7 +445,8 @@ def _run_group(x, group, cfg, positions, *, moe, caches=None, q_offset=0,
         bp, cache_l = xs
         xc, aux, nc = _block(xc, bp, cfg, positions, moe=moe, cache=cache_l,
                              q_offset=q_offset, window=cfg.window,
-                             slot_positions=slot_positions)
+                             slot_positions=slot_positions,
+                             slot_done=slot_done)
         return (xc, aux_sum + aux), nc
 
     if cfg.remat == "block":
@@ -609,7 +634,8 @@ def prefill_full(params, batch, cfg, cache):
     return _forward_cached(params, batch, cfg, cache, q_offset=0)
 
 
-def _forward_cached_slots(params, batch, cfg, cache, slot_positions):
+def _forward_cached_slots(params, batch, cfg, cache, slot_positions,
+                          slot_done=None):
     x = embed_inputs(params, batch, cfg)
     B, S = x.shape[:2]
     positions = slot_positions[:, None]
@@ -619,27 +645,33 @@ def _forward_cached_slots(params, batch, cfg, cache, slot_positions):
     if "dense_blocks" in params:
         x, _, nc = _run_group(x, params["dense_blocks"], cfg, positions,
                               moe=False, caches=cache["dense"],
-                              slot_positions=slot_positions)
+                              slot_positions=slot_positions,
+                              slot_done=slot_done)
         new_cache["dense"] = nc
     if "moe_blocks" in params:
         x, _, nc = _run_group(x, params["moe_blocks"], cfg, positions,
                               moe=True, caches=cache["moe"],
-                              slot_positions=slot_positions)
+                              slot_positions=slot_positions,
+                              slot_done=slot_done)
         new_cache["moe"] = nc
     x = apply_norm(x, params["final_norm"], cfg.norm)
     return _head(params, x, cfg), new_cache
 
 
-def decode_step_slots(params, tokens, positions, cache, cfg):
+def decode_step_slots(params, tokens, positions, cache, cfg, done=None):
     """Continuous-batching decode: one token per slot at per-slot lengths.
 
     tokens: (B,) int32 — the last generated token of each slot;
     positions: (B,) int32 — each slot's current length (the write position
-    of this step's K/V).  Returns (logits (B, V), new_cache).
+    of this step's K/V);
+    done: optional (B,) bool — finished/idle rows; they attend with
+    ``kv_len == 0`` (the idle-row short-circuit) and their cache write is a
+    bit-identical re-store, so the macro-step scan can keep running them as
+    no-ops.  Returns (logits (B, V), new_cache).
     """
     batch = {"tokens": tokens[:, None], "positions": positions[:, None]}
     logits, cache = _forward_cached_slots(params, batch, cfg, cache,
-                                          positions)
+                                          positions, slot_done=done)
     return logits[:, -1], cache
 
 

@@ -1,4 +1,4 @@
-"""Continuous-batching serve engine.
+"""Continuous-batching serve engine with on-device macro-step decode.
 
 The naive loop in ``launch/serve.py`` runs one fixed batch lock-step:
 every sequence prefills together, decodes together, and the batch ends
@@ -13,23 +13,37 @@ pool instead:
                         time for trace replay);
   * slot cache pool   — one ``fam.init_cache(cfg, capacity, max_len)``
                         allocation; row ``i`` is an independent sequence
-                        slot that is initialized at admission, read/written
-                        per-step at its own length, and zero-evicted at
-                        retirement;
-  * admission (FIFO)  — waiting requests claim free slots; admission
-                        prefils the prompt into a single-row cache (padded
-                        to ``prefill_bucket`` to bound recompiles) and
-                        scatters the row into the pool;
-  * step loop         — one batched slot-decode over the whole pool per
-                        step, retiring finished sequences and backfilling
-                        their slots with newly admitted ones.  The decode
-                        step compiles exactly once (fixed capacity), no
-                        matter how sequences come and go.
+                        slot, initialized at admission, advanced per-step
+                        at its own length, and zero-evicted at retirement;
+  * batched admission — all newly-arrived requests sharing a prefill
+                        bucket prefill in ONE multi-row call (group size
+                        padded to a power of two to bound recompiles;
+                        padding rows scatter to an out-of-range slot index
+                        and are dropped) and scatter into their slots in
+                        one donated update;
+  * macro-step loop   — ``make_slot_decode_loop(cfg, k)`` runs K decode
+                        steps per dispatch entirely on device under a
+                        ``lax.scan``: per-slot eos / max-new-token
+                        stopping is applied INSIDE the scan (finished rows
+                        freeze and become bit-exact no-ops with
+                        ``kv_len == 0``), and the host reads back a
+                        ``(K, capacity)`` token block — one host↔device
+                        sync per K tokens instead of one per token;
+  * double buffering  — ``run()`` dispatches macro-block N+1 (pure
+                        device-side dataflow, no sync) before blocking on
+                        block N's tokens, so readback overlaps compute.
+
+All decode state (tokens, positions, remaining budget, eos ids, done
+mask) is persistent and device-resident; the host touches it only through
+incremental scatters at admission/eviction — there is no per-step
+O(capacity) host rebuild and no per-token ``np.asarray``.
 
 Invariant (tested in ``tests/test_serve_engine.py``): greedy tokens are
 *exactly* the sequential ``generate()`` tokens for every request, for any
-interleaving — per-row decode arithmetic is identical to the scalar-offset
-path, and masked (softmax-zero) cache positions contribute exact zeros.
+interleaving and any K — per-row decode arithmetic is identical to the
+scalar-offset path, masked (softmax-zero) cache positions contribute
+exact zeros, and a finished row's frozen (token, position) makes its
+no-op steps re-store bit-identical K/V.
 """
 from __future__ import annotations
 
@@ -44,24 +58,58 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import get_family
-from repro.train.steps import make_prefill_full_step, make_slot_decode_step
+from repro.train.steps import make_prefill_admit_step, make_slot_decode_loop
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_engine_fns(cfg):
-    """Shared jitted (prefill_full, slot_decode, write_slot, evict_slot)
-    per config: every engine instance over the same frozen config reuses
-    one compile cache.  The cache-pool argument is donated throughout —
-    the engine always rebinds the returned pool, so scatter/evict update
-    in place instead of copying the whole pool each step."""
-    prefill = jax.jit(make_prefill_full_step(cfg), donate_argnums=(2,))
-    decode = jax.jit(make_slot_decode_step(cfg), donate_argnums=(3,))
-    write = jax.jit(lambda pool, row, slot: jax.tree.map(
-        lambda p, r: p.at[:, slot].set(r[:, 0]), pool, row),
-        donate_argnums=(0,))
-    evict = jax.jit(lambda pool, slot: jax.tree.map(
-        lambda p: p.at[:, slot].set(0), pool), donate_argnums=(0,))
-    return prefill, decode, write, evict
+def _jitted_engine_fns(cfg, k):
+    """Shared jitted (macro_loop, prefill_admit, admit, evict) per
+    (config, K): every engine instance over the same frozen config and
+    macro length reuses one compile cache.  Pool and state buffers are
+    donated throughout — the engine always rebinds the returned handles,
+    so every update is in place instead of a pool copy.
+
+    ``admit`` and ``evict`` take slot-index vectors that may contain the
+    out-of-range index ``capacity`` (padding rows); jnp scatters drop
+    out-of-bounds updates, so padded rows are no-ops by construction.
+    """
+    loop = jax.jit(make_slot_decode_loop(cfg, k),
+                   donate_argnums=(1, 2, 3, 5, 6))
+    prefill = jax.jit(make_prefill_admit_step(cfg), donate_argnums=(3,))
+
+    def admit_fn(pool, rows, state, slots, first, plens, rem0, eos_new):
+        pool = jax.tree.map(lambda p, r: p.at[:, slots].set(r), pool, rows)
+        tokens, positions, remaining, eos, done = state
+        tokens = tokens.at[slots].set(first)
+        positions = positions.at[slots].set(plens)
+        remaining = remaining.at[slots].set(rem0)
+        eos = eos.at[slots].set(eos_new)
+        # a request can finish at its very first (prefill) token
+        done = done.at[slots].set((first == eos_new) | (rem0 <= 0))
+        return pool, (tokens, positions, remaining, eos, done)
+
+    def evict_fn(pool, state, slots):
+        pool = jax.tree.map(lambda p: p.at[:, slots].set(0), pool)
+        tokens, positions, remaining, eos, done = state
+        tokens = tokens.at[slots].set(0)
+        positions = positions.at[slots].set(0)
+        remaining = remaining.at[slots].set(0)
+        eos = eos.at[slots].set(-1)
+        done = done.at[slots].set(True)
+        return pool, (tokens, positions, remaining, eos, done)
+
+    # rows (arg 1) is NOT donated: a (n, ...)-shaped buffer can never alias
+    # the (capacity, ...) pool, so donating it only produces warnings
+    admit = jax.jit(admit_fn, donate_argnums=(0, 2))
+    evict = jax.jit(evict_fn, donate_argnums=(0, 1))
+    return loop, prefill, admit, evict
 
 
 @dataclasses.dataclass
@@ -91,10 +139,16 @@ class ContinuousBatchingEngine:
     Supports the transformer family's standard KV and MLA latent caches
     (ring-buffer window caches and recurrent states are not slot-addressable
     by position yet).
+
+    ``k`` is the macro-step length: decode tokens per on-device dispatch.
+    Larger K amortizes host work and syncs over more tokens; admission
+    (and therefore TTFT for queued requests) happens only at block
+    boundaries, so K trades admission latency against decode throughput.
+    ``k=1`` recovers per-token behaviour through the same code path.
     """
 
     def __init__(self, cfg, params, *, capacity: int = 8,
-                 max_len: int = 256, prefill_bucket: int = 16):
+                 max_len: int = 256, prefill_bucket: int = 16, k: int = 8):
         if cfg.family != "transformer":
             raise NotImplementedError(
                 f"continuous batching supports the transformer family only "
@@ -109,6 +163,8 @@ class ContinuousBatchingEngine:
                 "continuous batching requires a causal token LM "
                 f"(causal={cfg.causal}, "
                 f"continuous_inputs={cfg.continuous_inputs})")
+        if k < 1:
+            raise ValueError(f"macro-step length k must be >= 1 (got {k})")
         limit = cfg.max_seq_len
         if cfg.learned_pos:
             limit = min(limit, cfg.learned_pos)
@@ -123,22 +179,33 @@ class ContinuousBatchingEngine:
         self.capacity = capacity
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket
+        self.k = k
 
         self.pool = self.fam.init_cache(cfg, capacity, max_len)
+        # persistent device-resident decode state: (tokens, positions,
+        # remaining, eos_ids, done) — idle slots are done
+        self._state = (jnp.zeros((capacity,), jnp.int32),
+                       jnp.zeros((capacity,), jnp.int32),
+                       jnp.zeros((capacity,), jnp.int32),
+                       jnp.full((capacity,), -1, jnp.int32),
+                       jnp.ones((capacity,), bool))
         self.free: List[int] = list(range(capacity))[::-1]  # pop -> slot 0..
         self.waiting: collections.deque[Request] = collections.deque()
         self.active: Dict[int, _Sequence] = {}
         self.finished: Dict[int, np.ndarray] = {}
         self.retired: List[_Sequence] = []  # kept for latency accounting
         self._seen_uids: set = set()
-        self.n_decode_steps = 0
-        self.n_prefills = 0
+        self._evict_pending: List[int] = []
+        # (block, valid, [(slot, uid)]) of dispatched-but-unread macro steps
+        self._inflight: collections.deque = collections.deque()
+        self.n_decode_dispatches = 0
+        self.n_decode_steps = 0  # dispatches * k (scan steps executed)
+        self.n_prefills = 0  # admission-batch prefill dispatches
+        self.n_host_syncs = 0  # blocking device->host reads
+        self.n_tokens = 0  # generated tokens (incl. prefill first tokens)
 
-        # _write_slot scatters one prefilled row (batch=1 cache) into pool
-        # slot ``slot``, overwriting the whole row — a reused slot can never
-        # see the previous tenant's KV
-        (self._prefill, self._decode, self._write_slot,
-         self._evict_slot) = _jitted_engine_fns(cfg)
+        (self._loop, self._prefill, self._admit,
+         self._evict) = _jitted_engine_fns(cfg, k)
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request):
@@ -162,44 +229,6 @@ class ContinuousBatchingEngine:
         b = self.prefill_bucket
         return min(-(-n // b) * b, self.max_len)
 
-    def _admit(self, req: Request):
-        slot = self.free.pop()
-        P = len(req.prompt)
-        padded = np.zeros((1, self._bucketed(P)), np.int32)
-        padded[0, :P] = req.prompt
-        # pad-tail cache entries are garbage but never visible: each decode
-        # step overwrites its own position before the per-row length mask
-        # reaches it
-        row = self.fam.init_cache(self.cfg, 1, self.max_len)
-        logits, row = self._prefill(self.params, {"tokens": jnp.asarray(padded)},
-                                    row)
-        first = int(jnp.argmax(logits[0, P - 1]))
-        self.pool = self._write_slot(self.pool, row, jnp.int32(slot))
-        self.n_prefills += 1
-        seq = _Sequence(req, slot, pos=P, tokens=[first],
-                        t_first=time.monotonic())
-        self.active[slot] = seq
-        self._finish_if_done(seq, first)
-
-    # ------------------------------------------------------------- lifecycle
-    # Retirement zero-evicts the slot even though admission's full-row
-    # overwrite already guarantees correctness: in multi-tenant serving a
-    # retired request's KV (derived from its prompt) must not outlive the
-    # request in device memory.  With donated buffers this is an in-place
-    # write of one slot, not a pool copy.
-    def _finish_if_done(self, seq: _Sequence, last_token: int):
-        done = (len(seq.tokens) >= seq.req.max_new_tokens
-                or (seq.req.eos_id is not None
-                    and last_token == seq.req.eos_id))
-        if not done:
-            return
-        seq.t_done = time.monotonic()
-        self.finished[seq.req.uid] = np.asarray(seq.tokens, np.int32)
-        self.retired.append(seq)
-        del self.active[seq.slot]
-        self.pool = self._evict_slot(self.pool, jnp.int32(seq.slot))
-        self.free.append(seq.slot)
-
     def _pop_arrived(self, now: Optional[float]):
         """First waiting request that has arrived (submission order may
         differ from arrival order — scan, don't just peek the head)."""
@@ -209,39 +238,157 @@ class ContinuousBatchingEngine:
                 return r
         return None
 
-    # ------------------------------------------------------------- step loop
-    def step(self, now: Optional[float] = None):
-        """One engine iteration: admit arrived requests into free slots,
-        then one batched decode over all in-flight slots."""
-        while self.free and self.waiting:
-            req = self._pop_arrived(now)
-            if req is None:
+    def _admit_batch(self, now: Optional[float]):
+        """Admit every arrived request a free slot can take, ONE prefill
+        dispatch + ONE pool/state scatter + ONE host sync per prefill-bucket
+        group — instead of three host syncs per request."""
+        grabbed = []
+        while len(grabbed) < len(self.free):
+            r = self._pop_arrived(now)
+            if r is None:
                 break
-            self._admit(req)
-        if not self.active:
+            grabbed.append(r)
+        if not grabbed:
             return
+        groups: Dict[int, List[Request]] = {}
+        for r in grabbed:
+            groups.setdefault(self._bucketed(len(r.prompt)), []).append(r)
+        for bucket, reqs in sorted(groups.items()):
+            n = len(reqs)
+            npad = _pow2(n)  # bound (group size, bucket) compile count
+            padded = np.zeros((npad, bucket), np.int32)
+            plens = np.ones((npad,), np.int32)
+            rem0 = np.zeros((npad,), np.int32)
+            eos_new = np.full((npad,), -1, np.int32)
+            # padding rows target the out-of-range slot ``capacity``:
+            # their scatters are dropped entirely
+            slots = np.full((npad,), self.capacity, np.int32)
+            for j, r in enumerate(reqs):
+                plens[j] = len(r.prompt)
+                padded[j, :plens[j]] = r.prompt
+                rem0[j] = r.max_new_tokens - 1
+                eos_new[j] = -1 if r.eos_id is None else r.eos_id
+                slots[j] = self.free.pop()
+            rows = self.fam.init_cache(self.cfg, npad, self.max_len)
+            # pad-tail cache entries are garbage but never visible: each
+            # decode step overwrites its own position before the per-row
+            # length mask reaches it
+            first, rows = self._prefill(self.params, jnp.asarray(padded),
+                                        jnp.asarray(plens), rows)
+            self.pool, self._state = self._admit(
+                self.pool, rows, self._state, jnp.asarray(slots), first,
+                jnp.asarray(plens), jnp.asarray(rem0), jnp.asarray(eos_new))
+            self.n_prefills += 1
+            first_host = np.asarray(first)
+            self.n_host_syncs += 1
+            t = time.monotonic()
+            for j, r in enumerate(reqs):
+                seq = _Sequence(r, int(slots[j]), pos=int(plens[j]),
+                                tokens=[int(first_host[j])], t_first=t)
+                self.active[seq.slot] = seq
+                self.n_tokens += 1
+                self._finish_if_done(seq, seq.tokens[-1])
 
-        tokens = np.zeros((self.capacity,), np.int32)
-        positions = np.zeros((self.capacity,), np.int32)
-        for slot, seq in self.active.items():
-            tokens[slot] = seq.tokens[-1]
-            positions[slot] = seq.pos
-        nxt, self.pool = self._decode(self.params, jnp.asarray(tokens),
-                                      jnp.asarray(positions), self.pool)
-        self.n_decode_steps += 1
-        nxt = np.asarray(nxt)
-        for slot, seq in list(self.active.items()):
-            seq.pos += 1
-            tok = int(nxt[slot])
-            seq.tokens.append(tok)
-            self._finish_if_done(seq, tok)
+    # ------------------------------------------------------------- lifecycle
+    def _finish_if_done(self, seq: _Sequence, last_token: int):
+        """Host-side stopping rule — the exact mirror of the in-scan rule
+        (the device marks the row done at the same token)."""
+        done = (len(seq.tokens) >= seq.req.max_new_tokens
+                or (seq.req.eos_id is not None
+                    and last_token == seq.req.eos_id))
+        if not done:
+            return
+        seq.t_done = time.monotonic()
+        self.finished[seq.req.uid] = np.asarray(seq.tokens, np.int32)
+        self.retired.append(seq)
+        del self.active[seq.slot]
+        # the slot re-enters ``free`` only once its eviction has been
+        # APPLIED (_flush_evictions) — handing it out earlier would let a
+        # same-wave admission claim it and then be wiped by the pending
+        # zero-evict
+        self._evict_pending.append(seq.slot)
 
-    def run(self, requests=None, *, realtime: bool = False):
+    def _flush_evictions(self):
+        """Zero-evict retired slots and reset their decode state, batched
+        into one fixed-shape donated scatter (slot list padded to capacity
+        with the dropped out-of-range index — a single compile).
+
+        Even though admission's full-row overwrite already guarantees
+        correctness, in multi-tenant serving a retired request's KV must
+        not outlive the request in device memory; resetting the frozen
+        token also means idle-slot no-op steps derive from token 0, never
+        from a previous tenant's text.
+        """
+        if not self._evict_pending:
+            return
+        slots = np.full((self.capacity,), self.capacity, np.int32)
+        slots[:len(self._evict_pending)] = self._evict_pending
+        self.pool, self._state = self._evict(self.pool, self._state,
+                                             jnp.asarray(slots))
+        self.free.extend(self._evict_pending)
+        self._evict_pending.clear()
+
+    # ------------------------------------------------------------- step loop
+    def _dispatch(self):
+        """Launch one on-device macro step (K decode steps, no sync)."""
+        tokens, positions, remaining, eos_ids, done = self._state
+        (block, valid, tokens, positions, remaining, done,
+         self.pool) = self._loop(self.params, tokens, positions, remaining,
+                                 eos_ids, done, self.pool)
+        self._state = (tokens, positions, remaining, eos_ids, done)
+        self.n_decode_dispatches += 1
+        self.n_decode_steps += self.k
+        live = [(slot, seq.req.uid) for slot, seq in self.active.items()]
+        self._inflight.append((block, valid, live))
+
+    def _process(self, item):
+        """Block on one macro step's token block (the single host sync per
+        K tokens) and advance the host-side sequence records."""
+        block, valid, live = item
+        block, valid = jax.device_get((block, valid))
+        self.n_host_syncs += 1
+        for slot, uid in live:
+            seq = self.active.get(slot)
+            if seq is None or seq.req.uid != uid:
+                # the slot was retired (and possibly re-admitted) while this
+                # block was in flight; its rows were device-done, so the
+                # valid mask is all False for it anyway
+                continue
+            vm = valid[:, slot]
+            nv = int(vm.sum())
+            if nv == 0:
+                continue
+            seq.pos += nv
+            seq.tokens.extend(int(t) for t in block[:, slot][vm])
+            self.n_tokens += nv
+            self._finish_if_done(seq, seq.tokens[-1])
+
+    def step(self, now: Optional[float] = None):
+        """One synchronous engine iteration: evict, admit arrived requests
+        into free slots, run one macro step, and read it back."""
+        self._flush_evictions()
+        self._admit_batch(now)
+        if not self.active and not self._inflight:
+            return
+        if self.active:
+            self._dispatch()
+        while self._inflight:
+            self._process(self._inflight.popleft())
+
+    def run(self, requests=None, *, realtime: bool = False,
+            pipeline: bool = True):
         """Serve until every submitted request finishes.
 
         ``realtime=True`` replays ``Request.arrival`` offsets against the
         wall clock (benchmark traces); otherwise arrivals are ignored and
         admission is purely slot-limited FIFO.
+
+        ``pipeline=True`` double-buffers readback: macro-block N+1 is
+        dispatched (device-side dataflow only) before the host blocks on
+        block N's tokens, so the device never idles on readback.
+        Admissions chain onto the latest dispatched state, which defers a
+        queued request by at most one extra block.  ``pipeline=False``
+        syncs after every block (the per-token engine of PR 1 when k=1).
 
         Returns {uid: np.ndarray of generated tokens} for the requests that
         finished during THIS call (``self.finished`` keeps the full
@@ -251,17 +398,37 @@ class ContinuousBatchingEngine:
         for r in requests or ():
             self.submit(r)
         t0 = time.monotonic()
-        while self.waiting or self.active:
-            if realtime:
-                now = time.monotonic() - t0
-                if not self.active and self.waiting:
-                    next_arrival = min(r.arrival for r in self.waiting)
-                    if next_arrival > now:
-                        time.sleep(next_arrival - now)
-                        now = time.monotonic() - t0
+
+        def wall_now():
+            return time.monotonic() - t0 if realtime else None
+
+        if not pipeline:
+            while self.waiting or self.active or self._inflight:
+                now = wall_now()
+                if realtime and not self.active and self.waiting:
+                    nxt = min(r.arrival for r in self.waiting)
+                    if nxt > now:
+                        time.sleep(nxt - now)
+                        now = wall_now()
                 self.step(now=now)
-            else:
-                self.step()
+        else:
+            while self.waiting or self.active or self._inflight:
+                now = wall_now()
+                if (realtime and not self.active and not self._inflight
+                        and self.waiting):
+                    nxt = min(r.arrival for r in self.waiting)
+                    if nxt > now:
+                        time.sleep(nxt - now)
+                        now = wall_now()
+                self._flush_evictions()
+                self._admit_batch(now)
+                if self.active:
+                    self._dispatch()
+                # block on the OLDEST in-flight block only once a newer one
+                # is already dispatched (or nothing is left to dispatch)
+                if len(self._inflight) >= (2 if self.active else 1):
+                    self._process(self._inflight.popleft())
+        self._flush_evictions()
         return {uid: toks for uid, toks in self.finished.items()
                 if uid not in already}
 

@@ -149,6 +149,79 @@ def make_slot_decode_step(cfg):
     return decode_fn
 
 
+def make_prefill_admit_step(cfg):
+    """Batched admission prefill for the continuous-batching engine.
+
+    fn(params, tokens (N, Sbucket), plens (N,), cache) ->
+        (first (N,) int32, cache)
+
+    All requests of one prefill bucket run as ONE multi-row forward; the
+    first generated token of each row (argmax at its true last prompt
+    position) is computed on device, so admission costs one dispatch per
+    bucket group instead of one prefill + one host argmax per request.
+    """
+    fam = get_family(cfg)
+    if not hasattr(fam, "prefill_full"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no full-logits prefill")
+
+    def prefill_fn(params, tokens, plens, cache):
+        logits, cache = fam.prefill_full(params, {"tokens": tokens}, cfg,
+                                         cache)
+        rows = jnp.arange(tokens.shape[0])
+        first = jnp.argmax(logits[rows, plens - 1], axis=-1).astype(jnp.int32)
+        return first, cache
+
+    return prefill_fn
+
+
+def make_slot_decode_loop(cfg, k: int):
+    """On-device macro-step: K slot-decode steps under one ``lax.scan``.
+
+    fn(params, tokens (B,), positions (B,), remaining (B,), eos_ids (B,),
+       done (B,), cache) ->
+        (block (K, B) int32, valid (K, B) bool,
+         tokens, positions, remaining, done, cache)
+
+    The host syncs once per K generated tokens instead of once per token:
+    eos / max-new-token stopping is applied per slot *inside* the scan.  A
+    row that finishes (or starts the block idle) stops advancing — its
+    position and token freeze, so each further step re-writes the *same*
+    K/V values at the same cache position (a bit-exact no-op) and attends
+    with ``kv_len == 0`` (the idle-row short-circuit in the attention
+    stack).  ``valid[i, b]`` marks whether ``block[i, b]`` is a really
+    generated token; rows emit their eos token as valid and then go quiet.
+
+    ``eos_ids`` uses -1 for "no eos" (token ids are non-negative).
+    ``remaining`` counts decode tokens still owed per row; it hits 0
+    exactly when the row's last owed token is emitted.
+    """
+    fam = get_family(cfg)
+    if not hasattr(fam, "decode_step_slots"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no slot-indexed decode path")
+
+    def loop_fn(params, tokens, positions, remaining, eos_ids, done, cache):
+        def body(carry, _):
+            tokens, positions, remaining, done, cache = carry
+            live = ~done
+            logits, cache = fam.decode_step_slots(
+                params, tokens, positions, cache, cfg, done=done)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tokens = jnp.where(live, nxt, tokens)
+            remaining = jnp.where(live, remaining - 1, remaining)
+            done = done | (live & ((tokens == eos_ids) | (remaining <= 0)))
+            positions = jnp.where(live, positions + 1, positions)
+            return (tokens, positions, remaining, done, cache), (tokens, live)
+
+        carry, (block, valid) = jax.lax.scan(
+            body, (tokens, positions, remaining, done, cache), None, length=k)
+        tokens, positions, remaining, done, cache = carry
+        return block, valid, tokens, positions, remaining, done, cache
+
+    return loop_fn
+
+
 def make_grow_step(gop, cfg_tgt, opt_cfg: OptimizerConfig,
                    n_microbatches: int = 1):
     """Operator-training step (paper Eq. 7): one Adam update on the TR cores.

@@ -97,6 +97,37 @@ def test_decode_attention_per_row_lengths():
     np.testing.assert_allclose(
         np.asarray(oz), np.asarray(ref.decode_attention_ref(q, k, v, zlens)),
         rtol=2e-4, atol=2e-4)
+    # the macro-step done vector takes the same short-circuit: done rows
+    # are forced to kv_len 0 regardless of their nominal length
+    done = jnp.asarray([True, False, True])
+    od = ops.decode_attention(q, k, v, lens, done=done, mode="interpret",
+                              bk=64)
+    assert (np.asarray(od[0]) == 0).all() and (np.asarray(od[2]) == 0).all()
+    np.testing.assert_allclose(np.asarray(od[1]), np.asarray(o[1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_auto_bk_short_cache():
+    """bk=None picks the largest divisor of the cache length <= 256, so a
+    short serve pool (e.g. the serving benchmark's max_len=48) runs the
+    Pallas path instead of tripping the old ``S % 256 == 0`` assert."""
+    from repro.kernels.decode_attention import _pick_bk
+    assert _pick_bk(48) == 48
+    assert _pick_bk(512) == 256
+    assert _pick_bk(384) == 192
+    assert _pick_bk(1) == 1
+    with pytest.raises(ValueError, match="no block divisor"):
+        _pick_bk(257)  # prime > 256: refuse a pathological 1-wide grid
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    b, h, kv, s, hd = 2, 4, 2, 48, 64
+    q = jax.random.normal(keys[0], (b, h, hd))
+    k = jax.random.normal(keys[1], (b, kv, s, hd))
+    v = jax.random.normal(keys[2], (b, kv, s, hd))
+    lens = jnp.asarray([5, 48], jnp.int32)
+    o = ops.decode_attention(q, k, v, lens, mode="interpret")  # bk auto
+    orf = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-4,
+                               atol=2e-4)
 
 
 @pytest.mark.parametrize("b,s,w", [_p(2, 256, 256),
