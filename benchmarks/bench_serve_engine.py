@@ -1,4 +1,5 @@
-"""Serving benchmark: naive lock-step vs per-token vs macro-step engines.
+"""Serving benchmark: naive lock-step vs per-token vs macro-step engines,
+swept over model families (transformer / griffin / xlstm).
 
 A Poisson arrival trace of mixed-length requests is replayed against
 wall-clock time through three serving paths:
@@ -20,9 +21,17 @@ The arrival rate is set high enough that the engines (not the trace) are
 the bottleneck, so tok/s compares engine speed.  Reported per engine:
 total tok/s, per-request completion-latency percentiles (p50/p99, seconds
 from arrival to last token), and host syncs per generated token.  Results
-are also written to ``BENCH_serve_engine.json`` at the repo root.
+are also written to ``BENCH_serve_engine.json`` at the repo root; every
+entry records its ``family`` and slot-pool ``cache_layout`` (full KV vs
+ring-buffer window vs recurrent state) so the perf trajectory
+distinguishes transformer, griffin, and xlstm serving.
+
+The transformer family runs the full comparison (naive + per-token +
+macro K-sweep); the recurrent families run per-token vs one macro point —
+enough to track their serving speed without tripling the bench runtime.
 
 Run:  PYTHONPATH=src:. python benchmarks/bench_serve_engine.py [--quick]
+          [--family transformer|griffin|xlstm|all]
 """
 from __future__ import annotations
 
@@ -37,10 +46,18 @@ from benchmarks.common import write_bench_json
 from repro.configs.base import get_config
 from repro.data.synthetic import lm_batch
 from repro.launch.serve import generate
-from repro.models import get_family
+from repro.models import get_family, slot_cache_layout
 from repro.serve import ContinuousBatchingEngine, Request
 
 K_SWEEP = (4, 8, 16)
+
+# one smoke arch per family; recurrentgemma's window (32) is smaller than
+# the bench max_len (48), so its slots genuinely wrap the ring buffer
+FAMILY_ARCHS = {
+    "transformer": "qwen1.5-0.5b-smoke",
+    "griffin": "recurrentgemma-2b-smoke",
+    "xlstm": "xlstm-1.3b-smoke",
+}
 
 
 def poisson_trace(cfg, n, *, rate_hz, seed=0, max_prompt=24, max_gen=16):
@@ -136,21 +153,27 @@ def bench_engine(cfg, params, reqs, *, capacity, max_len, k, pipeline):
             "prefill_batches": engine.n_prefills, "k": k}
 
 
-def run(quick: bool = False, write_json: bool = True):
-    cfg = get_config("qwen1.5-0.5b-smoke")
+def _bench_family(family: str, quick: bool):
+    """One family's sweep.  The transformer (the original trajectory)
+    keeps its naive/pertoken/macro-K comparison and top-level keys; the
+    recurrent families run pertoken vs one macro point under
+    ``<family>_``-prefixed keys."""
+    cfg = get_config(FAMILY_ARCHS[family])
     fam = get_family(cfg)
     params = fam.init(jax.random.PRNGKey(0), cfg)
-    n = 12 if quick else 64
+    primary = family == "transformer"
+    n = (12 if quick else 64) if primary else (8 if quick else 32)
     capacity = 4
     max_len = 48
-    k_sweep = K_SWEEP[:2] if quick else K_SWEEP
+    k_sweep = (K_SWEEP[:2] if quick else K_SWEEP) if primary else (8,)
     # arrival rate far above the service rate, so the engine — not the
     # trace — is the bottleneck and tok/s measures serving speed, not load
     reqs = poisson_trace(cfg, n, rate_hz=2000.0,
                          max_gen=16 if quick else 24)
 
     # warm every engine's compile cache outside the timed runs
-    warm_naive(cfg, params, reqs, capacity)
+    if primary:
+        warm_naive(cfg, params, reqs, capacity)
     for k in (1,) + tuple(k_sweep):
         warm_engine(cfg, params, reqs, capacity=capacity, max_len=max_len,
                     k=k)
@@ -160,14 +183,38 @@ def run(quick: bool = False, write_json: bool = True):
                         max_new_tokens=r.max_new_tokens, arrival=r.arrival)
                 for r in reqs]
 
-    results = {"naive": bench_naive(cfg, params, fresh(), batch=capacity),
-               "pertoken": bench_engine(cfg, params, fresh(),
-                                        capacity=capacity, max_len=max_len,
-                                        k=1, pipeline=False)}
+    prefix = "" if primary else f"{family}_"
+    results = {}
+    if primary:
+        results["naive"] = bench_naive(cfg, params, fresh(), batch=capacity)
+    results[f"{prefix}pertoken"] = bench_engine(
+        cfg, params, fresh(), capacity=capacity, max_len=max_len, k=1,
+        pipeline=False)
     for k in k_sweep:
-        results[f"macro_k{k}"] = bench_engine(
+        results[f"{prefix}macro_k{k}"] = bench_engine(
             cfg, params, fresh(), capacity=capacity, max_len=max_len, k=k,
             pipeline=True)
+    layout = slot_cache_layout(cfg)
+    for m in results.values():
+        m["family"] = family
+        m["cache_layout"] = layout
+    return results
+
+
+def run(quick: bool = False, write_json: bool = True, families=None):
+    families = families or tuple(FAMILY_ARCHS)
+    results = {}
+    if write_json and set(families) != set(FAMILY_ARCHS):
+        # a partial --family run must not erase the other families'
+        # trajectory entries from BENCH_serve_engine.json
+        import json
+        import pathlib
+        path = pathlib.Path(__file__).resolve().parent.parent / \
+            "BENCH_serve_engine.json"
+        if path.exists():
+            results.update(json.loads(path.read_text()).get("metrics", {}))
+    for family in families:
+        results.update(_bench_family(family, quick))
 
     for name, m in results.items():
         print(f"serve_{name},tok_per_s,{m['tok_per_s']:.1f}")
@@ -186,5 +233,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--no-json", action="store_true")
+    ap.add_argument("--family", default="all",
+                    choices=["all"] + sorted(FAMILY_ARCHS),
+                    help="restrict the sweep to one model family")
     a = ap.parse_args()
-    run(quick=a.quick, write_json=not a.no_json)
+    fams = tuple(FAMILY_ARCHS) if a.family == "all" else (a.family,)
+    run(quick=a.quick, write_json=not a.no_json, families=fams)

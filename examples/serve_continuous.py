@@ -9,7 +9,10 @@ every sequence lock-step to the longest request.
 
 Also shows the paper's end-to-end story at serve time: growing a small
 pretrained model into the target architecture (Mango operator) and serving
-the grown weights through the same engine.
+the grown weights through the same engine — and, because the engine talks
+only to the family-agnostic slot-state protocol, the same loop serving a
+RECURRENT family (griffin: O(1) rglru/conv state per slot + ring-buffer
+local-attention caches) with zero engine changes.
 
 Run:  PYTHONPATH=src:. python examples/serve_continuous.py
 """
@@ -62,6 +65,18 @@ def main():
     out = engine.run(mixed_trace(cfg_big, 6))
     print(f"{cfg_big.name:24s} served {len(out)} requests on Mango-grown "
           f"params; sample: {out[0][:8]}")
+
+    # a recurrent family through the SAME engine: griffin slots carry O(1)
+    # rglru/conv state plus ring-buffer window KV (O(window), not O(max_len))
+    cfg_rec = get_config("recurrentgemma-2b-smoke")
+    params = get_family(cfg_rec).init(jax.random.PRNGKey(0), cfg_rec)
+    engine = ContinuousBatchingEngine(cfg_rec, params, capacity=4,
+                                      max_len=40)
+    out = engine.run(mixed_trace(cfg_rec, 6))
+    ring = engine.pool["attn"]["k"].shape[2]
+    print(f"{cfg_rec.name:24s} served {len(out)} requests "
+          f"({engine.cache_layout} slots, attn ring={ring} "
+          f"of window={cfg_rec.window}); sample: {out[0][:8]}")
 
 
 if __name__ == "__main__":

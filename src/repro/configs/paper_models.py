@@ -14,12 +14,14 @@ _PATCH = 16 * 16 * 3  # patchified input dim
 
 
 def _deit(name, layers, hidden, heads, **kw):
-    return ModelConfig(
+    base = dict(
         name=name, family="transformer", n_layers=layers, d_model=hidden,
         n_heads=heads, n_kv_heads=heads, d_ff=4 * hidden, vocab_size=1,
         causal=False, continuous_inputs=_PATCH, rope="none",
         learned_pos=197, head="cls", n_classes=1000, norm="ln", act="gelu",
-        max_seq_len=256, **kw)
+        max_seq_len=256)
+    base.update(kw)  # micro variants override defaults (e.g. n_classes)
+    return ModelConfig(**base)
 
 
 @register_named("deit-t-a")

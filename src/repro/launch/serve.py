@@ -7,9 +7,12 @@ production scale.  Usable as a library (examples) or CLI:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
       --batch 4 --prompt-len 32 --gen 16
 
-  # continuous batching over a slot pool
+  # continuous batching over a slot pool (any family implementing the
+  # slot-decode protocol: transformer, griffin, xlstm)
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
       --engine continuous --batch 8 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b-smoke \
+      --engine continuous --batch 4 --gen 8
 
   # serve a model grown from a pretrained source (the paper's operator,
   # end-to-end at serve time)
@@ -26,9 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import get_config
+from repro.configs.base import get_config, list_configs
 from repro.data.synthetic import lm_batch
-from repro.models import get_family
+from repro.models import get_family, serve_supported
 from repro.serve import ContinuousBatchingEngine, Request
 from repro.train.steps import make_decode_step, make_prefill_step
 
@@ -79,6 +82,32 @@ def build_params(cfg, *, grow_from=None, grow_method="mango", grow_rank=1,
         rng=rng, log_fn=log_fn)
 
 
+def require_servable(cfg):
+    """Gate ``--engine continuous`` behind the slot-decode capability probe
+    with an actionable message: WHY this config is out, and WHAT is in."""
+    ok, why = serve_supported(cfg)
+    if ok:
+        return
+    def probe(name):
+        try:
+            return serve_supported(get_config(name))[0]
+        except Exception:
+            return False
+
+    servable = [n for n in list_configs() if probe(n)]
+    raise SystemExit(
+        f"error: --engine continuous cannot serve {cfg.name!r}: {why}\n"
+        "The slot-decode protocol serves causal decoder configs of every "
+        "family in the zoo:\n"
+        "  transformer — full KV, MLA latent, and ring-buffer window "
+        "caches;\n"
+        "  griffin     — rglru/conv recurrent state + local-attention "
+        "rings;\n"
+        "  xlstm       — mLSTM/sLSTM recurrent state.\n"
+        f"Servable registered configs: {', '.join(servable)}\n"
+        "(--engine naive runs any decoder config lock-step.)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -105,6 +134,9 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
+    if args.engine == "continuous":
+        # probe BEFORE param init/growth — rejection must not cost a grow
+        require_servable(cfg)
     params = build_params(cfg, grow_from=args.grow,
                           grow_method=args.grow_method,
                           grow_rank=args.grow_rank,
@@ -137,7 +169,8 @@ def main():
     out = engine.run(reqs)
     dt = time.time() - t0
     n_tok = sum(len(v) for v in out.values())
-    print(f"[continuous] served {len(reqs)} requests / {n_tok} tokens in "
+    print(f"[continuous] {cfg.family}/{engine.cache_layout} served "
+          f"{len(reqs)} requests / {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, "
           f"{engine.n_decode_dispatches} macro-steps of K={args.k}, "
           f"{engine.n_prefills} prefill batches, "

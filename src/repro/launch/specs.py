@@ -52,3 +52,26 @@ def cache_specs_abstract(cfg: ModelConfig, batch: int, max_len: int):
 def cache_logical(cfg: ModelConfig):
     fam = get_family(cfg)
     return fam.cache_specs(cfg)
+
+
+def slot_pool_specs(cfg: ModelConfig, capacity: int, max_len: int):
+    """Abstract slot pool of the continuous-batching engine: one
+    ``init_cache`` allocation whose batch axis is the slot axis.  For
+    sliding-window configs the cache-seq axis is min(max_len, window) —
+    the ring buffer — so per-slot memory is O(window), and recurrent
+    families (griffin, xlstm) carry O(1) state leaves per slot."""
+    return cache_specs_abstract(cfg, capacity, max_len)
+
+
+def slot_decode_specs(cfg: ModelConfig, capacity: int, max_len: int):
+    """Abstract inputs of one slot-decode macro-step dispatch
+    (``make_slot_decode_loop``): the engine's persistent device-resident
+    decode state plus the slot pool."""
+    return {
+        "tokens": S((capacity,), jnp.int32),
+        "positions": S((capacity,), jnp.int32),
+        "remaining": S((capacity,), jnp.int32),
+        "eos_ids": S((capacity,), jnp.int32),
+        "done": S((capacity,), jnp.bool_),
+        "pool": slot_pool_specs(cfg, capacity, max_len),
+    }

@@ -5,6 +5,17 @@ Every family module exposes the same functional interface:
   forward(params, batch, cfg) -> (logits, aux)
   param_specs(cfg) -> pytree of logical-axis tuples
   init_cache(cfg, batch, max_len) / prefill / decode_step   (decoders only)
+
+Families that serve through the continuous-batching engine additionally
+implement the SLOT-STATE PROTOCOL (see docs/serving.md):
+  cache_specs(cfg)                 -> logical axes of the slot pool
+  prefill_full(params, batch, cfg, cache)
+      batch = {"tokens": (B, S) bucket-padded, "plens": (B,) true lengths}
+      -> (logits (B, S, V), cache after each row's REAL prompt)
+  decode_step_slots(params, tokens, positions, cache, cfg, done=None)
+      one token per slot at per-slot lengths; ``done`` rows are exact
+      no-ops (frozen state / bit-identical cache re-stores)
+  serve_supported(cfg) -> (ok, detail)
 """
 from __future__ import annotations
 
@@ -20,3 +31,29 @@ _FAMILIES = {
 def get_family(cfg_or_name):
     name = getattr(cfg_or_name, "family", cfg_or_name)
     return importlib.import_module(_FAMILIES[name])
+
+
+def serve_supported(cfg):
+    """Capability probe: can ``ContinuousBatchingEngine`` serve this config?
+
+    Returns (ok, detail) — ``detail`` names the slot cache layout when
+    servable, or the reason when not.  This replaces hard-coded family
+    checks: a family opts in by implementing the slot-state protocol and
+    its own ``serve_supported``.
+    """
+    fam = get_family(cfg)
+    probe = getattr(fam, "serve_supported", None)
+    if probe is None or not (hasattr(fam, "prefill_full")
+                             and hasattr(fam, "decode_step_slots")):
+        return False, (f"family {cfg.family!r} does not implement the "
+                       "slot-state protocol")
+    return probe(cfg)
+
+
+def slot_cache_layout(cfg):
+    """Short layout tag for benchmarks/telemetry: how a serve slot stores
+    its sequence state.  Dispatches to the family module (part of the
+    slot-state protocol) — no hard-coded family switch here."""
+    fam = get_family(cfg)
+    probe = getattr(fam, "slot_cache_layout", None)
+    return probe(cfg) if probe else "unsupported"

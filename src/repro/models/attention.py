@@ -146,8 +146,15 @@ def attention(q, k, v, *, causal=True, window=None, q_offset=0,
         assert causal, "windowed attention requires causal=True"
         span = window + chunk_q
         pad = span  # left-pad so every dynamic_slice start is in range
-        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
-        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        # ...and right-pad up to the padded query length: the ragged-tail
+        # q padding can push the last chunk's slice past the true KV
+        # length, and a clamped dynamic_slice start would silently
+        # mislabel that chunk's kpos (out-of-range positions are masked
+        # below instead)
+        Sk_data = k.shape[1]
+        right = max(0, nc * chunk_q - Sk_data)
+        kp = jnp.pad(k, ((0, 0), (pad, right), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, right), (0, 0), (0, 0)))
 
         def chunk_body(_, ci):
             qi = qc[ci]
@@ -158,7 +165,8 @@ def attention(q, k, v, *, causal=True, window=None, q_offset=0,
                                                         dtype=jnp.int32)
             kpos_c = start - pad + jnp.arange(span, dtype=jnp.int32)
             mask = _band_mask(qpos, kpos_c, causal=causal, window=window,
-                              kv_len=kv_len) & (kpos_c >= 0)[None, :]
+                              kv_len=kv_len) \
+                & ((kpos_c >= 0) & (kpos_c < Sk_data))[None, :]
             return None, _sdpa(qi, ks, vs, mask, scale, logits_dtype)
 
         body = jax.remat(chunk_body, prevent_cse=False)
@@ -177,6 +185,104 @@ def attention(q, k, v, *, causal=True, window=None, q_offset=0,
 
     out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, v.shape[-1])
     return out
+
+
+def ring_positions_rows(cur_len, ring):
+    """Absolute position stored in each ring-buffer cache slot, PER ROW.
+
+    cur_len: (B,) int32 — number of positions written so far in each row
+    (the ring invariant: slot ``s`` holds the largest position ``p <
+    cur_len`` with ``p % ring == s``).  Returns (B, ring) int32 absolute
+    positions, -1 for slots never written.  The scalar form lives in
+    ``transformer._ring_positions``; this is its continuous-batching
+    counterpart where every batch row is at its own length.
+    """
+    slot = jnp.arange(ring, dtype=jnp.int32)[None]
+    cur = cur_len[:, None]
+    wrap = (cur - 1) // ring
+    base = wrap * ring + slot
+    pos = jnp.where(base < cur, base, base - ring)
+    return jnp.where(pos >= 0, pos, -1)
+
+
+def ring_fill_rows(x, plens, ring, dtype):
+    """Fill a ring-buffer cache from a bucket-padded prefill, PER ROW.
+
+    x: (B, S, ...) per-position values (e.g. K or V) of a tail-padded
+    prompt batch; plens: (B,) true prompt lengths.  Ring slot ``s`` of row
+    ``b`` gets the value at the largest real position ``p < plens[b]``
+    with ``p % ring == s`` (a gather — wrapped positions never race a
+    scatter), 0 where never written.  Returns (B, ring, ...) in ``dtype``.
+    """
+    kpos = ring_positions_rows(plens, ring)  # (B, ring)
+    shape = kpos.shape + (1,) * (x.ndim - 2)
+    take = jnp.clip(kpos, 0, x.shape[1] - 1).reshape(shape)
+    written = (kpos >= 0).reshape(shape)
+    return jnp.where(written, jnp.take_along_axis(x, take, axis=1),
+                     0).astype(dtype)
+
+
+def ring_slot_attend(q, ck, cv, slot_positions, *, window, scale=None,
+                     done=None):
+    """One-token attention over a ring-buffer window cache at per-row slots.
+
+    q: (B, 1, H, hd); ck/cv: (B, ring, KV, hd) ring caches whose row ``b``
+    already contains this step's K/V written at ``slot_positions[b] %
+    ring``; slot_positions: (B,) — each row's current length (== the
+    query's absolute position).  Masking is by ABSOLUTE position
+    reconstructed from the ring invariant: a slot is attendable iff its
+    position is in ``(qpos - window, qpos]`` and was ever written.  Rows
+    flagged ``done`` attend nothing and return exact zeros (the idle-row
+    semantics of the full-cache slot path and the Pallas decode kernel).
+    """
+    B, Sq, H, hd = q.shape
+    KV = ck.shape[2]
+    ring = ck.shape[1]
+    if scale is None:
+        scale = hd ** -0.5
+    kpos = ring_positions_rows(slot_positions + 1, ring)  # (B, ring)
+    qpos = slot_positions[:, None]
+    mask = (kpos <= qpos) & (kpos > qpos - window) & (kpos >= 0)
+    if done is not None:
+        mask &= ~done[:, None]
+    qg = q.reshape(B, Sq, KV, H // KV, hd)
+    out = _sdpa(qg, ck.astype(q.dtype), cv.astype(q.dtype),
+                mask[:, None, :], scale)
+    if done is not None:
+        out = jnp.where(done[:, None, None, None, None], 0.0, out)
+    return out.reshape(B, Sq, H, cv.shape[-1])
+
+
+def ring_slot_update_attend(q, cache, k, v, slot_positions, *, window,
+                            done=None, scale=None):
+    """One slot-decode step over a ring-buffer window cache: write each
+    row's K/V at its own ring slot (``pos % ring``), freeze ``done`` rows
+    to their old bytes, and attend by absolute position.
+
+    The single authoritative implementation of the exactness-critical
+    write/freeze/attend ordering, shared by the transformer window path
+    and griffin's local-attention blocks.  cache: {"k": (B, ring, KV, hd),
+    "v": ...}; k/v: (B, 1, KV, hd) this step's projections; the ring
+    modulus is the cache length (== window, or shorter never-wrapping
+    caches when max_len < window); ``window`` sets the attention band.
+    Returns (out (B, 1, H, hd_v), new_cache).
+    """
+    from repro.models.common import freeze_rows
+
+    ring = cache["k"].shape[1]
+    b_idx = jnp.arange(k.shape[0])
+    slot_idx = slot_positions % ring
+    ck = cache["k"].at[b_idx, slot_idx].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[b_idx, slot_idx].set(v[:, 0].astype(cache["v"].dtype))
+    new_cache = {"k": ck, "v": cv}
+    if done is not None:
+        # done rows' frozen (token, position) re-store identical bytes
+        # anyway; the explicit freeze makes the no-op unconditional
+        new_cache = freeze_rows(cache, new_cache, done)
+    out = ring_slot_attend(q, new_cache["k"].astype(q.dtype),
+                           new_cache["v"].astype(q.dtype), slot_positions,
+                           window=window, scale=scale, done=done)
+    return out, new_cache
 
 
 def reference_attention(q, k, v, *, causal=True, window=None, kv_len=None,

@@ -71,3 +71,19 @@ def take_layer(stacked, i):
 def slice_layers(stacked, start, stop):
     """Static sub-range of the layer axis on every leaf."""
     return jax.tree.map(lambda a: a[start:stop], stacked)
+
+
+def freeze_rows(old, new, done):
+    """Per-row cache freeze for the continuous-batching slot protocol.
+
+    ``old``/``new`` are matching cache pytrees whose leaves lead with the
+    batch (slot) axis; rows flagged in ``done`` (B,) keep their old state.
+    Recurrent families need this explicitly — a recurrent update mutates
+    state irreversibly, unlike a KV cache write that can re-store
+    identical bytes as a no-op.
+    """
+    def per_leaf(o, n):
+        mask = done.reshape(done.shape + (1,) * (n.ndim - 1))
+        return jnp.where(mask, o, n)
+
+    return jax.tree.map(per_leaf, old, new)

@@ -25,7 +25,14 @@ import jax.numpy as jnp
 from repro.distributed.sharding import annotate
 from repro.models import attention as attn_lib
 from repro.models import ffn as ffn_lib
-from repro.models.common import apply_norm, gelu, init_norm, keygen, trunc_normal
+from repro.models.common import (
+    apply_norm,
+    freeze_rows,
+    gelu,
+    init_norm,
+    keygen,
+    trunc_normal,
+)
 from repro.models.rope import apply_rope
 
 C_RGLRU = 8.0
@@ -123,9 +130,20 @@ def _rglru_gates(y, bp):
     return log_a, gated
 
 
-def rglru_parallel(y, bp):
-    """Parallel-prefix RG-LRU over the sequence. y: (B,S,W)."""
+def rglru_parallel(y, bp, h0=None, valid=None):
+    """Parallel-prefix RG-LRU over the sequence. y: (B,S,W).
+
+    ``h0``: optional (B,W) f32 initial state (multi-token prefill into an
+    existing cache): h_t = (prod a_{0..t}) h0 + scan_t.  ``valid``:
+    optional (B,S) bool — invalid positions are frozen to the identity
+    element (a=1, b=0), so the recurrence carries h across the padded
+    tails of bucketed admission prompts unchanged and the final state is
+    exactly h_{plen-1}.  Returns (h (B,S,W) in y.dtype, h_last (B,W) f32).
+    """
     log_a, b = _rglru_gates(y, bp)
+    if valid is not None:
+        log_a = jnp.where(valid[..., None], log_a, 0.0)
+        b = jnp.where(valid[..., None], b, 0.0)
     a = jnp.exp(log_a)
 
     def op(e1, e2):
@@ -133,8 +151,10 @@ def rglru_parallel(y, bp):
         a2, b2 = e2
         return a1 * a2, a2 * b1 + b2
 
-    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
-    return h.astype(y.dtype)
+    prod_a, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    if h0 is not None:
+        h = h + prod_a * h0[:, None]
+    return h.astype(y.dtype), h[:, -1]
 
 
 def rglru_step(y, h_prev, bp):
@@ -144,8 +164,14 @@ def rglru_step(y, h_prev, bp):
     return h.astype(y.dtype)[:, None], h
 
 
-def _causal_conv(y, w, b, state=None):
-    """Depthwise causal conv. y: (B,S,W); w: (K,W); state: (B,K-1,W)|None."""
+def _causal_conv(y, w, b, state=None, lengths=None):
+    """Depthwise causal conv. y: (B,S,W); w: (K,W); state: (B,K-1,W)|None.
+
+    ``lengths`` (B,): per-row true sequence lengths — the returned conv
+    tail is then gathered at each row's own boundary (bucketed admission
+    prompts are tail-padded, and the state handed to decode must be the
+    last K-1 REAL inputs, not the padding).
+    """
     K = w.shape[0]
     if state is None:
         ypad = jnp.pad(y, ((0, 0), (K - 1, 0), (0, 0)))
@@ -154,40 +180,66 @@ def _causal_conv(y, w, b, state=None):
     out = sum(
         ypad[:, k:k + y.shape[1]] * w[k].astype(y.dtype) for k in range(K)
     ) + b.astype(y.dtype)
-    new_state = ypad[:, -(K - 1):] if K > 1 else None
+    if K == 1:
+        new_state = None
+    elif lengths is None:
+        new_state = ypad[:, -(K - 1):]
+    else:
+        # ypad index of position t is t + (K-1): row b's tail covers
+        # positions lengths[b]-(K-1) .. lengths[b]-1 -> ypad rows
+        # lengths[b] .. lengths[b]+K-2 (identical to the static slice
+        # when lengths[b] == S)
+        idx = (lengths[:, None] + jnp.arange(K - 1)[None])[..., None]
+        new_state = jnp.take_along_axis(ypad, idx, axis=1)
     return out, new_state
 
 
-def _rec_temporal(x, bp, cfg, conv_state=None, h_state=None):
-    """Recurrent temporal block. Returns (out, new_conv_state, new_h)."""
+def _rec_temporal(x, bp, cfg, conv_state=None, h_state=None, plens=None):
+    """Recurrent temporal block. Returns (out, new_conv_state, new_h).
+
+    Single-token cached steps take the O(1) recurrence; every multi-token
+    call (training, prefill — with or without an initial state) runs the
+    parallel prefix.  ``plens`` marks a bucketed admission prefill: pad
+    positions freeze the RG-LRU to identity and the conv tail is gathered
+    at each row's true boundary.
+    """
     y = jnp.einsum("bsd,dw->bsw", x, bp["w_x"].astype(x.dtype))
     g = gelu(jnp.einsum("bsd,dw->bsw", x, bp["w_gate"].astype(x.dtype)))
     y = annotate(y, ("batch", "seq", "lru"))
-    y, new_conv = _causal_conv(y, bp["conv_w"], bp["conv_b"], conv_state)
-    if h_state is None:
-        h = rglru_parallel(y, bp)
-        new_h = None
-    else:
+    y, new_conv = _causal_conv(y, bp["conv_w"], bp["conv_b"], conv_state,
+                               lengths=plens)
+    if h_state is not None and y.shape[1] == 1:
         h, new_h = rglru_step(y, h_state, bp)
+    else:
+        valid = None
+        if plens is not None:
+            valid = jnp.arange(y.shape[1])[None] < plens[:, None]
+        h, new_h = rglru_parallel(y, bp, h0=h_state, valid=valid)
     out = jnp.einsum("bsw,wd->bsd", h * g, bp["w_out"].astype(x.dtype))
     return out, new_conv, new_h
 
 
 # ------------------------------------------------------------------ blocks
-def _rec_block(x, bp, cfg, cache=None):
+def _rec_block(x, bp, cfg, cache=None, plens=None, done=None):
     h, new_conv, new_h = _rec_temporal(
         apply_norm(x, bp["ln1"], cfg.norm), bp, cfg,
         conv_state=None if cache is None else cache["conv"],
-        h_state=None if cache is None else cache["h"])
+        h_state=None if cache is None else cache["h"],
+        plens=plens)
     x = x + h
     x = x + ffn_lib.mlp(apply_norm(x, bp["ln2"], cfg.norm), bp["mlp"],
                         cfg.act)
     x = annotate(x, ("batch", "seq", "embed"))
-    nc = None if cache is None else {"conv": new_conv, "h": new_h}
+    nc = None
+    if cache is not None:
+        nc = {"conv": new_conv, "h": new_h}
+        if done is not None:
+            nc = freeze_rows(cache, nc, done)
     return x, nc
 
 
-def _attn_block(x, bp, cfg, positions, cache=None, q_offset=0):
+def _attn_block(x, bp, cfg, positions, cache=None, q_offset=0,
+                slot_positions=None, slot_done=None, plens=None):
     from repro.models import transformer as tf
 
     xin = apply_norm(x, bp["ln1"], cfg.norm)
@@ -201,24 +253,44 @@ def _attn_block(x, bp, cfg, positions, cache=None, q_offset=0):
     q = apply_rope(q, positions, theta=cfg.rope_theta)
     k = apply_rope(k, positions, theta=cfg.rope_theta)
     nc = None
-    if cache is not None:
+    if slot_positions is not None:
+        # continuous-batching decode: every row is a slot at its own
+        # length — write this step's K/V at the row's own ring slot and
+        # attend by absolute position (the slot mirror of the S == 1 path)
+        out, nc = attn_lib.ring_slot_update_attend(
+            q, cache, k, v, slot_positions, window=cfg.window,
+            done=slot_done)
+    elif cache is not None:
         ck, cv = cache["k"], cache["v"]
         window = cfg.window
-        w_eff = min(S, window)
-        idx = (q_offset + S - w_eff + jnp.arange(w_eff)) % window
-        ck = ck.at[:, idx].set(k[:, -w_eff:].astype(ck.dtype))
-        cv = cv.at[:, idx].set(v[:, -w_eff:].astype(cv.dtype))
-        nc = {"k": ck, "v": cv}
-        if S == 1:
-            kpos_abs = tf._ring_positions(q_offset + S, window)
-            out = tf._ring_window_attend(q, ck.astype(x.dtype),
-                                         cv.astype(x.dtype), kpos_abs,
-                                         q_offset, cfg)
-        else:
-            out = attn_lib.attention(q, k, v, causal=True, window=cfg.window,
+        if plens is not None and S > 1:
+            # bucketed admission prefill: fill each row's ring from its
+            # TRUE prompt length by absolute position
+            ring = ck.shape[1]
+            ck = attn_lib.ring_fill_rows(k, plens, ring, ck.dtype)
+            cv = attn_lib.ring_fill_rows(v, plens, ring, cv.dtype)
+            nc = {"k": ck, "v": cv}
+            out = attn_lib.attention(q, k, v, causal=True, window=window,
                                      q_offset=q_offset,
                                      chunk_q=cfg.attn_chunk,
                                      unroll=cfg.unroll_scans)
+        else:
+            w_eff = min(S, window)
+            idx = (q_offset + S - w_eff + jnp.arange(w_eff)) % window
+            ck = ck.at[:, idx].set(k[:, -w_eff:].astype(ck.dtype))
+            cv = cv.at[:, idx].set(v[:, -w_eff:].astype(cv.dtype))
+            nc = {"k": ck, "v": cv}
+            if S == 1:
+                kpos_abs = tf._ring_positions(q_offset + S, window)
+                out = tf._ring_window_attend(q, ck.astype(x.dtype),
+                                             cv.astype(x.dtype), kpos_abs,
+                                             q_offset, cfg)
+            else:
+                out = attn_lib.attention(q, k, v, causal=True,
+                                         window=cfg.window,
+                                         q_offset=q_offset,
+                                         chunk_q=cfg.attn_chunk,
+                                         unroll=cfg.unroll_scans)
     else:
         out = attn_lib.attention(q, k, v, causal=True, window=cfg.window,
                                  q_offset=q_offset, chunk_q=cfg.attn_chunk,
@@ -265,7 +337,8 @@ def forward(params, batch, cfg):
     return annotate(logits, ("batch", "seq", "vocab")), {"moe_aux": 0.0}
 
 
-def _run_blocks(params, x, cfg, positions, caches=None, q_offset=0):
+def _run_blocks(params, x, cfg, positions, caches=None, q_offset=0,
+                plens=None, slot_positions=None, slot_done=None):
     from repro.models.common import slice_layers, take_layer
 
     pat = block_pattern(cfg)
@@ -277,7 +350,8 @@ def _run_blocks(params, x, cfg, positions, caches=None, q_offset=0):
             def body(carry, xs):
                 xc = carry
                 bp, cache_l = xs if caches is not None else (xs, None)
-                xc, nc = _rec_block(xc, bp, cfg, cache=cache_l)
+                xc, nc = _rec_block(xc, bp, cfg, cache=cache_l, plens=plens,
+                                    done=slot_done)
                 return xc, nc
 
             if cfg.remat == "block":
@@ -297,7 +371,9 @@ def _run_blocks(params, x, cfg, positions, caches=None, q_offset=0):
                 if cfg.remat == "block" and caches is None:
                     fn = jax.remat(_attn_block, static_argnums=(2,),
                                    prevent_cse=False)
-                x, nc = fn(x, bp, cfg, positions, cache_l, q_offset)
+                x, nc = fn(x, bp, cfg, positions, cache_l, q_offset,
+                           slot_positions=slot_positions,
+                           slot_done=slot_done, plens=plens)
                 if caches is not None:
                     new_caches["attn"].append(
                         jax.tree.map(lambda a: a[None], nc))
@@ -336,7 +412,7 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
     return cache
 
 
-def _forward_cached(params, batch, cfg, cache, q_offset):
+def _forward_cached(params, batch, cfg, cache, q_offset, plens=None):
     cdt = jnp.dtype(cfg.compute_dtype)
     x = params["embed"].astype(cdt)[batch["tokens"]]
     if cfg.scale_embeddings:
@@ -345,7 +421,7 @@ def _forward_cached(params, batch, cfg, cache, q_offset):
     positions = q_offset + jnp.arange(S, dtype=jnp.int32)[None]
     positions = jnp.broadcast_to(positions, (B, S))
     x, new_cache = _run_blocks(params, x, cfg, positions, caches=cache,
-                               q_offset=q_offset)
+                               q_offset=q_offset, plens=plens)
     x = apply_norm(x, params["final_norm"], cfg.norm)
     w = params["embed"].T if cfg.tie_embeddings else params["head"]
     return jnp.einsum("bsd,dv->bsv", x, w.astype(cdt)), new_cache
@@ -360,6 +436,60 @@ def decode_step(params, tokens, pos, cache, cfg):
     logits, cache = _forward_cached(
         params, {"tokens": tokens[:, None]}, cfg, cache, pos)
     return logits[:, -1], cache
+
+
+def prefill_full(params, batch, cfg, cache):
+    """Admission prefill: logits at EVERY position + per-row final state.
+
+    ``batch["plens"]`` (B,) carries each row's true prompt length: RG-LRU
+    pad positions freeze to identity, conv tails are gathered at the row
+    boundary, and ring window caches are filled per row by absolute
+    position — so the returned cache is exactly the state after each
+    row's REAL prompt, tail padding notwithstanding.
+    """
+    plens = batch.get("plens")
+    batch = {k: v for k, v in batch.items() if k != "plens"}
+    return _forward_cached(params, batch, cfg, cache, 0, plens=plens)
+
+
+def decode_step_slots(params, tokens, positions, cache, cfg, done=None):
+    """Continuous-batching decode: one token per slot at per-slot lengths.
+
+    tokens/positions: (B,) — each row's last token and current length.
+    ``done`` rows FREEZE their recurrent state (conv tails, RG-LRU h —
+    a recurrent update is irreversible, unlike a KV re-store) and their
+    ring slots keep their old bytes; live rows advance the O(1)
+    recurrence and write their ring slot at ``pos % ring``.
+    Returns (logits (B, V), new_cache).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens[:, None]]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    x, new_cache = _run_blocks(params, x, cfg, positions[:, None],
+                               caches=cache, slot_positions=positions,
+                               slot_done=done)
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(cdt))
+    return logits[:, -1], new_cache
+
+
+def serve_supported(cfg):
+    """Capability probe for the continuous-batching slot-decode protocol."""
+    pat = block_pattern(cfg)
+    has_attn = any(t == "attn" for t in pat)
+    if has_attn and not cfg.window:
+        return False, "griffin local-attention blocks require cfg.window"
+    detail = "recurrent state (O(1) per slot: rglru h + conv tail)"
+    if has_attn:
+        detail += " + ring-buffer window KV (O(window) per slot)"
+    return True, detail
+
+
+def slot_cache_layout(cfg):
+    has_attn = any(t == "attn" for t in block_pattern(cfg))
+    return "recurrent+ring" if has_attn else "recurrent"
 
 
 def cache_specs(cfg):

@@ -161,14 +161,21 @@ def _slot_kv_len(slot_positions, slot_done):
 
 def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
                   kv_len=None, window=None, slot_positions=None,
-                  slot_done=None):
+                  slot_done=None, plens=None):
     """Returns (out, new_cache_entry). x: (B,S,D).
 
     ``slot_positions`` (B,) switches to the continuous-batching decode path:
     S must be 1, each batch row is an independent cache slot at its own
-    length, the new K/V is scattered to ``cache[b, slot_positions[b]]`` and
-    attention masks per-row to ``kv_len = slot_positions + 1`` — or 0 for
-    rows flagged in ``slot_done`` (macro-step no-op rows).
+    length, the new K/V is scattered to ``cache[b, slot_positions[b]]``
+    (``% ring`` for ring-buffer window caches) and attention masks per-row
+    to ``kv_len = slot_positions + 1`` — or 0 for rows flagged in
+    ``slot_done`` (macro-step no-op rows).
+
+    ``plens`` (B,) marks a continuous-batching ADMISSION prefill: prompts
+    are tail-padded to a bucket length, and ring-buffer window caches must
+    be filled per row from each prompt's true length (a full cache needs
+    nothing — its pad-tail entries stay invisible behind the per-row
+    ``kv_len`` mask until overwritten).
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -209,9 +216,20 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
 
     new_cache = None
     if slot_positions is not None:
-        if window is not None:
-            raise NotImplementedError(
-                "per-slot decode over ring-buffer window caches")
+        if window is not None and cache["k"].shape[1] == window:
+            # Ring-buffer window cache: each row writes its own slot
+            # ``pos % window`` and attends by ABSOLUTE position
+            # reconstructed from the ring invariant — the per-slot mirror
+            # of ``_ring_window_attend``.  Done rows freeze (their frozen
+            # token/position would re-store identical bytes anyway) and
+            # attend nothing.  (A window cfg whose cache is shorter than
+            # the window never wraps, so it falls through to the
+            # full-cache scatter below: every cached position is inside
+            # the band by construction.)
+            out, new_cache = attn_lib.ring_slot_update_attend(
+                q, cache, k, v, slot_positions, window=window,
+                done=slot_done)
+            return _attn_out(out, p, cfg, cdt), new_cache
         # Scatter this step's K/V to each row's own write position, then
         # attend with a per-row valid length.  Row arithmetic is identical
         # to the scalar-offset decode path (same einsums, same masked
@@ -238,10 +256,16 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
         ck, cv = cache["k"], cache["v"]
         wsize = ck.shape[1]
         if window is not None and wsize == window:
-            w_eff = min(S, window)
-            idx = (q_offset + S - w_eff + jnp.arange(w_eff)) % window
-            ck = ck.at[:, idx].set(k[:, -w_eff:].astype(ck.dtype))
-            cv = cv.at[:, idx].set(v[:, -w_eff:].astype(cv.dtype))
+            if plens is not None and S > 1:
+                # admission prefill of tail-padded prompts: fill each
+                # row's ring from its TRUE length
+                ck = attn_lib.ring_fill_rows(k, plens, window, ck.dtype)
+                cv = attn_lib.ring_fill_rows(v, plens, window, cv.dtype)
+            else:
+                w_eff = min(S, window)
+                idx = (q_offset + S - w_eff + jnp.arange(w_eff)) % window
+                ck = ck.at[:, idx].set(k[:, -w_eff:].astype(ck.dtype))
+                cv = cv.at[:, idx].set(v[:, -w_eff:].astype(cv.dtype))
             new_cache = {"k": ck, "v": cv}
             if S > 1:
                 # prefill: window attention over the in-flight k/v directly
@@ -416,11 +440,11 @@ def _mla_absorbed_decode(q_nope, q_rope, ckv, kr, p, cfg, *, kv_len):
 
 
 def _block(x, bp, cfg, positions, *, moe, cache=None, q_offset=0,
-           window=None, slot_positions=None, slot_done=None):
+           window=None, slot_positions=None, slot_done=None, plens=None):
     h, new_cache = _attn_forward(
         apply_norm(x, bp["ln1"], cfg.norm), bp["attn"], cfg, positions,
         cache=cache, q_offset=q_offset, window=window,
-        slot_positions=slot_positions, slot_done=slot_done)
+        slot_positions=slot_positions, slot_done=slot_done, plens=plens)
     x = x + h
     hin = apply_norm(x, bp["ln2"], cfg.norm)
     if moe:
@@ -433,7 +457,7 @@ def _block(x, bp, cfg, positions, *, moe, cache=None, q_offset=0,
 
 
 def _run_group(x, group, cfg, positions, *, moe, caches=None, q_offset=0,
-               slot_positions=None, slot_done=None):
+               slot_positions=None, slot_done=None, plens=None):
     """Scan a stacked block group. caches: stacked (n, ...) or None."""
     def body(carry, xs):
         xc, aux_sum = carry
@@ -446,7 +470,7 @@ def _run_group(x, group, cfg, positions, *, moe, caches=None, q_offset=0,
         xc, aux, nc = _block(xc, bp, cfg, positions, moe=moe, cache=cache_l,
                              q_offset=q_offset, window=cfg.window,
                              slot_positions=slot_positions,
-                             slot_done=slot_done)
+                             slot_done=slot_done, plens=plens)
         return (xc, aux_sum + aux), nc
 
     if cfg.remat == "block":
@@ -582,7 +606,7 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
     return cache
 
 
-def _forward_cached(params, batch, cfg, cache, q_offset):
+def _forward_cached(params, batch, cfg, cache, q_offset, plens=None):
     x = embed_inputs(params, batch, cfg)
     B, S = x.shape[:2]
     positions = _positions_from_batch(batch, B, S, cfg, q_offset=q_offset)
@@ -590,12 +614,12 @@ def _forward_cached(params, batch, cfg, cache, q_offset):
     if "dense_blocks" in params:
         x, _, nc = _run_group(x, params["dense_blocks"], cfg, positions,
                               moe=False, caches=cache["dense"],
-                              q_offset=q_offset)
+                              q_offset=q_offset, plens=plens)
         new_cache["dense"] = nc
     if "moe_blocks" in params:
         x, _, nc = _run_group(x, params["moe_blocks"], cfg, positions,
                               moe=True, caches=cache["moe"],
-                              q_offset=q_offset)
+                              q_offset=q_offset, plens=plens)
         new_cache["moe"] = nc
     x = apply_norm(x, params["final_norm"], cfg.norm)
     return _head(params, x, cfg), new_cache
@@ -629,9 +653,15 @@ def prefill_full(params, batch, cfg, cache):
 
     The continuous-batching engine pads prompts to a bucket length to bound
     prefill recompiles; it reads the logits at each request's true last
-    prompt token, so it needs the whole sequence of logits.
+    prompt token, so it needs the whole sequence of logits.  An optional
+    ``batch["plens"]`` (B,) carries each row's TRUE prompt length — ignored
+    by full caches (pad-tail entries hide behind the per-row ``kv_len``
+    mask) but required to fill ring-buffer window caches per row.
     """
-    return _forward_cached(params, batch, cfg, cache, q_offset=0)
+    plens = batch.get("plens")
+    batch = {k: v for k, v in batch.items() if k != "plens"}
+    return _forward_cached(params, batch, cfg, cache, q_offset=0,
+                           plens=plens)
 
 
 def _forward_cached_slots(params, batch, cfg, cache, slot_positions,
@@ -673,6 +703,31 @@ def decode_step_slots(params, tokens, positions, cache, cfg, done=None):
     logits, cache = _forward_cached_slots(params, batch, cfg, cache,
                                           positions, slot_done=done)
     return logits[:, -1], cache
+
+
+def serve_supported(cfg):
+    """Capability probe for the continuous-batching slot-decode protocol.
+
+    Returns (ok, detail): ``detail`` names the slot cache layout when
+    servable, or the reason when not.
+    """
+    if not cfg.causal or cfg.continuous_inputs:
+        return False, ("requires a causal token LM "
+                       f"(causal={cfg.causal}, "
+                       f"continuous_inputs={cfg.continuous_inputs})")
+    if cfg.mla and cfg.window:
+        return False, "MLA latent caches have no ring-buffer window layout"
+    if cfg.mla:
+        return True, "full MLA latent cache (O(max_len) per slot)"
+    if cfg.window:
+        return True, "ring-buffer window KV cache (O(window) per slot)"
+    return True, "full KV cache (O(max_len) per slot)"
+
+
+def slot_cache_layout(cfg):
+    if cfg.mla:
+        return "full-mla"
+    return "ring" if cfg.window else "full"
 
 
 # ============================================================= param specs

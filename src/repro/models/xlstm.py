@@ -18,7 +18,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import annotate
-from repro.models.common import apply_norm, gelu, init_norm, keygen, trunc_normal
+from repro.models.common import (
+    apply_norm,
+    freeze_rows,
+    gelu,
+    init_norm,
+    keygen,
+    trunc_normal,
+)
 from repro.models.griffin import _causal_conv
 
 
@@ -201,8 +208,16 @@ def mlstm_sequential(q, k, v, log_i, log_f, state=None):
     return hs.transpose(1, 2, 0, 3).astype(q.dtype), (C, n, m)
 
 
-def _mlstm_block(x, bp, cfg, cache=None, chunkwise=True):
-    """x: (B,S,D). cache: {"conv": (B,K-1,di), "C","n","m"} or None."""
+def _mlstm_block(x, bp, cfg, cache=None, chunkwise=True, plens=None,
+                 done=None):
+    """x: (B,S,D). cache: {"conv": (B,K-1,di), "C","n","m"} or None.
+
+    ``plens`` (B,): bucketed admission prefill — pad positions freeze the
+    recurrence exactly (input gate -> exp(-inf) = 0 contribution, forget
+    log -> 0 decay) and the conv tail is gathered at each row's true
+    boundary, so the carried (C, n, m) is the state after the REAL prompt.
+    ``done`` (B,): slot-decode rows whose state must not advance.
+    """
     B, S, D = x.shape
     NH = cfg.n_heads
     di = int(cfg.proj_factor * D)
@@ -212,7 +227,8 @@ def _mlstm_block(x, bp, cfg, cache=None, chunkwise=True):
     xi, z = up[..., :di], up[..., di:]
     xi = annotate(xi, ("batch", "seq", "lru"))
     conv_state = None if cache is None else cache["conv"]
-    c, new_conv = _causal_conv(xi, bp["conv_w"], bp["conv_b"], conv_state)
+    c, new_conv = _causal_conv(xi, bp["conv_w"], bp["conv_b"], conv_state,
+                               lengths=plens)
     c = jax.nn.silu(c)
     q = jnp.einsum("bsu,uv->bsv", c, bp["w_q"].astype(x.dtype))
     k = jnp.einsum("bsu,uv->bsv", c, bp["w_k"].astype(x.dtype))
@@ -227,6 +243,10 @@ def _mlstm_block(x, bp, cfg, cache=None, chunkwise=True):
         + bp["b_if"].astype(jnp.float32)
     gates = gates.reshape(B, S, 2, NH).transpose(2, 0, 3, 1)  # (2,B,NH,S)
     log_i, log_f = gates[0], jax.nn.log_sigmoid(gates[1])
+    if plens is not None:
+        valid = (jnp.arange(S)[None] < plens[:, None])[:, None, :]  # (B,1,S)
+        log_i = jnp.where(valid, log_i, -jnp.inf)
+        log_f = jnp.where(valid, log_f, 0.0)
 
     state = None
     if cache is not None:
@@ -245,18 +265,26 @@ def _mlstm_block(x, bp, cfg, cache=None, chunkwise=True):
     nc = None
     if cache is not None:
         nc = {"conv": new_conv, "C": state[0], "n": state[1], "m": state[2]}
+        if done is not None:
+            nc = freeze_rows(cache, nc, done)
     return x, nc
 
 
 # ============================================================== sLSTM cell
-def _slstm_block(x, bp, cfg, cache=None):
-    """Sequential sLSTM block. x: (B,S,D)."""
+def _slstm_block(x, bp, cfg, cache=None, plens=None, done=None):
+    """Sequential sLSTM block. x: (B,S,D).
+
+    ``plens``: pad positions of a bucketed admission prefill freeze the
+    carried (c, n, h, m) in-scan — the hidden-state recurrence would
+    otherwise absorb the padding.  ``done``: slot rows frozen wholesale.
+    """
     B, S, D = x.shape
     NH = cfg.n_heads
     dh = D // NH
     xin = apply_norm(x, bp["ln"], cfg.norm)
     conv_state = None if cache is None else cache["conv"]
-    c_in, new_conv = _causal_conv(xin, bp["conv_w"], bp["conv_b"], conv_state)
+    c_in, new_conv = _causal_conv(xin, bp["conv_w"], bp["conv_b"], conv_state,
+                                  lengths=plens)
     c_in = jax.nn.silu(c_in)
     # gate pre-activations from inputs (i,f from conv branch; z,o direct)
     wx = jnp.einsum("bsd,dg->bsg", xin.astype(jnp.float32),
@@ -278,8 +306,9 @@ def _slstm_block(x, bp, cfg, cache=None):
     else:
         cs, ns, hs, ms = cache["c"], cache["n"], cache["h"], cache["m"]
 
-    def step(carry, pre_t):
+    def step(carry, xs):
         cs, ns, hs, ms = carry
+        pre_t, valid_t = xs
         rec = jnp.einsum("bhd,hdg->bhg", hs, r).reshape(B, NH, 4, dh)
         rec = rec.transpose(0, 2, 1, 3)  # (B,4,NH,dh)
         g = pre_t.astype(jnp.float32) + rec
@@ -290,13 +319,23 @@ def _slstm_block(x, bp, cfg, cache=None):
         m_new = jnp.maximum(lf + ms, li)
         i_p = jnp.exp(li - m_new)
         f_p = jnp.exp(lf + ms - m_new)
-        cs = f_p * cs + i_p * z
-        ns = f_p * ns + i_p
-        h = o * cs / jnp.maximum(ns, 1e-6)
-        return (cs, ns, h, m_new), h
+        cs_n = f_p * cs + i_p * z
+        ns_n = f_p * ns + i_p
+        h = o * cs_n / jnp.maximum(ns_n, 1e-6)
+        if valid_t is not None:  # freeze the carry across padded positions
+            keep = valid_t[:, None, None]
+            cs_n = jnp.where(keep, cs_n, cs)
+            ns_n = jnp.where(keep, ns_n, ns)
+            h_c = jnp.where(keep, h, hs)
+            m_new = jnp.where(keep, m_new, ms)
+            return (cs_n, ns_n, h_c, m_new), h
+        return (cs_n, ns_n, h, m_new), h
 
+    valid = None
+    if plens is not None:
+        valid = (jnp.arange(S)[None] < plens[:, None]).T  # (S,B)
     (cs, ns, hs, ms), hseq = jax.lax.scan(
-        step, (cs, ns, hs, ms), pre.transpose(1, 0, 2, 3, 4))
+        step, (cs, ns, hs, ms), (pre.transpose(1, 0, 2, 3, 4), valid))
     h = hseq.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
     h = _group_norm(h, bp["gn"], NH)
     # gated up/down MLP (pf = 4/3)
@@ -308,11 +347,13 @@ def _slstm_block(x, bp, cfg, cache=None):
     nc = None
     if cache is not None:
         nc = {"conv": new_conv, "c": cs, "n": ns, "h": hs, "m": ms}
+        if done is not None:
+            nc = freeze_rows(cache, nc, done)
     return x, nc
 
 
 # ================================================================= forward
-def _run_blocks(params, x, cfg, caches=None):
+def _run_blocks(params, x, cfg, caches=None, plens=None, done=None):
     from repro.models.common import slice_layers
 
     types = block_types(cfg)
@@ -328,6 +369,15 @@ def _run_blocks(params, x, cfg, caches=None):
         counts[types[i]] += j - i
         i = j
 
+    valid = None
+    if plens is not None:
+        # bucketed admission prefill: pad positions of the residual stream
+        # are zeroed after every block — the mLSTM stabilizer degenerates
+        # on all-masked pad queries (inf denominators), and a NaN at a pad
+        # position must never reach the next block's K/V products (where
+        # 0 * NaN would poison the carried state)
+        valid = (jnp.arange(x.shape[1])[None] < plens[:, None])[..., None]
+
     for typ, start, count in runs:
         key = "m_blocks" if typ == "m" else "s_blocks"
         group = slice_layers(params[key], start, start + count)
@@ -339,7 +389,9 @@ def _run_blocks(params, x, cfg, caches=None):
                 bp, cache_l = xs, None
             else:
                 bp, cache_l = xs
-            xc, nc = fn(xc, bp, cfg, cache=cache_l)
+            xc, nc = fn(xc, bp, cfg, cache=cache_l, plens=plens, done=done)
+            if valid is not None:
+                xc = jnp.where(valid, xc, 0.0)
             return xc, nc
 
         if cfg.remat == "block":
@@ -401,10 +453,12 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
     return cache
 
 
-def _forward_cached(params, batch, cfg, cache, q_offset):
+def _forward_cached(params, batch, cfg, cache, q_offset, plens=None,
+                    done=None):
     cdt = jnp.dtype(cfg.compute_dtype)
     x = params["embed"].astype(cdt)[batch["tokens"]]
-    x, new_cache = _run_blocks(params, x, cfg, caches=cache)
+    x, new_cache = _run_blocks(params, x, cfg, caches=cache, plens=plens,
+                               done=done)
     x = apply_norm(x, params["final_norm"], cfg.norm)
     w = params["embed"].T if cfg.tie_embeddings else params["head"]
     return jnp.einsum("bsd,dv->bsv", x, w.astype(cdt)), new_cache
@@ -419,6 +473,45 @@ def decode_step(params, tokens, pos, cache, cfg):
     logits, cache = _forward_cached(
         params, {"tokens": tokens[:, None]}, cfg, cache, pos)
     return logits[:, -1], cache
+
+
+def prefill_full(params, batch, cfg, cache):
+    """Admission prefill: logits at EVERY position + per-row final state.
+
+    ``batch["plens"]`` (B,) carries each row's true prompt length: pad
+    positions contribute exp(-inf) = 0 to the mLSTM state with unit
+    forget decay, sLSTM carries freeze in-scan, and conv tails are
+    gathered at the row boundary — the returned (C, n, m, conv, ...)
+    is the state after each row's REAL prompt.
+    """
+    plens = batch.get("plens")
+    batch = {k: v for k, v in batch.items() if k != "plens"}
+    return _forward_cached(params, batch, cfg, cache, 0, plens=plens)
+
+
+def decode_step_slots(params, tokens, positions, cache, cfg, done=None):
+    """Continuous-batching decode: one token per slot, O(1) state per row.
+
+    ``positions`` is accepted for protocol uniformity but unused — the
+    xLSTM recurrence is position-free.  Rows flagged ``done`` FREEZE
+    their entire per-slot state (C/n/m, sLSTM carries, conv tails): a
+    recurrent update is irreversible, so the macro-step loop's no-op
+    steps must not advance it.  Returns (logits (B, V), new_cache).
+    """
+    del positions
+    logits, new_cache = _forward_cached(
+        params, {"tokens": tokens[:, None]}, cfg, cache, 0, done=done)
+    return logits[:, -1], new_cache
+
+
+def serve_supported(cfg):
+    """Capability probe for the continuous-batching slot-decode protocol."""
+    return True, ("recurrent state (O(1) per slot: mLSTM C/n/m + conv "
+                  "tails, sLSTM c/n/h/m)")
+
+
+def slot_cache_layout(cfg):
+    return "recurrent"
 
 
 def cache_specs(cfg):

@@ -38,12 +38,14 @@ mask) is persistent and device-resident; the host touches it only through
 incremental scatters at admission/eviction — there is no per-step
 O(capacity) host rebuild and no per-token ``np.asarray``.
 
-Invariant (tested in ``tests/test_serve_engine.py``): greedy tokens are
-*exactly* the sequential ``generate()`` tokens for every request, for any
-interleaving and any K — per-row decode arithmetic is identical to the
-scalar-offset path, masked (softmax-zero) cache positions contribute
-exact zeros, and a finished row's frozen (token, position) makes its
-no-op steps re-store bit-identical K/V.
+Invariant (tested in ``tests/test_serve_engine.py`` and
+``tests/test_serve_families.py``): greedy tokens are *exactly* the
+sequential ``generate()`` tokens for every request, for any interleaving
+and any K — per-row decode arithmetic is identical to the scalar-offset
+path, masked (softmax-zero) cache positions contribute exact zeros, and
+a finished row is an exact no-op (full KV caches re-store bit-identical
+K/V at the frozen position; recurrent states freeze under the per-row
+``done`` mask).
 """
 from __future__ import annotations
 
@@ -57,7 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import get_family
+from repro.models import get_family, serve_supported, slot_cache_layout
 from repro.train.steps import make_prefill_admit_step, make_slot_decode_loop
 
 
@@ -134,11 +136,17 @@ class _Sequence:
 
 
 class ContinuousBatchingEngine:
-    """Slot-pool continuous batching over a family's cache layout.
+    """Slot-pool continuous batching over a family's slot-state protocol.
 
-    Supports the transformer family's standard KV and MLA latent caches
-    (ring-buffer window caches and recurrent states are not slot-addressable
-    by position yet).
+    The engine is family-agnostic: it only talks to ``init_cache`` /
+    ``prefill_full`` / ``decode_step_slots`` and treats the slot pool as
+    an opaque pytree whose leaves lead with (layers, capacity, ...).  That
+    covers the transformer family's full KV and MLA latent caches,
+    ring-buffer window KV caches (sliding-window configs — O(window)
+    per-slot memory), and the O(1) recurrent states of griffin (rglru h +
+    conv tails + local-attention rings) and xlstm (mLSTM C/n/m, sLSTM
+    carries, conv tails).  ``repro.models.serve_supported(cfg)`` is the
+    capability probe gating admission to this engine.
 
     ``k`` is the macro-step length: decode tokens per on-device dispatch.
     Larger K amortizes host work and syncs over more tokens; admission
@@ -149,20 +157,10 @@ class ContinuousBatchingEngine:
 
     def __init__(self, cfg, params, *, capacity: int = 8,
                  max_len: int = 256, prefill_bucket: int = 16, k: int = 8):
-        if cfg.family != "transformer":
+        ok, why = serve_supported(cfg)
+        if not ok:
             raise NotImplementedError(
-                f"continuous batching supports the transformer family only "
-                f"(got {cfg.family!r})")
-        if cfg.window:
-            raise NotImplementedError(
-                "ring-buffer window caches are not slot-addressable")
-        if not cfg.causal or cfg.continuous_inputs:
-            # bucket-padded prefill positions would be visible to
-            # bidirectional attention, silently breaking token-exactness
-            raise NotImplementedError(
-                "continuous batching requires a causal token LM "
-                f"(causal={cfg.causal}, "
-                f"continuous_inputs={cfg.continuous_inputs})")
+                f"continuous batching cannot serve {cfg.name!r}: {why}")
         if k < 1:
             raise ValueError(f"macro-step length k must be >= 1 (got {k})")
         limit = cfg.max_seq_len
@@ -176,6 +174,7 @@ class ContinuousBatchingEngine:
         self.cfg = cfg
         self.params = params
         self.fam = get_family(cfg)
+        self.cache_layout = slot_cache_layout(cfg)
         self.capacity = capacity
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket

@@ -159,6 +159,11 @@ def make_prefill_admit_step(cfg):
     first generated token of each row (argmax at its true last prompt
     position) is computed on device, so admission costs one dispatch per
     bucket group instead of one prefill + one host argmax per request.
+
+    ``plens`` rides along in the batch: full KV caches ignore it (the
+    pad tail hides behind the per-row ``kv_len`` mask), but ring-buffer
+    window caches and recurrent state (griffin, xlstm) must take each
+    row's state at its TRUE prompt boundary.
     """
     fam = get_family(cfg)
     if not hasattr(fam, "prefill_full"):
@@ -166,8 +171,8 @@ def make_prefill_admit_step(cfg):
             f"family {cfg.family!r} has no full-logits prefill")
 
     def prefill_fn(params, tokens, plens, cache):
-        logits, cache = fam.prefill_full(params, {"tokens": tokens}, cfg,
-                                         cache)
+        logits, cache = fam.prefill_full(
+            params, {"tokens": tokens, "plens": plens}, cfg, cache)
         rows = jnp.arange(tokens.shape[0])
         first = jnp.argmax(logits[rows, plens - 1], axis=-1).astype(jnp.int32)
         return first, cache
@@ -186,11 +191,14 @@ def make_slot_decode_loop(cfg, k: int):
     The host syncs once per K generated tokens instead of once per token:
     eos / max-new-token stopping is applied per slot *inside* the scan.  A
     row that finishes (or starts the block idle) stops advancing — its
-    position and token freeze, so each further step re-writes the *same*
-    K/V values at the same cache position (a bit-exact no-op) and attends
-    with ``kv_len == 0`` (the idle-row short-circuit in the attention
-    stack).  ``valid[i, b]`` marks whether ``block[i, b]`` is a really
-    generated token; rows emit their eos token as valid and then go quiet.
+    position and token freeze, and the family's ``decode_step_slots``
+    turns the row into an exact no-op: full KV caches re-store identical
+    bytes and attend with ``kv_len == 0`` (the idle-row short-circuit in
+    the attention stack); recurrent families (griffin, xlstm) freeze the
+    row's state outright via the ``done`` mask, since a recurrence update
+    cannot be re-stored.  ``valid[i, b]`` marks whether ``block[i, b]`` is
+    a really generated token; rows emit their eos token as valid and then
+    go quiet.
 
     ``eos_ids`` uses -1 for "no eos" (token ids are non-negative).
     ``remaining`` counts decode tokens still owed per row; it hits 0
