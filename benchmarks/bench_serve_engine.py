@@ -30,8 +30,18 @@ The transformer family runs the full comparison (naive + per-token +
 macro K-sweep); the recurrent families run per-token vs one macro point —
 enough to track their serving speed without tripling the bench runtime.
 
+A ``--speculate`` sweep benches the speculative engine on the paper's
+own pair: the SOURCE model (gpt-micro) is pretrained on the synthetic
+task, the target (gpt-micro-big) is grown from it with a Mango operator
+trained for a few steps (Eq. 7), and the source then drafts for its
+grown target.  Entries record ``acceptance_rate`` plus the draft/target
+config names next to tok/s, so the perf trajectory ties speedup to
+draft quality.  Partial runs (``--family``, ``--speculate``) MERGE into
+``BENCH_serve_engine.json`` — they never clobber the other sections'
+trajectory entries.
+
 Run:  PYTHONPATH=src:. python benchmarks/bench_serve_engine.py [--quick]
-          [--family transformer|griffin|xlstm|all]
+          [--family transformer|griffin|xlstm|all|none] [--speculate]
 """
 from __future__ import annotations
 
@@ -47,7 +57,7 @@ from repro.configs.base import get_config
 from repro.data.synthetic import lm_batch
 from repro.launch.serve import generate
 from repro.models import get_family, slot_cache_layout
-from repro.serve import ContinuousBatchingEngine, Request
+from repro.serve import ContinuousBatchingEngine, Request, SpeculativeConfig
 
 K_SWEEP = (4, 8, 16)
 
@@ -58,6 +68,12 @@ FAMILY_ARCHS = {
     "griffin": "recurrentgemma-2b-smoke",
     "xlstm": "xlstm-1.3b-smoke",
 }
+
+# the speculative pair: pretrained source drafts for its grown target
+SPEC_DRAFT = "gpt-micro"
+SPEC_TARGET = "gpt-micro-big"
+SPEC_D_SWEEP = (2, 4)
+SPEC_K = 2  # speculative blocks per dispatch (each commits up to d+1 tok)
 
 
 def poisson_trace(cfg, n, *, rate_hz, seed=0, max_prompt=24, max_gen=16):
@@ -90,12 +106,14 @@ def warm_naive(cfg, params, reqs, batch):
                  max_new_tokens=gmax)
 
 
-def warm_engine(cfg, params, reqs, *, capacity, max_len, k):
+def warm_engine(cfg, params, reqs, *, capacity, max_len, k,
+                speculative=None):
     """Compile every shape a (cfg, k) engine can hit on this trace: the
-    macro loop, and each (pow2 admission-group size, prefill bucket)
-    prefill/scatter pair."""
+    macro (or speculative) loop, and each (pow2 admission-group size,
+    prefill bucket) prefill/scatter pair."""
     warm = ContinuousBatchingEngine(cfg, params, capacity=capacity,
-                                    max_len=max_len, k=k)
+                                    max_len=max_len, k=k,
+                                    speculative=speculative)
     buckets = sorted({warm._bucketed(len(r.prompt)) for r in reqs})
     uid = -1
     n = 1
@@ -134,9 +152,11 @@ def bench_naive(cfg, params, reqs, batch):
     return {"tok_per_s": tput, "p50_s": p50, "p99_s": p99}
 
 
-def bench_engine(cfg, params, reqs, *, capacity, max_len, k, pipeline):
+def bench_engine(cfg, params, reqs, *, capacity, max_len, k, pipeline,
+                 speculative=None):
     engine = ContinuousBatchingEngine(cfg, params, capacity=capacity,
-                                      max_len=max_len, k=k)
+                                      max_len=max_len, k=k,
+                                      speculative=speculative)
     t0 = time.monotonic()
     engine.run(reqs, realtime=True, pipeline=pipeline)
     dt = time.monotonic() - t0
@@ -147,10 +167,15 @@ def bench_engine(cfg, params, reqs, *, capacity, max_len, k, pipeline):
            for s in engine.retired]
     p50, p99 = _pctl(lat)
     assert n_tok == engine.n_tokens  # engine accounting matches outputs
-    return {"tok_per_s": n_tok / dt, "p50_s": p50, "p99_s": p99,
-            "host_syncs_per_token": engine.n_host_syncs / max(n_tok, 1),
-            "decode_dispatches": engine.n_decode_dispatches,
-            "prefill_batches": engine.n_prefills, "k": k}
+    out = {"tok_per_s": n_tok / dt, "p50_s": p50, "p99_s": p99,
+           "host_syncs_per_token": engine.n_host_syncs / max(n_tok, 1),
+           "decode_dispatches": engine.n_decode_dispatches,
+           "prefill_batches": engine.n_prefills, "k": k}
+    if speculative is not None:
+        out["acceptance_rate"] = engine.acceptance_rate
+        out["d"] = speculative.d
+        out["draft"] = speculative.cfg.name
+    return out
 
 
 def _bench_family(family: str, quick: bool):
@@ -201,12 +226,84 @@ def _bench_family(family: str, quick: bool):
     return results
 
 
-def run(quick: bool = False, write_json: bool = True, families=None):
-    families = families or tuple(FAMILY_ARCHS)
+def _spec_pair(quick: bool):
+    """Build the paper's speculative pair: PRETRAIN the source on the
+    synthetic LM task, then grow the target from it with a Mango operator
+    trained on the task loss (Eq. 7).  The grown target approximates the
+    source's function at init — exactly what makes the source a
+    well-matched draft — so the measured acceptance rate reflects the
+    paper's setting, not random-init luck."""
+    from repro.core import grow as growlib
+    from repro.data.synthetic import lm_data_iter
+    from repro.optim import OptimizerConfig, make_optimizer
+    from repro.train.steps import make_train_step
+
+    cfg_d, cfg_t = get_config(SPEC_DRAFT), get_config(SPEC_TARGET)
+    fam_d = get_family(cfg_d)
+    params_d = fam_d.init(jax.random.PRNGKey(0), cfg_d)
+    opt_cfg = OptimizerConfig(lr=3e-3, weight_decay=1e-2)
+    opt = make_optimizer(opt_cfg)[0](params_d)
+    step_fn = jax.jit(make_train_step(cfg_d, opt_cfg),
+                      donate_argnums=(0, 1))
+    data = lm_data_iter(cfg_d.vocab_size, 8, 64, seed=0)
+    for step in range(60 if quick else 120):
+        b = {kk: jnp.asarray(v) for kk, v in next(data).items()}
+        params_d, opt, _ = step_fn(params_d, opt, b, jnp.int32(step + 1))
+    params_t = growlib.grow_from_source(
+        cfg_d, cfg_t, method="mango", rank=1, steps=10 if quick else 30,
+        data_iter=lm_data_iter(cfg_t.vocab_size, 4, 32, seed=1),
+        params_src=params_d, log_fn=lambda *a: None)
+    return cfg_t, params_t, cfg_d, params_d
+
+
+def _bench_speculative(quick: bool):
+    """Speculative sweep: non-speculative macro baseline vs d-sweep on
+    the grown target, acceptance rate recorded per entry."""
+    cfg_t, params_t, cfg_d, params_d = _spec_pair(quick)
+    n = 16 if quick else 48
+    capacity, max_len = 4, 48
+    # speculation pays off on the decode side (it double-pays prefill for
+    # the second pool), so even the quick trace keeps full-length
+    # generations — only the request count shrinks
+    reqs = poisson_trace(cfg_t, n, rate_hz=2000.0, max_prompt=16,
+                         max_gen=24)
+
+    def fresh():
+        return [Request(uid=r.uid, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens, arrival=r.arrival)
+                for r in reqs]
+
     results = {}
-    if write_json and set(families) != set(FAMILY_ARCHS):
-        # a partial --family run must not erase the other families'
-        # trajectory entries from BENCH_serve_engine.json
+    warm_engine(cfg_t, params_t, reqs, capacity=capacity, max_len=max_len,
+                k=8)
+    results["spec_baseline_k8"] = bench_engine(
+        cfg_t, params_t, fresh(), capacity=capacity, max_len=max_len, k=8,
+        pipeline=True)
+    for d in SPEC_D_SWEEP:
+        spec = SpeculativeConfig(cfg_d, params_d, d=d)
+        warm_engine(cfg_t, params_t, reqs, capacity=capacity,
+                    max_len=max_len, k=SPEC_K, speculative=spec)
+        results[f"spec_d{d}"] = bench_engine(
+            cfg_t, params_t, fresh(), capacity=capacity, max_len=max_len,
+            k=SPEC_K, pipeline=True,
+            speculative=SpeculativeConfig(cfg_d, params_d, d=d))
+    layout = slot_cache_layout(cfg_t)
+    for m in results.values():
+        m["family"] = cfg_t.family
+        m["cache_layout"] = layout
+        m["target"] = cfg_t.name
+    return results
+
+
+def run(quick: bool = False, write_json: bool = True, families=None,
+        speculate: bool = False):
+    families = tuple(FAMILY_ARCHS) if families is None else tuple(families)
+    results = {}
+    partial = set(families) != set(FAMILY_ARCHS) or speculate
+    if write_json and partial:
+        # a partial run (--family subset, --speculate) must MERGE into
+        # BENCH_serve_engine.json, never erase the other sections'
+        # trajectory entries
         import json
         import pathlib
         path = pathlib.Path(__file__).resolve().parent.parent / \
@@ -215,6 +312,8 @@ def run(quick: bool = False, write_json: bool = True, families=None):
             results.update(json.loads(path.read_text()).get("metrics", {}))
     for family in families:
         results.update(_bench_family(family, quick))
+    if speculate:
+        results.update(_bench_speculative(quick))
 
     for name, m in results.items():
         print(f"serve_{name},tok_per_s,{m['tok_per_s']:.1f}")
@@ -223,6 +322,8 @@ def run(quick: bool = False, write_json: bool = True, families=None):
         if "host_syncs_per_token" in m:
             print(f"serve_{name},host_syncs_per_token,"
                   f"{m['host_syncs_per_token']:.3f}")
+        if "acceptance_rate" in m:
+            print(f"serve_{name},acceptance_rate,{m['acceptance_rate']:.3f}")
     if write_json:
         path = write_bench_json("serve_engine", results)
         print(f"# wrote {path}")
@@ -234,8 +335,14 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--no-json", action="store_true")
     ap.add_argument("--family", default="all",
-                    choices=["all"] + sorted(FAMILY_ARCHS),
-                    help="restrict the sweep to one model family")
+                    choices=["all", "none"] + sorted(FAMILY_ARCHS),
+                    help="restrict the sweep to one model family "
+                         "('none': only the --speculate section)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="also bench speculative decode on the grown "
+                         "gpt-micro pair (acceptance_rate recorded)")
     a = ap.parse_args()
-    fams = tuple(FAMILY_ARCHS) if a.family == "all" else (a.family,)
-    run(quick=a.quick, write_json=not a.no_json, families=fams)
+    fams = {"all": tuple(FAMILY_ARCHS), "none": ()}.get(
+        a.family, (a.family,))
+    run(quick=a.quick, write_json=not a.no_json, families=fams,
+        speculate=a.speculate)

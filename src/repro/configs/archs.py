@@ -167,6 +167,29 @@ def recurrentgemma_2b_smoke():
         compute_dtype="float32", attn_chunk=16)
 
 
+@register_named("griffin-micro")
+def griffin_micro():
+    """Micro griffin (rec, rec, attn) — the recurrent-family analogue of
+    gpt-micro: CPU-feasible growth source and speculative draft.  Its
+    window (16) is far below max_seq_len, so serve-time local-attention
+    rings genuinely wrap."""
+    return ModelConfig(
+        name="griffin-micro", family="griffin", n_layers=3, d_model=64,
+        n_heads=4, n_kv_heads=1, head_dim=16, d_ff=192, vocab_size=257,
+        lru_width=64, conv_width=4, window=16, act="geglu", norm="rms",
+        rope_theta=10000.0, scale_embeddings=True, tie_embeddings=True,
+        max_seq_len=256, attn_chunk=16)
+
+
+@register_named("griffin-micro-big")
+def griffin_micro_big():
+    """Growth/speculation target for griffin-micro (2x layers, 2x width,
+    same vocab + window)."""
+    return griffin_micro().replace(
+        name="griffin-micro-big", n_layers=6, d_model=128, n_heads=4,
+        head_dim=32, d_ff=384, lru_width=128)
+
+
 @register_named("qwen2-vl-72b")
 def qwen2_vl_72b():
     return ModelConfig(

@@ -18,6 +18,17 @@ production scale.  Usable as a library (examples) or CLI:
   # end-to-end at serve time)
   PYTHONPATH=src python -m repro.launch.serve --arch gpt-micro-big \
       --engine continuous --grow gpt-micro --grow-method mango
+
+  # speculative serving: the pretrained SOURCE drafts for its grown
+  # target (with --grow the source checkpoint is reused as the draft;
+  # --draft picks any other servable config with the same vocab)
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt-micro-big \
+      --engine continuous --grow gpt-micro --speculate --spec-d 4
+
+  # non-greedy decode in the macro loop (also valid with --speculate:
+  # draft proposals then go through rejection sampling)
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b-smoke \
+      --engine continuous --temperature 0.8 --top-k 40 --top-p 0.95
 """
 from __future__ import annotations
 
@@ -32,7 +43,14 @@ import numpy as np
 from repro.configs.base import get_config, list_configs
 from repro.data.synthetic import lm_batch
 from repro.models import get_family, serve_supported
-from repro.serve import ContinuousBatchingEngine, Request
+from repro.serve import (
+    ContinuousBatchingEngine,
+    Request,
+    SamplingParams,
+    SpeculativeConfig,
+    spec_pair_supported,
+)
+from repro.serve.engine import POLICIES
 from repro.train.steps import make_decode_step, make_prefill_step
 
 
@@ -64,22 +82,32 @@ def generate(cfg, params, prompt_tokens, *, max_new_tokens=16,
 
 
 def build_params(cfg, *, grow_from=None, grow_method="mango", grow_rank=1,
-                 grow_steps=0, seed=0, log_fn=print):
+                 grow_steps=0, seed=0, log_fn=print, return_source=False):
     """Init params — directly, or grown from a source architecture via the
-    paper's multi-linear operator (``core/grow.py``)."""
+    paper's multi-linear operator (``core/grow.py``).
+
+    ``return_source=True`` returns ``(params, cfg_src, params_src)`` —
+    the pretrained source checkpoint the target was grown from, which is
+    exactly the draft model speculative serving wants (``cfg_src`` /
+    ``params_src`` are ``None`` without ``grow_from``).
+    """
     fam = get_family(cfg)
     rng = jax.random.PRNGKey(seed)
     if not grow_from:
-        return fam.init(rng, cfg)
+        params = fam.init(rng, cfg)
+        return (params, None, None) if return_source else params
 
     from repro.core import grow as growlib
     from repro.data.synthetic import lm_data_iter
 
-    return growlib.grow_from_source(
-        get_config(grow_from), cfg, method=grow_method, rank=grow_rank,
-        steps=grow_steps,
+    cfg_src = get_config(grow_from)
+    params_src = get_family(cfg_src).init(rng, cfg_src)
+    params = growlib.grow_from_source(
+        cfg_src, cfg, method=grow_method, rank=grow_rank,
+        steps=grow_steps, params_src=params_src,
         data_iter=lm_data_iter(cfg.vocab_size, 4, 32, seed=seed + 1),
         rng=rng, log_fn=log_fn)
+    return (params, cfg_src, params_src) if return_source else params
 
 
 def require_servable(cfg):
@@ -108,6 +136,23 @@ def require_servable(cfg):
         "(--engine naive runs any decoder config lock-step.)")
 
 
+def require_spec_servable(cfg_tgt, cfg_draft, d, max_len):
+    """Gate ``--speculate`` behind the PAIR probe.
+
+    Speculative serving needs BOTH models servable through the
+    chunk-verify slot protocol (plus a shared vocabulary and a verify
+    chunk that fits every ring) — probing only the target would accept
+    pairs that fail at the first draft step.  The probe detail reports
+    per-mode servability for each model, so the error names the failing
+    side."""
+    ok, why = spec_pair_supported(cfg_tgt, cfg_draft, d, max_len)
+    if ok:
+        print(f"[serve] speculative pair: {why}")
+        return
+    raise SystemExit(
+        f"error: --speculate cannot serve this draft/target pair: {why}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -122,8 +167,12 @@ def main():
     ap.add_argument("--max-len", type=int, default=0,
                     help="continuous: per-slot cache length (0 = auto)")
     ap.add_argument("--k", type=int, default=8,
-                    help="continuous: macro-step length (decode tokens per "
-                         "on-device dispatch; host syncs once per K tokens)")
+                    help="continuous: macro-step length (decode tokens — or "
+                         "speculative blocks — per on-device dispatch; host "
+                         "syncs once per dispatch)")
+    ap.add_argument("--policy", default="fifo", choices=list(POLICIES),
+                    help="admission policy: fifo, or spf (length-bucketed "
+                         "shortest-prefill-first — less pad waste)")
     ap.add_argument("--grow", default=None, metavar="SRC_ARCH",
                     help="grow params from this source arch before serving")
     ap.add_argument("--grow-method", default="mango",
@@ -131,16 +180,66 @@ def main():
                              "net2net"])
     ap.add_argument("--grow-rank", type=int, default=1)
     ap.add_argument("--grow-steps", type=int, default=0)
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative decode: a draft model proposes, the "
+                         "target verifies (needs --draft, or --grow whose "
+                         "source checkpoint then drafts)")
+    ap.add_argument("--draft", default=None, metavar="DRAFT_ARCH",
+                    help="draft config for --speculate (default: the --grow "
+                         "source)")
+    ap.add_argument("--spec-d", type=int, default=4,
+                    help="speculation depth: draft proposals per block")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--sample-seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.engine == "continuous":
         # probe BEFORE param init/growth — rejection must not cost a grow
         require_servable(cfg)
-    params = build_params(cfg, grow_from=args.grow,
-                          grow_method=args.grow_method,
-                          grow_rank=args.grow_rank,
-                          grow_steps=args.grow_steps)
+    sampling = None
+    if args.temperature > 0:
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.sample_seed)
+    if args.engine == "naive" and (sampling is not None
+                                   or args.policy != "fifo"):
+        # silently greedy-decoding while the user asked for sampling
+        # would misrepresent the output
+        raise SystemExit("error: --temperature/--top-k/--top-p/--policy "
+                         "require --engine continuous (the naive loop is "
+                         "greedy lock-step)")
+    speculative = None
+    max_len = args.max_len or (args.prompt_len + args.gen)
+    if args.speculate:
+        if args.engine != "continuous":
+            raise SystemExit("error: --speculate requires --engine "
+                             "continuous")
+        draft_name = args.draft or args.grow
+        if draft_name is None:
+            raise SystemExit("error: --speculate needs a draft model — "
+                             "pass --draft ARCH, or --grow SRC (the "
+                             "pretrained source then drafts for its grown "
+                             "target)")
+        # probe the PAIR before any param init/growth
+        require_spec_servable(cfg, get_config(draft_name), args.spec_d,
+                              max_len)
+    params, cfg_src, params_src = build_params(
+        cfg, grow_from=args.grow, grow_method=args.grow_method,
+        grow_rank=args.grow_rank, grow_steps=args.grow_steps,
+        return_source=True)
+    if args.speculate:
+        if args.draft and (cfg_src is None or args.draft != cfg_src.name):
+            cfg_d = get_config(args.draft)
+            params_d = get_family(cfg_d).init(jax.random.PRNGKey(0), cfg_d)
+        else:
+            # the paper's pair: the pretrained source checkpoint the
+            # target was grown from doubles as the draft
+            cfg_d, params_d = cfg_src, params_src
+        speculative = SpeculativeConfig(cfg_d, params_d, d=args.spec_d)
 
     if args.engine == "naive":
         prompts = jnp.asarray(lm_batch(cfg.vocab_size, args.batch,
@@ -154,9 +253,10 @@ def main():
         print(np.asarray(toks[:2]))
         return
 
-    max_len = args.max_len or (args.prompt_len + args.gen)
     engine = ContinuousBatchingEngine(cfg, params, capacity=args.capacity,
-                                      max_len=max_len, k=args.k)
+                                      max_len=max_len, k=args.k,
+                                      policy=args.policy, sampling=sampling,
+                                      speculative=speculative)
     rng = np.random.default_rng(0)
     reqs = []
     for uid in range(args.batch):
@@ -169,12 +269,17 @@ def main():
     out = engine.run(reqs)
     dt = time.time() - t0
     n_tok = sum(len(v) for v in out.values())
-    print(f"[continuous] {cfg.family}/{engine.cache_layout} served "
+    mode = "speculative" if speculative is not None else "continuous"
+    spec_note = "" if speculative is None else (
+        f", draft={speculative.cfg.name} d={speculative.d} "
+        f"acceptance={engine.acceptance_rate:.2f}")
+    print(f"[{mode}] {cfg.family}/{engine.cache_layout} served "
           f"{len(reqs)} requests / {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, "
           f"{engine.n_decode_dispatches} macro-steps of K={args.k}, "
           f"{engine.n_prefills} prefill batches, "
-          f"{engine.n_host_syncs / max(n_tok, 1):.2f} host syncs/token)")
+          f"{engine.n_host_syncs / max(n_tok, 1):.2f} host syncs/token"
+          f"{spec_note})")
     for uid in sorted(out)[:2]:
         print(uid, out[uid])
 

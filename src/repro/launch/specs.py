@@ -65,13 +65,16 @@ def slot_pool_specs(cfg: ModelConfig, capacity: int, max_len: int):
 
 def slot_decode_specs(cfg: ModelConfig, capacity: int, max_len: int):
     """Abstract inputs of one slot-decode macro-step dispatch
-    (``make_slot_decode_loop``): the engine's persistent device-resident
-    decode state plus the slot pool."""
+    (``make_slot_decode_loop`` / ``make_speculative_loop``): the engine's
+    persistent device-resident decode state plus the slot pool.  ``keys``
+    are the per-slot sampling chains — carried (and donated) even in
+    greedy mode, consumed by the sampled and speculative loops."""
     return {
         "tokens": S((capacity,), jnp.int32),
         "positions": S((capacity,), jnp.int32),
         "remaining": S((capacity,), jnp.int32),
         "eos_ids": S((capacity,), jnp.int32),
         "done": S((capacity,), jnp.bool_),
+        "keys": S((capacity, 2), jnp.uint32),
         "pool": slot_pool_specs(cfg, capacity, max_len),
     }

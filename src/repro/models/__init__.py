@@ -16,6 +16,18 @@ implement the SLOT-STATE PROTOCOL (see docs/serving.md):
       one token per slot at per-slot lengths; ``done`` rows are exact
       no-ops (frozen state / bit-identical cache re-stores)
   serve_supported(cfg) -> (ok, detail)
+
+Families that additionally serve as a speculative draft/target implement
+the chunk-verify extension of the protocol:
+  verify_step_slots(params, tokens (B,S), positions (B,), cache, cfg,
+                    done=None) -> (logits (B,S,V), pending)
+      feed an S-token chunk per slot starting at each row's own length,
+      logits at every chunk index, cache READ-ONLY;
+  commit_slots(params, tokens, positions, n_feed (B,), cache, pending,
+               cfg, done=None) -> cache
+      realize exactly each row's first ``n_feed`` chunk feeds (accepted
+      prefix) — deferred scatter for KV layouts, stacked-state gather for
+      recurrent layouts; ``n_feed == 0`` / ``done`` rows are untouched.
 """
 from __future__ import annotations
 
@@ -48,6 +60,21 @@ def serve_supported(cfg):
         return False, (f"family {cfg.family!r} does not implement the "
                        "slot-state protocol")
     return probe(cfg)
+
+
+def spec_decode_supported(cfg):
+    """Capability probe: can this config run as a speculative draft or
+    target?  Requires the slot-state protocol plus the chunk-verify hooks
+    (``verify_step_slots`` / ``commit_slots``)."""
+    ok, detail = serve_supported(cfg)
+    if not ok:
+        return ok, detail
+    fam = get_family(cfg)
+    if not (hasattr(fam, "verify_step_slots")
+            and hasattr(fam, "commit_slots")):
+        return False, (f"family {cfg.family!r} does not implement the "
+                       "chunk-verify (speculative) slot hooks")
+    return True, detail
 
 
 def slot_cache_layout(cfg):

@@ -285,6 +285,72 @@ def ring_slot_update_attend(q, cache, k, v, slot_positions, *, window,
     return out, new_cache
 
 
+def chunk_verify_kpos(offsets, cache_len, S, *, ring: bool):
+    """Absolute key positions of [cache ‖ chunk] for the speculative
+    verify: (B, cache_len + S) int32, -1 for unattendable cache entries.
+
+    ``offsets`` (B,) is each row's chunk start (== its committed length):
+    ring caches reconstruct per-slot positions from the ring invariant at
+    that length; full-layout caches are valid on ``[0, offsets)`` and the
+    tail (stale bytes of a longer previous tenant, or positions the row
+    has not reached) is masked out.  Chunk key ``i`` sits at absolute
+    position ``offsets + i``.
+    """
+    B = offsets.shape[0]
+    if ring:
+        kpos_cache = ring_positions_rows(offsets, cache_len)
+    else:
+        kpos_cache = jnp.broadcast_to(
+            jnp.arange(cache_len, dtype=jnp.int32)[None], (B, cache_len))
+        kpos_cache = jnp.where(kpos_cache < offsets[:, None], kpos_cache, -1)
+    kpos_chunk = offsets[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    return jnp.concatenate([kpos_cache, kpos_chunk], axis=1)
+
+
+def chunk_verify_mask(offsets, kpos, S, *, window=None, done=None):
+    """(B, S, Sk) mask for the speculative verify chunk: query ``j`` (at
+    absolute position ``offsets + j``) attends keys whose absolute
+    position is in ``(qpos - window, qpos]`` and was ever written; rows
+    flagged ``done`` attend nothing (their output is pinned to zeros by
+    the caller, matching the idle-row slot semantics)."""
+    qpos = offsets[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    m = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= qpos[:, :, None])
+    if window is not None:
+        m &= kpos[:, None, :] > qpos[:, :, None] - window
+    if done is not None:
+        m &= ~done[:, None, None]
+    return m
+
+
+def chunk_verify_attend(q, ck, cv, k, v, offsets, *, ring: bool,
+                        window=None, done=None, scale=None,
+                        logits_dtype=jnp.float32):
+    """Speculative-verify attention: S chunk queries per row over
+    [cache ‖ in-flight chunk], each row's chunk starting at its own
+    absolute offset, WITHOUT writing the cache.
+
+    q: (B, S, H, hd); ck/cv: (B, Sc, KV, hd) read-only cache (full-layout
+    prefix or ring buffer); k/v: (B, S, KV, hd) the chunk's own K/V;
+    offsets: (B,) committed length per row.  The cache stays untouched —
+    ``commit_slots`` later scatters only the *accepted* chunk prefix, so
+    speculative rollback is "never wrote it" rather than "undo it".
+    Returns (B, S, H, hd_v); ``done`` rows return exact zeros.
+    """
+    B, S, H, hd = q.shape
+    KV = ck.shape[2]
+    if scale is None:
+        scale = hd ** -0.5
+    kpos = chunk_verify_kpos(offsets, ck.shape[1], S, ring=ring)
+    mask = chunk_verify_mask(offsets, kpos, S, window=window, done=done)
+    k_all = jnp.concatenate([ck.astype(q.dtype), k], axis=1)
+    v_all = jnp.concatenate([cv.astype(q.dtype), v], axis=1)
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    out = _sdpa(qg, k_all, v_all, mask, scale, logits_dtype)
+    if done is not None:
+        out = jnp.where(done[:, None, None, None, None], 0.0, out)
+    return out.reshape(B, S, H, v_all.shape[-1])
+
+
 def reference_attention(q, k, v, *, causal=True, window=None, kv_len=None,
                         scale=None):
     """Tiny-oracle full attention (tests only — materializes S×S)."""

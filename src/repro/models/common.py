@@ -87,3 +87,97 @@ def freeze_rows(old, new, done):
         return jnp.where(mask, o, n)
 
     return jax.tree.map(per_leaf, old, new)
+
+
+# ------------------------------------------- speculative-decode slot hooks
+def spec_verify_scan(step_fn, params, tokens, positions, cache, cfg,
+                     done=None, stack_filter=None):
+    """Generic ``verify_step_slots`` for recurrent slot layouts.
+
+    Scans the family's single-token ``decode_step_slots`` over the chunk
+    axis, stacking the per-step slot state — the recurrent realization of
+    the speculative verify: a recurrence has no one-shot parallel verify,
+    but its per-slot state is O(1), so snapshotting it at EVERY chunk
+    position is cheap and gives exact per-row rollback for free.  Because
+    each step runs the very same (B, 1) slot-decode arithmetic as the
+    sequential path, the logits (and the committed state, after
+    ``spec_commit_gather``) are bit-identical to feeding the chunk token
+    by token.
+
+    ``stack_filter`` selects the sub-pytree of the cache to stack —
+    families whose slot cache mixes O(1) recurrent leaves with larger
+    ones (griffin's O(window) local-attention rings) must stack only the
+    former and commit the rest via ``spec_ring_restore``; stacking a
+    window-sized ring S times would multiply its memory by the chunk
+    length.
+
+    tokens: (B, S) chunk per slot; positions: (B,) per-row start offsets.
+    Returns (logits (B, S, V), stacked, final): ``stacked`` mirrors the
+    (filtered) cache pytree with a leading chunk axis — ``stacked[j]`` is
+    the state after each row fed its first ``j + 1`` chunk tokens — and
+    ``final`` is the full post-chunk cache.
+    """
+    def body(cache_c, xs):
+        tok, j = xs
+        logits, cache_n = step_fn(params, tok, positions + j, cache_c, cfg,
+                                  done=done)
+        ys = cache_n if stack_filter is None else stack_filter(cache_n)
+        return cache_n, (logits, ys)
+
+    steps = jnp.arange(tokens.shape[1], dtype=positions.dtype)
+    final, (logits, stacked) = jax.lax.scan(body, cache, (tokens.T, steps))
+    return jnp.swapaxes(logits, 0, 1), stacked, final
+
+
+def spec_commit_gather(cache, stacked, n_feed, done=None):
+    """Generic ``commit_slots`` for recurrent (O(1)-per-slot) leaves.
+
+    Selects, per row, the stacked per-step state at the accepted boundary:
+    row ``b`` gets ``stacked[n_feed[b] - 1]`` — the state after its first
+    ``n_feed[b]`` chunk feeds — and rows with ``n_feed == 0`` (or flagged
+    ``done``) keep their pre-chunk state untouched.  This is the
+    snapshot/restore mirror of ``freeze_rows``: the rejected tail of the
+    chunk never reaches the committed state because the gather simply
+    predates it.
+    """
+    keep = n_feed <= 0
+    if done is not None:
+        keep = keep | done
+    idx = jnp.maximum(n_feed - 1, 0)
+
+    def per_leaf(old, st):
+        # st: (S, L, B, ...) stacked states; old: (L, B, ...)
+        B = old.shape[1]
+        sel = jnp.take_along_axis(
+            st, idx.reshape((1, 1, B) + (1,) * (old.ndim - 2)), axis=0)[0]
+        mask = keep.reshape((1, B) + (1,) * (old.ndim - 2))
+        return jnp.where(mask, old, sel)
+
+    return jax.tree.map(per_leaf, cache, stacked)
+
+
+def spec_ring_restore(old, new, positions, n_feed, chunk_len):
+    """Commit ring-buffer leaves after a verify scan WITHOUT per-step
+    stacking: keep the post-chunk bytes where the chunk write was
+    accepted, restore the pre-chunk bytes where it was rejected.
+
+    ``old``/``new`` are matching pytrees of (layers, B, ring, ...) ring
+    caches before/after the scan; chunk index ``j`` wrote row ``b``'s
+    slot ``(positions[b] + j) % ring`` and is rejected iff
+    ``j >= n_feed[b]``.  Requires ``chunk_len <= ring`` (the speculative
+    pair probe enforces ``d + 1 <= window``), so no ring slot is written
+    twice within one chunk and accept/reject is per-slot unambiguous.
+    """
+    j = jnp.arange(chunk_len)
+
+    def per_leaf(o, n):
+        ring = o.shape[2]
+        B = o.shape[1]
+        wslot = (positions[:, None] + j[None]) % ring  # (B, chunk)
+        rejected = j[None] >= n_feed[:, None]  # (B, chunk)
+        restore = jnp.zeros((B, ring), bool).at[
+            jnp.arange(B)[:, None], wslot].max(rejected)
+        mask = restore.reshape((1, B, ring) + (1,) * (o.ndim - 3))
+        return jnp.where(mask, o, n)
+
+    return jax.tree.map(per_leaf, old, new)

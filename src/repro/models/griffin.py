@@ -475,6 +475,45 @@ def decode_step_slots(params, tokens, positions, cache, cfg, done=None):
     return logits[:, -1], new_cache
 
 
+def verify_step_slots(params, tokens, positions, cache, cfg, done=None):
+    """Speculative verify for the recurrent slot layout: one fused scan of
+    the single-token slot decode over the chunk.  Only the genuinely O(1)
+    recurrent state (rglru h, conv tails) is stacked per chunk position;
+    the O(window) local-attention rings are NOT — they commit through an
+    accept-masked restore instead, so verify memory stays O(state +
+    window), not O(chunk * window).  Bit-identical to sequential decode
+    by construction — each scan step runs the same (B, 1) arithmetic as
+    the macro decode loop.
+    """
+    from repro.models.common import spec_verify_scan
+    logits, stacked, final = spec_verify_scan(
+        decode_step_slots, params, tokens, positions, cache, cfg,
+        done=done, stack_filter=lambda c: {"rec": c["rec"]})
+    pending = {"rec": stacked["rec"]}
+    if "attn" in cache:
+        pending["attn_new"] = final["attn"]
+    return logits, pending
+
+
+def commit_slots(params, tokens, positions, n_feed, cache, pending, cfg,
+                 done=None):
+    """Commit per leaf kind: recurrent state gathers the stacked verify
+    snapshots at ``n_feed - 1`` per row (the ``freeze_rows``-style
+    snapshot/restore a recurrence needs — its updates cannot be
+    re-stored); local-attention rings keep the scan's accepted writes and
+    restore pre-chunk bytes at rejected slots.  Rows with ``n_feed == 0``
+    or flagged ``done`` keep their pre-chunk state wholesale."""
+    from repro.models.common import spec_commit_gather, spec_ring_restore
+    del params
+    if done is not None:
+        n_feed = jnp.where(done, 0, n_feed)
+    out = {"rec": spec_commit_gather(cache["rec"], pending["rec"], n_feed)}
+    if "attn" in cache:
+        out["attn"] = spec_ring_restore(cache["attn"], pending["attn_new"],
+                                        positions, n_feed, tokens.shape[1])
+    return out
+
+
 def serve_supported(cfg):
     """Capability probe for the continuous-batching slot-decode protocol."""
     pat = block_pattern(cfg)

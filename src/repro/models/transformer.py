@@ -161,7 +161,7 @@ def _slot_kv_len(slot_positions, slot_done):
 
 def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
                   kv_len=None, window=None, slot_positions=None,
-                  slot_done=None, plens=None):
+                  slot_done=None, plens=None, chunk_offsets=None):
     """Returns (out, new_cache_entry). x: (B,S,D).
 
     ``slot_positions`` (B,) switches to the continuous-batching decode path:
@@ -176,6 +176,13 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
     be filled per row from each prompt's true length (a full cache needs
     nothing — its pad-tail entries stay invisible behind the per-row
     ``kv_len`` mask until overwritten).
+
+    ``chunk_offsets`` (B,) marks a SPECULATIVE VERIFY chunk: S tokens per
+    row starting at each row's own committed length.  The cache is
+    READ-ONLY — attention runs over [cache ‖ in-flight chunk] by absolute
+    position and the chunk's K/V is returned as the pending entry for
+    ``commit_slots``'s accept-masked scatter (rejected speculative
+    positions are simply never written).
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -185,7 +192,8 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
         return _mla_forward(x, p, cfg, positions, cache=cache,
                             q_offset=q_offset, kv_len=kv_len,
                             slot_positions=slot_positions,
-                            slot_done=slot_done)
+                            slot_done=slot_done,
+                            chunk_offsets=chunk_offsets)
 
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(cdt))
     k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(cdt))
@@ -213,6 +221,17 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
     q = annotate(q, ("batch", "seq", "heads", "head_dim"))
     k = annotate(k, ("batch", "seq", "kv_heads", "head_dim"))
     v = annotate(v, ("batch", "seq", "kv_heads", "head_dim"))
+
+    if chunk_offsets is not None:
+        # speculative verify: attend [cache ‖ chunk] read-only; a window
+        # cache whose length equals the window is a wrapping ring (slot =
+        # pos % ring), a shorter one never wraps and indexes directly
+        is_ring = window is not None and cache["k"].shape[1] == window
+        out = attn_lib.chunk_verify_attend(
+            q, cache["k"], cache["v"], k, v, chunk_offsets, ring=is_ring,
+            window=window, done=slot_done,
+            logits_dtype=jnp.dtype(cfg.attn_logits_dtype))
+        return _attn_out(out, p, cfg, cdt), {"k": k, "v": v}
 
     new_cache = None
     if slot_positions is not None:
@@ -327,7 +346,7 @@ def _ring_window_attend(q, ck, cv, kpos_abs, q_offset, cfg):
 
 
 def _mla_forward(x, p, cfg, positions, *, cache=None, q_offset=0, kv_len=None,
-                 slot_positions=None, slot_done=None):
+                 slot_positions=None, slot_done=None, chunk_offsets=None):
     """DeepSeek-V3 Multi-head Latent Attention (arXiv:2412.19437)."""
     B, S, D = x.shape
     cdt = x.dtype
@@ -346,6 +365,15 @@ def _mla_forward(x, p, cfg, positions, *, cache=None, q_offset=0, kv_len=None,
     kr = apply_rope(kr[:, :, None, :], positions,
                     theta=cfg.rope_theta)[:, :, 0]
 
+    if chunk_offsets is not None:
+        # speculative verify in the latent space: absorbed-weight
+        # attention over [cached latents ‖ chunk latents] at per-row
+        # offsets, cache read-only; the raw chunk latents are the pending
+        # entry for ``commit_slots``
+        out = _mla_chunk_verify(q_nope, q_rope, cache, ckv, kr, p, cfg,
+                                chunk_offsets, slot_done)
+        y = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
+        return y, {"ckv": ckv, "kr": kr}
     new_cache = None
     if slot_positions is not None:
         # continuous-batching decode: per-row latent-cache scatter + the
@@ -439,12 +467,47 @@ def _mla_absorbed_decode(q_nope, q_rope, ckv, kr, p, cfg, *, kv_len):
     return out.reshape(B, 1, H * dv)
 
 
+def _mla_chunk_verify(q_nope, q_rope, cache, ckv, kr, p, cfg, offsets, done):
+    """Speculative-verify MLA attention: S chunk queries per row over
+    [cached latents ‖ this chunk's raw latents], cache read-only.
+
+    q_nope: (B,S,H,dn); q_rope: (B,S,H,dr); cache: {"ckv": (B,Smax,R),
+    "kr": (B,Smax,dr)}; ckv/kr: (B,S,·) the chunk's latents.  Returns
+    (B, S, H*dv); ``done`` rows return exact zeros.
+    """
+    B, S, H, dn = q_nope.shape
+    R, dv = cfg.kv_lora_rank, cfg.v_head_dim
+    ckv_all = jnp.concatenate([cache["ckv"].astype(ckv.dtype), ckv], 1)
+    kr_all = jnp.concatenate([cache["kr"].astype(kr.dtype), kr], 1)
+    ckv_n = rms_norm(ckv_all, p["kv_norm"])
+    w_uk = p["w_uk"].astype(q_nope.dtype).reshape(R, H, dn)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    logits = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_n,
+                        preferred_element_type=jnp.float32)
+    logits += jnp.einsum("bqhd,bsd->bhqs", q_rope, kr_all,
+                         preferred_element_type=jnp.float32)
+    logits *= (dn + cfg.qk_rope_dim) ** -0.5
+    kpos = attn_lib.chunk_verify_kpos(offsets, cache["ckv"].shape[1], S,
+                                      ring=False)
+    mask = attn_lib.chunk_verify_mask(offsets, kpos, S, done=done)
+    logits = jnp.where(mask[:, None], logits, attn_lib.NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(ckv_all.dtype)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv_n)
+    w_uv = p["w_uv"].astype(ckv_all.dtype).reshape(R, H, dv)
+    out = jnp.einsum("bqhr,rhv->bqhv", o_lat, w_uv)
+    if done is not None:
+        out = jnp.where(done[:, None, None, None], 0.0, out)
+    return out.reshape(B, S, H * dv)
+
+
 def _block(x, bp, cfg, positions, *, moe, cache=None, q_offset=0,
-           window=None, slot_positions=None, slot_done=None, plens=None):
+           window=None, slot_positions=None, slot_done=None, plens=None,
+           chunk_offsets=None):
     h, new_cache = _attn_forward(
         apply_norm(x, bp["ln1"], cfg.norm), bp["attn"], cfg, positions,
         cache=cache, q_offset=q_offset, window=window,
-        slot_positions=slot_positions, slot_done=slot_done, plens=plens)
+        slot_positions=slot_positions, slot_done=slot_done, plens=plens,
+        chunk_offsets=chunk_offsets)
     x = x + h
     hin = apply_norm(x, bp["ln2"], cfg.norm)
     if moe:
@@ -457,7 +520,8 @@ def _block(x, bp, cfg, positions, *, moe, cache=None, q_offset=0,
 
 
 def _run_group(x, group, cfg, positions, *, moe, caches=None, q_offset=0,
-               slot_positions=None, slot_done=None, plens=None):
+               slot_positions=None, slot_done=None, plens=None,
+               chunk_offsets=None):
     """Scan a stacked block group. caches: stacked (n, ...) or None."""
     def body(carry, xs):
         xc, aux_sum = carry
@@ -470,7 +534,8 @@ def _run_group(x, group, cfg, positions, *, moe, caches=None, q_offset=0,
         xc, aux, nc = _block(xc, bp, cfg, positions, moe=moe, cache=cache_l,
                              q_offset=q_offset, window=cfg.window,
                              slot_positions=slot_positions,
-                             slot_done=slot_done, plens=plens)
+                             slot_done=slot_done, plens=plens,
+                             chunk_offsets=chunk_offsets)
         return (xc, aux_sum + aux), nc
 
     if cfg.remat == "block":
@@ -703,6 +768,78 @@ def decode_step_slots(params, tokens, positions, cache, cfg, done=None):
     logits, cache = _forward_cached_slots(params, batch, cfg, cache,
                                           positions, slot_done=done)
     return logits[:, -1], cache
+
+
+def verify_step_slots(params, tokens, positions, cache, cfg, done=None):
+    """Speculative verify: feed an (B, S) token chunk per slot, each row
+    starting at its own committed length ``positions[b]``, in ONE batched
+    forward — the parallel target pass of speculative decoding.
+
+    Returns (logits (B, S, V), pending): ``logits[:, j]`` is the
+    distribution after each row consumed its chunk prefix ``[:j + 1]``.
+    The slot cache is READ-ONLY here; ``pending`` carries the chunk's
+    per-layer K/V (latents for MLA) so ``commit_slots`` can scatter
+    exactly the accepted prefix afterwards — speculative rollback is
+    "never wrote it", not "undo it", for every KV layout including
+    ring-buffer windows.  ``done`` rows attend nothing and return
+    garbage logits the caller must mask.
+    """
+    B, S = tokens.shape
+    batch = {"tokens": tokens}
+    pos2d = positions[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    if cfg.learned_pos:
+        # clamp keeps speculative overshoot past the position table legal;
+        # overshot positions are never committed (budget-masked)
+        batch["positions"] = jnp.minimum(pos2d, cfg.learned_pos - 1)
+    x = embed_inputs(params, batch, cfg)
+    pos = pos2d
+    if cfg.rope == "mrope":
+        pos = jnp.broadcast_to(pos2d[None], (3, B, S))
+    pending = {}
+    if "dense_blocks" in params:
+        x, _, pd = _run_group(x, params["dense_blocks"], cfg, pos,
+                              moe=False, caches=cache["dense"],
+                              chunk_offsets=positions, slot_done=done)
+        pending["dense"] = pd
+    if "moe_blocks" in params:
+        x, _, pd = _run_group(x, params["moe_blocks"], cfg, pos,
+                              moe=True, caches=cache["moe"],
+                              chunk_offsets=positions, slot_done=done)
+        pending["moe"] = pd
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return _head(params, x, cfg), pending
+
+
+def commit_slots(params, tokens, positions, n_feed, cache, pending, cfg,
+                 done=None):
+    """Commit each row's accepted chunk prefix: scatter the pending K/V of
+    chunk indices ``j < n_feed[b]`` at ``positions[b] + j`` (``% ring``
+    for ring-buffer layouts) and drop the rest — rejected speculative
+    positions never reach the cache, so KV truncation is implicit in the
+    row's committed length.  Rows with ``n_feed == 0`` (or ``done``) are
+    untouched bit-for-bit: their scatter indices are all out of range.
+    """
+    del params, tokens
+    if done is not None:
+        n_feed = jnp.where(done, 0, n_feed)
+    leaf0 = jax.tree.leaves(pending)[0]
+    B, S = leaf0.shape[1], leaf0.shape[2]
+    pos = positions[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    committed = jnp.arange(S)[None] < n_feed[:, None]
+    b_idx = jnp.arange(B)[:, None]
+
+    def per_leaf(cl, pl):
+        # cl: (L, B, Sc, ...) cache; pl: (L, B, S, ...) chunk pending.
+        # ``pos % Sc`` is the ring slot for wrapping window caches and the
+        # identity for full layouts (committed positions are < Sc by the
+        # engine's max_len admission bound); uncommitted rows target the
+        # out-of-range index Sc and are dropped by the scatter.
+        Sc = cl.shape[2]
+        idx = jnp.where(committed, pos % Sc, Sc)
+        return jax.vmap(
+            lambda c, ch: c.at[b_idx, idx].set(ch.astype(c.dtype)))(cl, pl)
+
+    return jax.tree.map(per_leaf, cache, pending)
 
 
 def serve_supported(cfg):

@@ -504,6 +504,31 @@ def decode_step_slots(params, tokens, positions, cache, cfg, done=None):
     return logits[:, -1], new_cache
 
 
+def verify_step_slots(params, tokens, positions, cache, cfg, done=None):
+    """Speculative verify for the recurrent slot layout: one fused scan of
+    the single-token slot decode over the chunk, stacking the per-step
+    O(1) slot state (mLSTM C/n/m, sLSTM carries, conv tails — every xlstm
+    leaf is O(1)/slot, so stacking all of them is cheap) so
+    ``commit_slots`` can roll every row back to its accepted boundary.
+    Bit-identical to sequential decode by construction."""
+    from repro.models.common import spec_verify_scan
+    logits, stacked, _ = spec_verify_scan(
+        decode_step_slots, params, tokens, positions, cache, cfg,
+        done=done)
+    return logits, stacked
+
+
+def commit_slots(params, tokens, positions, n_feed, cache, pending, cfg,
+                 done=None):
+    """Commit = gather the stacked verify states at ``n_feed - 1`` per row;
+    rows with ``n_feed == 0`` or flagged ``done`` keep their pre-chunk
+    state (a recurrent update cannot be re-stored, so rollback is a
+    snapshot gather, not a truncation)."""
+    from repro.models.common import spec_commit_gather
+    del params, tokens, positions
+    return spec_commit_gather(cache, pending, n_feed, done=done)
+
+
 def serve_supported(cfg):
     """Capability probe for the continuous-batching slot-decode protocol."""
     return True, ("recurrent state (O(1) per slot: mLSTM C/n/m + conv "

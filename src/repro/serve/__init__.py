@@ -1,4 +1,8 @@
-"""Continuous-batching serving (slot-pool scheduler over family caches)."""
+"""Continuous-batching serving (slot-pool scheduler over family caches),
+speculative draft/target decoding, and decode-time sampling."""
 from repro.serve.engine import ContinuousBatchingEngine, Request
+from repro.serve.sampling import SamplingParams
+from repro.serve.speculative import SpeculativeConfig, spec_pair_supported
 
-__all__ = ["ContinuousBatchingEngine", "Request"]
+__all__ = ["ContinuousBatchingEngine", "Request", "SamplingParams",
+           "SpeculativeConfig", "spec_pair_supported"]

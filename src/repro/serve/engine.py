@@ -20,7 +20,9 @@ pool instead:
                         padded to a power of two to bound recompiles;
                         padding rows scatter to an out-of-range slot index
                         and are dropped) and scatter into their slots in
-                        one donated update;
+                        one donated update; the admission *policy* decides
+                        who goes first when slots are scarce (FIFO, or
+                        length-bucketed shortest-prefill-first);
   * macro-step loop   — ``make_slot_decode_loop(cfg, k)`` runs K decode
                         steps per dispatch entirely on device under a
                         ``lax.scan``: per-slot eos / max-new-token
@@ -29,23 +31,34 @@ pool instead:
                         ``kv_len == 0``), and the host reads back a
                         ``(K, capacity)`` token block — one host↔device
                         sync per K tokens instead of one per token;
+  * speculative mode  — a ``SpeculativeConfig`` swaps the macro loop for
+                        ``make_speculative_loop``: a small DRAFT model
+                        (the paper's pretrained source / growth seed)
+                        proposes ``d`` tokens per slot, the target
+                        verifies them in one batched chunk forward, and
+                        each block commits 1..d+1 tokens per slot — the
+                        engine then runs TWO slot pools (target + draft)
+                        through the same admission/eviction scatters, and
+                        acceptance telemetry rides the block readback;
+  * sampling          — a non-greedy ``SamplingParams`` threads per-slot
+                        PRNG chains through admission and the decode
+                        loops (temperature / top-k / top-p; speculative
+                        mode uses draft-rejection sampling);
   * double buffering  — ``run()`` dispatches macro-block N+1 (pure
                         device-side dataflow, no sync) before blocking on
                         block N's tokens, so readback overlaps compute.
 
-All decode state (tokens, positions, remaining budget, eos ids, done
-mask) is persistent and device-resident; the host touches it only through
-incremental scatters at admission/eviction — there is no per-step
-O(capacity) host rebuild and no per-token ``np.asarray``.
+All decode state (tokens, positions, remaining budget, eos ids, sampling
+chains, done mask) is persistent and device-resident; the host touches it
+only through incremental scatters at admission/eviction — there is no
+per-step O(capacity) host rebuild and no per-token ``np.asarray``.
 
-Invariant (tested in ``tests/test_serve_engine.py`` and
-``tests/test_serve_families.py``): greedy tokens are *exactly* the
-sequential ``generate()`` tokens for every request, for any interleaving
-and any K — per-row decode arithmetic is identical to the scalar-offset
-path, masked (softmax-zero) cache positions contribute exact zeros, and
-a finished row is an exact no-op (full KV caches re-store bit-identical
-K/V at the frozen position; recurrent states freeze under the per-row
-``done`` mask).
+Invariant (tested in ``tests/test_serve_engine.py``,
+``tests/test_serve_families.py`` and ``tests/test_speculative.py``):
+greedy tokens are *exactly* the sequential ``generate()`` tokens for
+every request, for any interleaving, any K — and any speculation depth:
+a speculative block only ever emits the target's own argmax tokens, so
+acceptance changes speed, never output.
 """
 from __future__ import annotations
 
@@ -60,7 +73,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import get_family, serve_supported, slot_cache_layout
+from repro.serve import sampling as sampling_lib
+from repro.serve.speculative import (
+    SpeculativeConfig,
+    make_draft_prefill,
+    make_speculative_loop,
+    spec_pair_supported,
+)
 from repro.train.steps import make_prefill_admit_step, make_slot_decode_loop
+
+POLICIES = ("fifo", "spf")
 
 
 def _pow2(n: int) -> int:
@@ -71,47 +93,68 @@ def _pow2(n: int) -> int:
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_engine_fns(cfg, k):
-    """Shared jitted (macro_loop, prefill_admit, admit, evict) per
-    (config, K): every engine instance over the same frozen config and
-    macro length reuses one compile cache.  Pool and state buffers are
-    donated throughout — the engine always rebinds the returned handles,
-    so every update is in place instead of a pool copy.
+def _jitted_engine_fns(cfg, k, sampling, spec_key):
+    """Shared jitted (loop, prefill, draft_prefill, admit, evict) per
+    (config, K, sampling, speculative pair): every engine instance over
+    the same frozen configs reuses one compile cache.  Pool and state
+    buffers are donated throughout — the engine always rebinds the
+    returned handles, so every update is in place instead of a pool copy.
+
+    ``pools`` is a TUPLE of slot pools — ``(target,)`` normally,
+    ``(target, draft)`` in speculative mode — so admission and eviction
+    scatter every model's pool in the same donated update.
 
     ``admit`` and ``evict`` take slot-index vectors that may contain the
     out-of-range index ``capacity`` (padding rows); jnp scatters drop
     out-of-bounds updates, so padded rows are no-ops by construction.
     """
-    loop = jax.jit(make_slot_decode_loop(cfg, k),
-                   donate_argnums=(1, 2, 3, 5, 6))
-    prefill = jax.jit(make_prefill_admit_step(cfg), donate_argnums=(3,))
+    sampled = not sampling_lib.is_greedy(sampling)
+    if spec_key is None:
+        loop = jax.jit(make_slot_decode_loop(cfg, k, sampling),
+                       donate_argnums=(1, 2, 3, 5, 6)
+                       + ((7,) if sampled else ()))
+        draft_prefill = None
+    else:
+        cfg_d, d = spec_key
+        loop = jax.jit(make_speculative_loop(cfg, cfg_d, d, k, sampling),
+                       donate_argnums=(2, 3, 4, 6, 7, 8, 9))
+        draft_prefill = jax.jit(make_draft_prefill(cfg_d),
+                                donate_argnums=(3,))
+    prefill = jax.jit(make_prefill_admit_step(cfg, sampling),
+                      donate_argnums=(3,))
 
-    def admit_fn(pool, rows, state, slots, first, plens, rem0, eos_new):
-        pool = jax.tree.map(lambda p, r: p.at[:, slots].set(r), pool, rows)
-        tokens, positions, remaining, eos, done = state
+    def admit_fn(pools, rows, state, slots, first, plens, rem0, eos_new,
+                 keys_new):
+        pools = tuple(
+            jax.tree.map(lambda p, r: p.at[:, slots].set(r), pool, row)
+            for pool, row in zip(pools, rows))
+        tokens, positions, remaining, eos, done, keys = state
         tokens = tokens.at[slots].set(first)
         positions = positions.at[slots].set(plens)
         remaining = remaining.at[slots].set(rem0)
         eos = eos.at[slots].set(eos_new)
+        keys = keys.at[slots].set(keys_new)
         # a request can finish at its very first (prefill) token
         done = done.at[slots].set((first == eos_new) | (rem0 <= 0))
-        return pool, (tokens, positions, remaining, eos, done)
+        return pools, (tokens, positions, remaining, eos, done, keys)
 
-    def evict_fn(pool, state, slots):
-        pool = jax.tree.map(lambda p: p.at[:, slots].set(0), pool)
-        tokens, positions, remaining, eos, done = state
+    def evict_fn(pools, state, slots):
+        pools = tuple(jax.tree.map(lambda p: p.at[:, slots].set(0), pool)
+                      for pool in pools)
+        tokens, positions, remaining, eos, done, keys = state
         tokens = tokens.at[slots].set(0)
         positions = positions.at[slots].set(0)
         remaining = remaining.at[slots].set(0)
         eos = eos.at[slots].set(-1)
+        keys = keys.at[slots].set(0)
         done = done.at[slots].set(True)
-        return pool, (tokens, positions, remaining, eos, done)
+        return pools, (tokens, positions, remaining, eos, done, keys)
 
-    # rows (arg 1) is NOT donated: a (n, ...)-shaped buffer can never alias
+    # rows (arg 1) is NOT donated: an (n, ...)-shaped buffer can never alias
     # the (capacity, ...) pool, so donating it only produces warnings
     admit = jax.jit(admit_fn, donate_argnums=(0, 2))
     evict = jax.jit(evict_fn, donate_argnums=(0, 1))
-    return loop, prefill, admit, evict
+    return loop, prefill, draft_prefill, admit, evict
 
 
 @dataclasses.dataclass
@@ -139,30 +182,48 @@ class ContinuousBatchingEngine:
     """Slot-pool continuous batching over a family's slot-state protocol.
 
     The engine is family-agnostic: it only talks to ``init_cache`` /
-    ``prefill_full`` / ``decode_step_slots`` and treats the slot pool as
+    ``prefill_full`` / ``decode_step_slots`` (plus ``verify_step_slots``
+    / ``commit_slots`` in speculative mode) and treats the slot pool as
     an opaque pytree whose leaves lead with (layers, capacity, ...).  That
     covers the transformer family's full KV and MLA latent caches,
     ring-buffer window KV caches (sliding-window configs — O(window)
     per-slot memory), and the O(1) recurrent states of griffin (rglru h +
     conv tails + local-attention rings) and xlstm (mLSTM C/n/m, sLSTM
     carries, conv tails).  ``repro.models.serve_supported(cfg)`` is the
-    capability probe gating admission to this engine.
+    capability probe gating admission to this engine;
+    ``serve.speculative.spec_pair_supported`` gates a draft/target pair.
 
-    ``k`` is the macro-step length: decode tokens per on-device dispatch.
-    Larger K amortizes host work and syncs over more tokens; admission
-    (and therefore TTFT for queued requests) happens only at block
-    boundaries, so K trades admission latency against decode throughput.
-    ``k=1`` recovers per-token behaviour through the same code path.
+    ``k`` is the macro-step length: decode tokens per on-device dispatch
+    (speculative blocks per dispatch in speculative mode, each emitting
+    up to ``d + 1`` tokens).  Larger K amortizes host work and syncs over
+    more tokens; admission (and therefore TTFT for queued requests)
+    happens only at block boundaries, so K trades admission latency
+    against decode throughput.  ``k=1`` recovers per-token behaviour
+    through the same code path.
+
+    ``policy`` picks who wins scarce slots at admission: ``"fifo"``
+    (arrival order) or ``"spf"`` — length-bucketed shortest-prefill-first,
+    which groups short prompts into shared prefill buckets ahead of long
+    ones, cutting pad waste in the batched admission forward (ties break
+    by arrival, so spf cannot starve a long prompt behind an endless
+    stream of short ones forever — it only reorders the currently-arrived
+    set).
     """
 
     def __init__(self, cfg, params, *, capacity: int = 8,
-                 max_len: int = 256, prefill_bucket: int = 16, k: int = 8):
+                 max_len: int = 256, prefill_bucket: int = 16, k: int = 8,
+                 policy: str = "fifo",
+                 sampling: Optional[sampling_lib.SamplingParams] = None,
+                 speculative: Optional[SpeculativeConfig] = None):
         ok, why = serve_supported(cfg)
         if not ok:
             raise NotImplementedError(
                 f"continuous batching cannot serve {cfg.name!r}: {why}")
         if k < 1:
             raise ValueError(f"macro-step length k must be >= 1 (got {k})")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r} "
+                             f"(choose from {POLICIES})")
         limit = cfg.max_seq_len
         if cfg.learned_pos:
             limit = min(limit, cfg.learned_pos)
@@ -171,6 +232,12 @@ class ContinuousBatchingEngine:
             raise ValueError(
                 f"max_len {max_len} exceeds the model's position range "
                 f"{limit}")
+        if speculative is not None:
+            ok, why = spec_pair_supported(cfg, speculative.cfg,
+                                          speculative.d, max_len)
+            if not ok:
+                raise NotImplementedError(
+                    f"speculative serving cannot run this pair: {why}")
         self.cfg = cfg
         self.params = params
         self.fam = get_family(cfg)
@@ -179,15 +246,24 @@ class ContinuousBatchingEngine:
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket
         self.k = k
+        self.policy = policy
+        self.sampling = None if sampling_lib.is_greedy(sampling) \
+            else sampling
+        self.speculative = speculative
 
-        self.pool = self.fam.init_cache(cfg, capacity, max_len)
+        pools = [self.fam.init_cache(cfg, capacity, max_len)]
+        if speculative is not None:
+            pools.append(get_family(speculative.cfg).init_cache(
+                speculative.cfg, capacity, max_len))
+        self._pools = tuple(pools)
         # persistent device-resident decode state: (tokens, positions,
-        # remaining, eos_ids, done) — idle slots are done
+        # remaining, eos_ids, done, sampling keys) — idle slots are done
         self._state = (jnp.zeros((capacity,), jnp.int32),
                        jnp.zeros((capacity,), jnp.int32),
                        jnp.zeros((capacity,), jnp.int32),
                        jnp.full((capacity,), -1, jnp.int32),
-                       jnp.ones((capacity,), bool))
+                       jnp.ones((capacity,), bool),
+                       jnp.zeros((capacity, 2), jnp.uint32))
         self.free: List[int] = list(range(capacity))[::-1]  # pop -> slot 0..
         self.waiting: collections.deque[Request] = collections.deque()
         self.active: Dict[int, _Sequence] = {}
@@ -195,16 +271,32 @@ class ContinuousBatchingEngine:
         self.retired: List[_Sequence] = []  # kept for latency accounting
         self._seen_uids: set = set()
         self._evict_pending: List[int] = []
-        # (block, valid, [(slot, uid)]) of dispatched-but-unread macro steps
+        # (block, valid, [(slot, uid)], stats) of dispatched-but-unread
+        # macro steps
         self._inflight: collections.deque = collections.deque()
         self.n_decode_dispatches = 0
         self.n_decode_steps = 0  # dispatches * k (scan steps executed)
         self.n_prefills = 0  # admission-batch prefill dispatches
         self.n_host_syncs = 0  # blocking device->host reads
         self.n_tokens = 0  # generated tokens (incl. prefill first tokens)
+        self.n_spec_proposed = 0  # draft tokens offered to the target
+        self.n_spec_accepted = 0  # draft tokens the target kept
 
-        (self._loop, self._prefill, self._admit,
-         self._evict) = _jitted_engine_fns(cfg, k)
+        spec_key = None if speculative is None \
+            else (speculative.cfg, speculative.d)
+        (self._loop, self._prefill, self._draft_prefill, self._admit,
+         self._evict) = _jitted_engine_fns(cfg, k, self.sampling, spec_key)
+
+    @property
+    def pool(self):
+        """The target model's slot pool (kept for telemetry/tests)."""
+        return self._pools[0]
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals the target accepted (speculative
+        mode; 0.0 before any speculative block was read back)."""
+        return self.n_spec_accepted / max(self.n_spec_proposed, 1)
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request):
@@ -228,25 +320,33 @@ class ContinuousBatchingEngine:
         b = self.prefill_bucket
         return min(-(-n // b) * b, self.max_len)
 
-    def _pop_arrived(self, now: Optional[float]):
-        """First waiting request that has arrived (submission order may
-        differ from arrival order — scan, don't just peek the head)."""
-        for i, r in enumerate(self.waiting):
-            if now is None or r.arrival <= now:
-                del self.waiting[i]
-                return r
-        return None
+    def _select_admissions(self, now: Optional[float]) -> List[Request]:
+        """Pick the arrived requests to admit into the free slots.
+
+        FIFO takes them in submission order (the original behaviour);
+        ``spf`` sorts the currently-arrived set by bucketed prefill
+        length first (ties by submission order), so short prompts share
+        admission buckets instead of padding up to a long straggler's
+        bucket — less pad waste per batched prefill and faster TTFT for
+        cheap requests.  Selection never skips an arrived request when a
+        slot is free for it.
+        """
+        arrived = [i for i, r in enumerate(self.waiting)
+                   if now is None or r.arrival <= now]
+        if self.policy == "spf":
+            arrived.sort(key=lambda i: (
+                self._bucketed(len(self.waiting[i].prompt)), i))
+        take = arrived[:len(self.free)]
+        grabbed = [self.waiting[i] for i in take]
+        for i in sorted(take, reverse=True):
+            del self.waiting[i]
+        return grabbed
 
     def _admit_batch(self, now: Optional[float]):
         """Admit every arrived request a free slot can take, ONE prefill
-        dispatch + ONE pool/state scatter + ONE host sync per prefill-bucket
-        group — instead of three host syncs per request."""
-        grabbed = []
-        while len(grabbed) < len(self.free):
-            r = self._pop_arrived(now)
-            if r is None:
-                break
-            grabbed.append(r)
+        dispatch per model + ONE pool/state scatter + ONE host sync per
+        prefill-bucket group — instead of three host syncs per request."""
+        grabbed = self._select_admissions(now)
         if not grabbed:
             return
         groups: Dict[int, List[Request]] = {}
@@ -268,15 +368,37 @@ class ContinuousBatchingEngine:
                 rem0[j] = r.max_new_tokens - 1
                 eos_new[j] = -1 if r.eos_id is None else r.eos_id
                 slots[j] = self.free.pop()
-            rows = self.fam.init_cache(self.cfg, npad, self.max_len)
+            rows = [self.fam.init_cache(self.cfg, npad, self.max_len)]
             # pad-tail cache entries are garbage but never visible: each
             # decode step overwrites its own position before the per-row
             # length mask reaches it
-            first, rows = self._prefill(self.params, jnp.asarray(padded),
-                                        jnp.asarray(plens), rows)
-            self.pool, self._state = self._admit(
-                self.pool, rows, self._state, jnp.asarray(slots), first,
-                jnp.asarray(plens), jnp.asarray(rem0), jnp.asarray(eos_new))
+            if self.sampling is None:
+                first, rows[0] = self._prefill(
+                    self.params, jnp.asarray(padded), jnp.asarray(plens),
+                    rows[0])
+                keys_dev = jnp.zeros((npad, 2), jnp.uint32)
+            else:
+                # chain roots are derived from (seed, uid) ON DEVICE in
+                # the same prefill dispatch — no key round-trip/sync
+                uids = np.zeros((npad,), np.int32)
+                uids[:len(reqs)] = [r.uid for r in reqs]
+                first, rows[0], keys_dev = self._prefill(
+                    self.params, jnp.asarray(padded), jnp.asarray(plens),
+                    rows[0], jnp.asarray(uids))
+            if self.speculative is not None:
+                # the draft pool admits the SAME prompt rows: its per-row
+                # state after the real prompt, first token comes from the
+                # target
+                draft_rows = get_family(self.speculative.cfg).init_cache(
+                    self.speculative.cfg, npad, self.max_len)
+                rows.append(self._draft_prefill(
+                    self.speculative.params, jnp.asarray(padded),
+                    jnp.asarray(plens), draft_rows))
+                self.n_prefills += 1
+            self._pools, self._state = self._admit(
+                self._pools, tuple(rows), self._state, jnp.asarray(slots),
+                first, jnp.asarray(plens), jnp.asarray(rem0),
+                jnp.asarray(eos_new), keys_dev)
             self.n_prefills += 1
             first_host = np.asarray(first)
             self.n_host_syncs += 1
@@ -322,30 +444,51 @@ class ContinuousBatchingEngine:
             return
         slots = np.full((self.capacity,), self.capacity, np.int32)
         slots[:len(self._evict_pending)] = self._evict_pending
-        self.pool, self._state = self._evict(self.pool, self._state,
-                                             jnp.asarray(slots))
+        self._pools, self._state = self._evict(self._pools, self._state,
+                                               jnp.asarray(slots))
         self.free.extend(self._evict_pending)
         self._evict_pending.clear()
 
     # ------------------------------------------------------------- step loop
     def _dispatch(self):
-        """Launch one on-device macro step (K decode steps, no sync)."""
-        tokens, positions, remaining, eos_ids, done = self._state
-        (block, valid, tokens, positions, remaining, done,
-         self.pool) = self._loop(self.params, tokens, positions, remaining,
-                                 eos_ids, done, self.pool)
-        self._state = (tokens, positions, remaining, eos_ids, done)
+        """Launch one on-device macro step (K decode steps — or K whole
+        speculative draft→verify→commit blocks — with no sync)."""
+        tokens, positions, remaining, eos_ids, done, keys = self._state
+        stats = None
+        if self.speculative is not None:
+            (block, valid, tokens, positions, remaining, done, pool_t,
+             pool_d, keys, n_prop, n_acc) = self._loop(
+                self.params, self.speculative.params, tokens, positions,
+                remaining, eos_ids, done, self._pools[0], self._pools[1],
+                keys)
+            self._pools = (pool_t, pool_d)
+            stats = (n_prop, n_acc)
+        elif self.sampling is not None:
+            (block, valid, tokens, positions, remaining, done, pool,
+             keys) = self._loop(self.params, tokens, positions, remaining,
+                                eos_ids, done, self._pools[0], keys)
+            self._pools = (pool,)
+        else:
+            (block, valid, tokens, positions, remaining, done,
+             pool) = self._loop(self.params, tokens, positions, remaining,
+                                eos_ids, done, self._pools[0])
+            self._pools = (pool,)
+        self._state = (tokens, positions, remaining, eos_ids, done, keys)
         self.n_decode_dispatches += 1
         self.n_decode_steps += self.k
         live = [(slot, seq.req.uid) for slot, seq in self.active.items()]
-        self._inflight.append((block, valid, live))
+        self._inflight.append((block, valid, live, stats))
 
     def _process(self, item):
         """Block on one macro step's token block (the single host sync per
-        K tokens) and advance the host-side sequence records."""
-        block, valid, live = item
-        block, valid = jax.device_get((block, valid))
+        dispatch) and advance the host-side sequence records."""
+        block, valid, live, stats = item
+        block, valid, stats = jax.device_get((block, valid, stats))
         self.n_host_syncs += 1
+        if stats is not None:
+            # acceptance telemetry rides the same readback — no extra sync
+            self.n_spec_proposed += int(stats[0])
+            self.n_spec_accepted += int(stats[1])
         for slot, uid in live:
             seq = self.active.get(slot)
             if seq is None or seq.req.uid != uid:
@@ -380,7 +523,7 @@ class ContinuousBatchingEngine:
 
         ``realtime=True`` replays ``Request.arrival`` offsets against the
         wall clock (benchmark traces); otherwise arrivals are ignored and
-        admission is purely slot-limited FIFO.
+        admission is purely slot-limited (FIFO or spf by ``policy``).
 
         ``pipeline=True`` double-buffers readback: macro-block N+1 is
         dispatched (device-side dataflow only) before the host blocks on

@@ -1,0 +1,128 @@
+"""Sampling for the serving macro loop and speculative rejection sampling.
+
+Everything here is shape-polymorphic over the slot axis and runs inside
+the engine's jitted loops:
+
+  * ``SamplingParams`` — temperature / top-k / top-p / seed.  The frozen
+    dataclass is hashable, so it keys the engine's jit caches directly;
+    ``temperature == 0`` is greedy (argmax) and uses no randomness.
+  * per-slot PRNG chains — every request gets an independent key
+    (``request_key(seed, uid)``) scattered into the slot pool at
+    admission; ``next_keys`` advances all chains in lockstep but the
+    engine only keeps the advanced key for LIVE rows, so a request's
+    chain depends solely on its own generated-token count.  That makes
+    sampled decode reproducible per request: the same (seed, uid, prompt)
+    yields the same tokens no matter how requests interleave, and a
+    sequential single-request replay using the same helpers is
+    token-exact against the engine (``tests/test_sampling.py``).
+  * ``filtered_probs`` — temperature -> top-k -> top-p, renormalized.
+  * speculative rejection sampling (``residual_probs``) — the leftover
+    distribution ``max(p - q, 0)`` a rejected draft token is resampled
+    from; with draft == target it degenerates so acceptance is certain.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Decode-time sampling policy.  ``temperature == 0`` means greedy."""
+    temperature: float = 0.0
+    top_k: int = 0  # 0: no top-k cut
+    top_p: float = 1.0  # 1.0: no nucleus cut
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0 "
+                             f"(got {self.temperature})")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (got {self.top_k})")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1] (got {self.top_p})")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def is_greedy(sp) -> bool:
+    return sp is None or sp.greedy
+
+
+def request_key(seed: int, uid: int):
+    """Root of a request's sampling chain — a pure function of (engine
+    seed, request uid), independent of admission timing or slot index."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), uid)
+
+
+def next_keys(keys):
+    """Advance a (B, 2) batch of per-slot chains one step.
+
+    Returns (carry_keys, sample_keys): the carry continues each chain,
+    the sample key is consumed by this step's draw.  The caller keeps the
+    carry only for rows that really sampled (live rows), so a chain's
+    position always equals the row's generated-token count.
+    """
+    split = jax.vmap(lambda k: jax.random.split(k))(keys)
+    return split[:, 0], split[:, 1]
+
+
+def filtered_probs(logits, sp: SamplingParams):
+    """(B, V) sampling distribution: temperature -> top-k -> top-p.
+
+    Filtering masks to ``NEG_INF`` and renormalizes, so downstream
+    consumers (categorical draw, speculative accept ratios, residual
+    distributions) all see the same support.
+    """
+    lg = logits.astype(jnp.float32) / jnp.float32(max(sp.temperature, 1e-6))
+    V = lg.shape[-1]
+    if sp.top_k and sp.top_k < V:
+        kth = jax.lax.top_k(lg, sp.top_k)[0][..., -1:]
+        lg = jnp.where(lg >= kth, lg, NEG_INF)
+    if sp.top_p < 1.0:
+        probs = jax.nn.softmax(lg, axis=-1)
+        order = jnp.argsort(-lg, axis=-1)
+        sorted_probs = jnp.take_along_axis(probs, order, axis=-1)
+        exclusive = jnp.cumsum(sorted_probs, axis=-1) - sorted_probs
+        keep_sorted = exclusive < sp.top_p  # always keeps the top token
+        rows = jnp.arange(lg.shape[0])[:, None]
+        keep = jnp.zeros(lg.shape, bool).at[rows, order].set(keep_sorted)
+        lg = jnp.where(keep, lg, NEG_INF)
+    return jax.nn.softmax(lg, axis=-1)
+
+
+def sample_probs(probs, sample_keys):
+    """Categorical draw per row. probs: (B, V); sample_keys: (B, 2)."""
+    logp = jnp.log(jnp.maximum(probs, 1e-38))
+    logp = jnp.where(probs > 0, logp, NEG_INF)
+    return jax.vmap(jax.random.categorical)(sample_keys, logp) \
+        .astype(jnp.int32)
+
+
+def sample_logits(logits, sample_keys, sp: SamplingParams):
+    """One sampled token per row under ``sp`` (greedy falls back to
+    argmax, consuming no randomness)."""
+    if is_greedy(sp):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return sample_probs(filtered_probs(logits, sp), sample_keys)
+
+
+def residual_probs(p, q):
+    """Leftover distribution for speculative rejection sampling.
+
+    A draft token ``x ~ q`` is accepted with probability
+    ``min(1, p(x) / q(x))``; on rejection the replacement is drawn from
+    ``normalize(max(p - q, 0))`` — the classic construction whose mixture
+    is exactly ``p``.  Degenerate rows (``p <= q`` everywhere, possible
+    only up to float error when p == q) fall back to ``p``.
+    """
+    r = jnp.maximum(p - q, 0.0)
+    s = jnp.sum(r, axis=-1, keepdims=True)
+    return jnp.where(s > 0, r / jnp.maximum(s, 1e-38), p)

@@ -149,7 +149,7 @@ def make_slot_decode_step(cfg):
     return decode_fn
 
 
-def make_prefill_admit_step(cfg):
+def make_prefill_admit_step(cfg, sampling=None):
     """Batched admission prefill for the continuous-batching engine.
 
     fn(params, tokens (N, Sbucket), plens (N,), cache) ->
@@ -164,23 +164,47 @@ def make_prefill_admit_step(cfg):
     pad tail hides behind the per-row ``kv_len`` mask), but ring-buffer
     window caches and recurrent state (griffin, xlstm) must take each
     row's state at its TRUE prompt boundary.
+
+    With a non-greedy ``sampling`` (``serve.sampling.SamplingParams``)
+    the signature gains per-row chain roots —
+    fn(params, tokens, plens, cache, uids (N,)) -> (first, cache, keys)
+    — each row's PRNG chain is seeded from (sampling.seed, uid) ON
+    DEVICE, its first key samples the first token, and the advanced
+    chains come back for the admission scatter (keys never round-trip
+    through the host).
     """
+    from repro.serve import sampling as sampling_lib
+
     fam = get_family(cfg)
     if not hasattr(fam, "prefill_full"):
         raise NotImplementedError(
             f"family {cfg.family!r} has no full-logits prefill")
 
-    def prefill_fn(params, tokens, plens, cache):
+    def last_logits(params, tokens, plens, cache):
         logits, cache = fam.prefill_full(
             params, {"tokens": tokens, "plens": plens}, cfg, cache)
         rows = jnp.arange(tokens.shape[0])
-        first = jnp.argmax(logits[rows, plens - 1], axis=-1).astype(jnp.int32)
-        return first, cache
+        return logits[rows, plens - 1], cache
 
-    return prefill_fn
+    if sampling_lib.is_greedy(sampling):
+        def prefill_fn(params, tokens, plens, cache):
+            logits, cache = last_logits(params, tokens, plens, cache)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        return prefill_fn
+
+    def prefill_sampled(params, tokens, plens, cache, uids):
+        logits, cache = last_logits(params, tokens, plens, cache)
+        roots = jax.vmap(
+            lambda u: sampling_lib.request_key(sampling.seed, u))(uids)
+        keys, subs = sampling_lib.next_keys(roots)
+        first = sampling_lib.sample_logits(logits, subs, sampling)
+        return first, cache, keys
+
+    return prefill_sampled
 
 
-def make_slot_decode_loop(cfg, k: int):
+def make_slot_decode_loop(cfg, k: int, sampling=None):
     """On-device macro-step: K slot-decode steps under one ``lax.scan``.
 
     fn(params, tokens (B,), positions (B,), remaining (B,), eos_ids (B,),
@@ -203,31 +227,67 @@ def make_slot_decode_loop(cfg, k: int):
     ``eos_ids`` uses -1 for "no eos" (token ids are non-negative).
     ``remaining`` counts decode tokens still owed per row; it hits 0
     exactly when the row's last owed token is emitted.
+
+    With a non-greedy ``sampling`` (``serve.sampling.SamplingParams``)
+    the signature gains per-slot PRNG chains —
+    fn(..., cache, keys (B,2)) -> (..., cache, keys) — and each step
+    draws from the temperature/top-k/top-p-filtered distribution.  A
+    chain only advances when its row really samples, so a request's
+    tokens are a pure function of (seed, uid, prompt), independent of
+    slot placement and interleaving.
     """
+    from repro.serve import sampling as sampling_lib
+
     fam = get_family(cfg)
     if not hasattr(fam, "decode_step_slots"):
         raise NotImplementedError(
             f"family {cfg.family!r} has no slot-indexed decode path")
+    greedy = sampling_lib.is_greedy(sampling)
 
-    def loop_fn(params, tokens, positions, remaining, eos_ids, done, cache):
-        def body(carry, _):
+    def step(carry, params, eos_ids):
+        if greedy:
             tokens, positions, remaining, done, cache = carry
-            live = ~done
-            logits, cache = fam.decode_step_slots(
-                params, tokens, positions, cache, cfg, done=done)
+        else:
+            tokens, positions, remaining, done, cache, keys = carry
+        live = ~done
+        logits, cache = fam.decode_step_slots(
+            params, tokens, positions, cache, cfg, done=done)
+        if greedy:
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            tokens = jnp.where(live, nxt, tokens)
-            remaining = jnp.where(live, remaining - 1, remaining)
-            done = done | (live & ((tokens == eos_ids) | (remaining <= 0)))
-            positions = jnp.where(live, positions + 1, positions)
-            return (tokens, positions, remaining, done, cache), (tokens, live)
+        else:
+            keys_new, subs = sampling_lib.next_keys(keys)
+            keys = jnp.where(live[:, None], keys_new, keys)
+            nxt = sampling_lib.sample_logits(logits, subs, sampling)
+        tokens = jnp.where(live, nxt, tokens)
+        remaining = jnp.where(live, remaining - 1, remaining)
+        done = done | (live & ((tokens == eos_ids) | (remaining <= 0)))
+        positions = jnp.where(live, positions + 1, positions)
+        carry = (tokens, positions, remaining, done, cache) if greedy \
+            else (tokens, positions, remaining, done, cache, keys)
+        return carry, (tokens, live)
 
+    if greedy:
+        def loop_fn(params, tokens, positions, remaining, eos_ids, done,
+                    cache):
+            carry, (block, valid) = jax.lax.scan(
+                lambda c, _: step(c, params, eos_ids),
+                (tokens, positions, remaining, done, cache), None, length=k)
+            tokens, positions, remaining, done, cache = carry
+            return block, valid, tokens, positions, remaining, done, cache
+
+        return loop_fn
+
+    def loop_sampled(params, tokens, positions, remaining, eos_ids, done,
+                     cache, keys):
         carry, (block, valid) = jax.lax.scan(
-            body, (tokens, positions, remaining, done, cache), None, length=k)
-        tokens, positions, remaining, done, cache = carry
-        return block, valid, tokens, positions, remaining, done, cache
+            lambda c, _: step(c, params, eos_ids),
+            (tokens, positions, remaining, done, cache, keys), None,
+            length=k)
+        tokens, positions, remaining, done, cache, keys = carry
+        return (block, valid, tokens, positions, remaining, done, cache,
+                keys)
 
-    return loop_fn
+    return loop_sampled
 
 
 def make_grow_step(gop, cfg_tgt, opt_cfg: OptimizerConfig,

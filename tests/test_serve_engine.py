@@ -279,6 +279,39 @@ def test_admission_finish_does_not_leak_slot_mid_wave(qwen_smoke_cfg,
                                       err_msg=f"uid {uid}")
 
 
+def test_spf_policy_admits_short_prefills_first(qwen_smoke_cfg,
+                                                qwen_smoke_params):
+    """Length-bucketed shortest-prefill-first: when slots are scarce, the
+    shorter arrived prompt wins the slot even if submitted later — and
+    the reordering never changes any request's tokens."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    long_r, short_r = _mixed_requests(cfg, [(12, 4), (3, 4)], seed0=160)
+    for policy, first_uid in (("fifo", long_r.uid), ("spf", short_r.uid)):
+        engine = ContinuousBatchingEngine(cfg, params, capacity=1,
+                                          max_len=MAX_LEN,
+                                          prefill_bucket=4, k=1,
+                                          policy=policy)
+        engine.submit(_mixed_requests(cfg, [(12, 4)], seed0=160)[0])
+        engine.submit(_mixed_requests(cfg, [(3, 4)], uid0=1, seed0=161)[0])
+        engine.step()
+        assert [s.req.uid for s in engine.active.values()] == [first_uid], \
+            policy
+        # drive to completion: both finish with the sequential tokens
+        for _ in range(40):
+            if not (engine.waiting or engine.active or engine._inflight):
+                break
+            engine.step()
+        want = _sequential_baseline(
+            cfg, params, _mixed_requests(cfg, [(12, 4)], seed0=160)
+            + _mixed_requests(cfg, [(3, 4)], uid0=1, seed0=161))
+        for uid in want:
+            np.testing.assert_array_equal(engine.finished[uid], want[uid],
+                                          err_msg=f"{policy} uid {uid}")
+    with pytest.raises(ValueError, match="policy"):
+        ContinuousBatchingEngine(cfg, params, capacity=1, max_len=MAX_LEN,
+                                 policy="lifo")
+
+
 def test_dispatch_and_sync_amortization(qwen_smoke_cfg, qwen_smoke_params):
     """Regression: the macro-step engine must not regress to per-token
     host interaction.  For K=4 and one same-bucket admission wave:

@@ -204,9 +204,10 @@ def test_slot_decode_specs_match_engine_state():
                                       max_len=MAX_LEN, prefill_bucket=4,
                                       k=4)
     spec = specs_lib.slot_decode_specs(cfg, engine.capacity, engine.max_len)
-    state = dict(zip(("tokens", "positions", "remaining", "eos_ids", "done"),
-                     engine._state))
-    for name, arr in state.items():
+    names = ("tokens", "positions", "remaining", "eos_ids", "done", "keys")
+    # leaf-count drift must fail loudly — zip would silently truncate
+    assert len(names) == len(engine._state)
+    for name, arr in zip(names, engine._state):
         assert (spec[name].shape, spec[name].dtype) == (arr.shape, arr.dtype)
     assert jax.tree.map(lambda s: (s.shape, str(s.dtype)), spec["pool"]) \
         == jax.tree.map(lambda a: (a.shape, str(a.dtype)), engine.pool)

@@ -1,0 +1,270 @@
+"""Speculative-decoding invariants.
+
+The speculative engine's contract extends the serve engine's: GREEDY
+speculative decode is token-exact versus the sequential ``generate()``
+loop — every committed token is the target's own argmax after its
+committed prefix, so the draft (and the acceptance rate) can only change
+speed, never output.  That must hold for any speculation depth, any
+acceptance level (draft == target, correlated, or unrelated), mid-chunk
+eos, budget truncation mid-chunk, and every slot-cache layout (full KV,
+ring-buffer windows, recurrent states).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import lm_batch
+from repro.launch.serve import build_params, generate
+from repro.models import get_family
+from repro.serve import (
+    ContinuousBatchingEngine,
+    Request,
+    SpeculativeConfig,
+    spec_pair_supported,
+)
+
+MAX_LEN = 32
+
+
+def _mixed_requests(cfg, specs, *, uid0=0, seed0=50):
+    reqs = []
+    for i, (plen, gen) in enumerate(specs):
+        prompt = lm_batch(cfg.vocab_size, 1, plen, seed=seed0 + i)[0]
+        reqs.append(Request(uid=uid0 + i, prompt=prompt,
+                            max_new_tokens=gen))
+    return reqs
+
+
+def _sequential_baseline(cfg, params, reqs, max_len=MAX_LEN):
+    """Each request alone through the TARGET-only prefill+decode loop —
+    the speculative engine must reproduce these tokens bit-for-bit."""
+    out = {}
+    for r in reqs:
+        toks = generate(cfg, params, jnp.asarray(r.prompt)[None],
+                        max_new_tokens=r.max_new_tokens, max_len=max_len)
+        out[r.uid] = np.asarray(toks[0])
+    return out
+
+
+def _perturbed(params, scale=3e-3, seed=1):
+    """A draft that ALMOST agrees with the target: same config, weights
+    nudged — acceptance lands strictly between 0 and 1, so tests exercise
+    partial commits and mid-chunk rollback, not just the two extremes."""
+    keys = jax.random.split(jax.random.PRNGKey(seed),
+                            len(jax.tree.leaves(params)))
+    flat, treedef = jax.tree.flatten(params)
+    flat = [p + scale * jax.random.normal(k, p.shape, p.dtype)
+            for p, k in zip(flat, keys)]
+    return jax.tree.unflatten(treedef, flat)
+
+
+def _run_spec(cfg_t, params_t, cfg_d, params_d, reqs, *, d, k=2,
+              capacity=2, max_len=MAX_LEN):
+    engine = ContinuousBatchingEngine(
+        cfg_t, params_t, capacity=capacity, max_len=max_len,
+        prefill_bucket=4, k=k,
+        speculative=SpeculativeConfig(cfg_d, params_d, d=d))
+    got = engine.run(reqs)
+    return engine, got
+
+
+@pytest.mark.parametrize("d", [2, 4])
+def test_spec_exact_grown_transformer(d, gpt_micro_cfg, gpt_micro_big_cfg):
+    """The paper's pair end-to-end: the pretrained SOURCE (gpt-micro)
+    drafts for the target GROWN from it (gpt-micro-big via Mango) — the
+    first subsystem connecting the growth core to the serving stack.
+    Greedy speculative tokens must equal the target-only sequential
+    tokens exactly, for any acceptance the pair happens to achieve."""
+    cfg_t, cfg_d = gpt_micro_big_cfg, gpt_micro_cfg
+    params_t, src_cfg, params_d = build_params(
+        cfg_t, grow_from=cfg_d.name, grow_method="mango",
+        return_source=True)
+    assert src_cfg.name == cfg_d.name
+    specs = [(4, 7), (9, 3), (6, 9), (5, 2), (11, 5)]
+    reqs = _mixed_requests(cfg_t, specs, seed0=70)
+    engine, got = _run_spec(cfg_t, params_t, cfg_d, params_d, reqs, d=d)
+    want = _sequential_baseline(cfg_t, params_t, reqs)
+    assert set(got) == set(want)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+    # the pool was oversubscribed (slot reuse under speculation)
+    assert len(reqs) > engine.capacity
+    assert engine.n_spec_proposed > 0
+    assert 0.0 <= engine.acceptance_rate <= 1.0
+
+
+def test_spec_self_draft_accepts_everything(qwen_smoke_cfg,
+                                            qwen_smoke_params):
+    """draft == target: greedy acceptance must be exactly 1.0 (modulo
+    budget clipping, which the telemetry excludes) and every block
+    commits its full d+1 tokens — the degenerate upper bound that pins
+    the acceptance accounting."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    reqs = _mixed_requests(cfg, [(3, 9), (7, 11), (5, 6)], seed0=20)
+    engine, got = _run_spec(cfg, params, cfg, params, reqs, d=3)
+    want = _sequential_baseline(cfg, params, reqs)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+    assert engine.n_spec_proposed > 0
+    assert engine.acceptance_rate == 1.0
+
+
+@pytest.mark.parametrize("d", [2, 4])
+def test_spec_exact_griffin(d):
+    """Recurrent target + recurrent draft (griffin-micro): partial
+    acceptance must roll rglru state, conv tails, AND the local-attention
+    ring back to each row's accepted boundary.  Generations run past the
+    window (16), so the rings genuinely wrap under speculation."""
+    from repro.configs.base import get_config
+    cfg = get_config("griffin-micro")
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    draft = _perturbed(params, scale=1e-1)
+    reqs = _mixed_requests(cfg, [(4, 20), (9, 16), (6, 18)], seed0=40)
+    engine, got = _run_spec(cfg, params, cfg, draft, reqs, d=d,
+                            capacity=2)
+    want = _sequential_baseline(cfg, params, reqs)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+    # the perturbed draft is correlated but not identical: speculation
+    # must really have been exercised in BOTH regimes
+    assert 0.0 < engine.acceptance_rate < 1.0, engine.acceptance_rate
+
+
+def test_griffin_verify_stacks_only_o1_state():
+    """Verify memory contract: the recurrent verify stacks ONLY the O(1)
+    recurrent leaves per chunk position — the O(window) local-attention
+    rings commit via accept-masked restore, so a chunk of length S must
+    not multiply ring memory by S."""
+    from repro.configs.base import get_config
+    cfg = get_config("griffin-micro")
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    cache = fam.init_cache(cfg, 2, MAX_LEN)
+    tokens = jnp.zeros((2, 5), jnp.int32)
+    positions = jnp.full((2,), 3, jnp.int32)
+    _, pending = jax.eval_shape(
+        lambda: fam.verify_step_slots(params, tokens, positions, cache,
+                                      cfg))
+    # rings: post-chunk bytes only (same shape as the cache, no S axis)
+    assert pending["attn_new"]["k"].shape == cache["attn"]["k"].shape
+    # recurrent state: stacked with a leading chunk axis
+    assert pending["rec"]["h"].shape == (5,) + cache["rec"]["h"].shape
+
+
+def test_spec_exact_griffin_pair_micro_big():
+    """griffin-micro drafting for griffin-micro-big — the recurrent
+    small→large pair (independent inits: acceptance may be low, output
+    must still be the target's exactly)."""
+    from repro.configs.base import get_config
+    cfg_t = get_config("griffin-micro-big")
+    cfg_d = get_config("griffin-micro")
+    params_t = get_family(cfg_t).init(jax.random.PRNGKey(0), cfg_t)
+    params_d = get_family(cfg_d).init(jax.random.PRNGKey(1), cfg_d)
+    reqs = _mixed_requests(cfg_t, [(5, 8), (8, 6)], seed0=90)
+    engine, got = _run_spec(cfg_t, params_t, cfg_d, params_d, reqs, d=2)
+    want = _sequential_baseline(cfg_t, params_t, reqs)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+
+
+def test_spec_exact_xlstm():
+    """xLSTM's stacked-state rollback (mLSTM C/n/m, sLSTM carries, conv
+    tails) under partial acceptance."""
+    from repro.configs.base import get_config
+    cfg = get_config("xlstm-1.3b-smoke")
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    draft = _perturbed(params, scale=1e-2)
+    reqs = _mixed_requests(cfg, [(4, 8), (7, 10)], seed0=60)
+    engine, got = _run_spec(cfg, params, cfg, draft, reqs, d=2)
+    want = _sequential_baseline(cfg, params, reqs)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+
+
+def test_spec_exact_ring_window_transformer(qwen_smoke_cfg):
+    """Sliding-window transformer target: the deferred commit scatter
+    writes ring slots (pos % window) for accepted positions only;
+    generations run far past window=8 so rejected overshoot would corrupt
+    live ring entries if it were ever written."""
+    cfg = qwen_smoke_cfg.replace(window=8)
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    draft = _perturbed(params, scale=1e-2)
+    reqs = _mixed_requests(cfg, [(4, 18), (9, 14), (6, 16)], seed0=80)
+    engine, got = _run_spec(cfg, params, cfg, draft, reqs, d=3)
+    want = _sequential_baseline(cfg, params, reqs)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+
+
+def test_spec_eos_mid_chunk(gpt_micro_cfg):
+    """An eos landing strictly inside a verify chunk must truncate the
+    commit exactly there: outputs after the eos are invalid, the eos is
+    never fed into either model, and the neighbour slot is unaffected —
+    the speculative mirror of the macro loop's mid-block eos rule."""
+    cfg = gpt_micro_cfg
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    reqs = _mixed_requests(cfg, [(6, 12), (8, 12)], seed0=30)
+    base = _sequential_baseline(cfg, params, reqs)
+    d = 4
+    # choose an eos whose FIRST occurrence is strictly inside the first
+    # d+1-token chunk, so the row dies mid-verify
+    eos, stop = None, None
+    for i in range(1, min(d, len(base[0]))):
+        cand = int(base[0][i])
+        if int(np.argmax(base[0] == cand)) == i:
+            eos, stop = cand, i + 1
+            break
+    assert eos is not None, "trace has no mid-chunk eos candidate"
+    reqs[0].eos_id = eos
+    engine, got = _run_spec(cfg, params, cfg, params, reqs, d=d)
+    np.testing.assert_array_equal(got[0], base[0][:stop])
+    np.testing.assert_array_equal(got[1], base[1])
+    assert 1 < stop < d + 1  # really fired inside one chunk
+
+
+def test_spec_pair_probe_rejections(qwen_smoke_cfg, gpt_micro_cfg):
+    """The pair probe reports per-mode servability and rejects vocab
+    mismatches and non-servable drafts; the engine refuses such pairs
+    before allocating anything."""
+    from repro.configs.base import get_config
+    ok, why = spec_pair_supported(gpt_micro_cfg, qwen_smoke_cfg)
+    assert not ok and "vocab" in why
+    hubert = get_config("hubert-xlarge-smoke")
+    ok, why = spec_pair_supported(qwen_smoke_cfg, hubert)
+    assert not ok
+    # per-mode detail: the failing side is named, the healthy side reported
+    assert "draft 'hubert-xlarge-smoke': NOT SERVABLE" in why
+    assert "target 'qwen1.5-0.5b-smoke': ok" in why
+    ok, _ = spec_pair_supported(qwen_smoke_cfg, qwen_smoke_cfg, d=0)
+    assert not ok
+    # a verify chunk must fit the ring: window 8 rejects d >= 8
+    windowed = qwen_smoke_cfg.replace(window=8)
+    ok, why = spec_pair_supported(windowed, windowed, d=8)
+    assert not ok and "ring" in why
+    with pytest.raises(NotImplementedError, match="vocab"):
+        ContinuousBatchingEngine(
+            gpt_micro_cfg, {}, capacity=1, max_len=MAX_LEN,
+            speculative=SpeculativeConfig(qwen_smoke_cfg, {}, d=2))
+
+
+def test_spec_slot_reuse_no_stale_state(qwen_smoke_cfg, qwen_smoke_params):
+    """A recycled slot under speculation sees exactly what a fresh engine
+    would — eviction + admission overwrite BOTH pools (target and
+    draft)."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    draft = _perturbed(params)
+    wave1 = _mixed_requests(cfg, [(8, 6), (11, 6)], uid0=0, seed0=10)
+    wave2 = _mixed_requests(cfg, [(5, 8), (9, 3)], uid0=100, seed0=90)
+    used, _ = _run_spec(cfg, params, cfg, draft, wave1, d=3)
+    got = used.run(wave2)
+    want = _sequential_baseline(cfg, params, wave2)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
