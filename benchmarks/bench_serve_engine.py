@@ -170,7 +170,8 @@ def bench_engine(cfg, params, reqs, *, capacity, max_len, k, pipeline,
     out = {"tok_per_s": n_tok / dt, "p50_s": p50, "p99_s": p99,
            "host_syncs_per_token": engine.n_host_syncs / max(n_tok, 1),
            "decode_dispatches": engine.n_decode_dispatches,
-           "prefill_batches": engine.n_prefills, "k": k}
+           "prefill_batches": engine.n_prefills, "k": k,
+           "decode_kernel": engine.decode_kernel}
     if speculative is not None:
         out["acceptance_rate"] = engine.acceptance_rate
         out["d"] = speculative.d
@@ -295,11 +296,51 @@ def _bench_speculative(quick: bool):
     return results
 
 
+def _bench_kernel_modes(quick: bool):
+    """Kernel-vs-jnp slot decode, side by side, full-KV and ring-window.
+
+    Same trace, same K, only ``cfg.decode_kernel`` differs — the entry
+    pair is the direct measure of the kernel-backed slot path.  On this
+    CPU container the kernel modes run the Pallas INTERPRETER (orders of
+    magnitude slower than compiled — the entries document correctness
+    cost, not TPU speed; on a TPU backend ``auto`` compiles).  The trace
+    is kept small accordingly.
+    """
+    cfg = get_config(FAMILY_ARCHS["transformer"])
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    n = 4 if quick else 8
+    capacity, max_len, k = 2, 48, 8
+    reqs = poisson_trace(cfg, n, rate_hz=2000.0, max_gen=8 if quick else 16)
+
+    def fresh():
+        return [Request(uid=r.uid, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens, arrival=r.arrival)
+                for r in reqs]
+
+    results = {}
+    kernel_mode = "auto" if jax.default_backend() == "tpu" else "interpret"
+    for tag, cfg_m in (("jnp", cfg),
+                       (kernel_mode,
+                        cfg.replace(decode_kernel=kernel_mode))):
+        for wcfg in (cfg_m, cfg_m.replace(name=cfg.name + "-win", window=16)):
+            layout = slot_cache_layout(wcfg)
+            warm_engine(wcfg, params, reqs, capacity=capacity,
+                        max_len=max_len, k=k)
+            m = bench_engine(wcfg, params, fresh(), capacity=capacity,
+                             max_len=max_len, k=k, pipeline=True)
+            m["family"] = wcfg.family
+            m["cache_layout"] = layout
+            key = "kernel_" + ("ring_" if wcfg.window else "") + tag
+            results[key + f"_k{k}"] = m
+    return results
+
+
 def run(quick: bool = False, write_json: bool = True, families=None,
-        speculate: bool = False):
+        speculate: bool = False, kernel: bool = False):
     families = tuple(FAMILY_ARCHS) if families is None else tuple(families)
     results = {}
-    partial = set(families) != set(FAMILY_ARCHS) or speculate
+    partial = set(families) != set(FAMILY_ARCHS) or speculate or kernel
     if write_json and partial:
         # a partial run (--family subset, --speculate) must MERGE into
         # BENCH_serve_engine.json, never erase the other sections'
@@ -314,6 +355,13 @@ def run(quick: bool = False, write_json: bool = True, families=None,
         results.update(_bench_family(family, quick))
     if speculate:
         results.update(_bench_speculative(quick))
+    if kernel:
+        # the kernel section always reflects THIS sweep: purge merged-in
+        # kernel_* keys first, or a CPU (interpret) and a TPU (auto) run
+        # would accumulate stale side-by-side entries per layout
+        for key in [k for k in results if k.startswith("kernel_")]:
+            del results[key]
+        results.update(_bench_kernel_modes(quick))
 
     for name, m in results.items():
         print(f"serve_{name},tok_per_s,{m['tok_per_s']:.1f}")
@@ -341,8 +389,11 @@ if __name__ == "__main__":
     ap.add_argument("--speculate", action="store_true",
                     help="also bench speculative decode on the grown "
                          "gpt-micro pair (acceptance_rate recorded)")
+    ap.add_argument("--kernel", action="store_true",
+                    help="also bench kernel-vs-jnp slot decode side by "
+                         "side (Pallas interpreter off-TPU — small trace)")
     a = ap.parse_args()
     fams = {"all": tuple(FAMILY_ARCHS), "none": ()}.get(
         a.family, (a.family,))
     run(quick=a.quick, write_json=not a.no_json, families=fams,
-        speculate=a.speculate)
+        speculate=a.speculate, kernel=a.kernel)

@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig6,fig7,transfer,roofline,"
-                         "kernels,serve,spec")
+                         "kernels,serve,spec,servek")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -41,6 +41,10 @@ def main() -> None:
         # serve JSON)
         from benchmarks.bench_serve_engine import run as sv_spec
         sv_spec(quick=args.quick, families=(), speculate=True)
+    if section("servek"):
+        # kernel-vs-jnp slot decode only (merges into the serve JSON)
+        from benchmarks.bench_serve_engine import run as sv_kern
+        sv_kern(quick=args.quick, families=(), kernel=True)
     if section("fig6"):
         from benchmarks.bench_fig6_rank_ablation import run as f6
         f6(quick=args.quick)

@@ -12,6 +12,9 @@ import dataclasses
 from typing import Optional, Tuple
 
 
+DECODE_KERNELS = ("jnp", "auto", "interpret", "reference")
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
@@ -90,10 +93,20 @@ class ModelConfig:
     attn_logits_dtype: str = "float32"  # bf16: models VMEM-resident flash
     attn_prefix_chunks: bool = False  # static-prefix causal chunks (§Perf)
     unroll_scans: bool = False  # unroll inner chunk scans (cost calibration)
+    # serving slot-decode attention backend: "jnp" (pure-jnp model path),
+    # "auto" (Pallas kernels — compiled on TPU, interpreter elsewhere),
+    # "interpret" (Pallas CPU interpreter), "reference" (kernels/ref.py
+    # oracles).  Non-jnp modes route decode_step_slots / verify_step_slots
+    # through kernels/ops.py; MLA latent caches always use the jnp path.
+    decode_kernel: str = "jnp"
 
     def __post_init__(self):
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.decode_kernel not in DECODE_KERNELS:
+            raise ValueError(
+                f"decode_kernel must be one of {DECODE_KERNELS} "
+                f"(got {self.decode_kernel!r})")
 
     @property
     def n_dense_layers(self):

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: flash-decode (one query token vs a long KV cache).
+"""Pallas TPU kernels: flash-decode against a KV cache (slot-serving family).
 
 Decode attention is memory-bound: the whole KV cache streams through VMEM
 once per step.  Grid (B, KV, Sk/BK) with the cache axis innermost; a running
@@ -10,6 +10,24 @@ read exactly once per group (the GQA bandwidth win).
 scalar (uniform batch) or a (B,) vector — the continuous-batching case
 where every batch row is a cache slot at its own sequence length.  Rows
 with kv_len == 0 (idle slots) return zeros.
+
+Four kernels share the streaming-softmax machinery:
+
+  * ``decode_attention``      — (B, KV, S, hd) caches, scalar/(B,) kv_len
+                                (the original head-major layout);
+  * ``slot_decode_attention`` — the same math over the serve engine's
+                                POOL layout (B, S, KV, hd): no transpose
+                                of the cache on the hot path;
+  * ``ring_decode_attention`` — ring-buffer window caches: the band mask
+                                is reconstructed per block from the ring
+                                invariant at each row's own length;
+  * ``chunk_verify_attention``— speculative verify: D+1 chunk queries per
+                                row against [cache ‖ chunk] at per-row
+                                offsets, cache read-only.
+
+The slot-path kernels encode done/idle rows as a negative per-row scalar
+(kv_len == 0, slot_positions == -1, offsets == -1): every KV block is
+skipped and the empty accumulator finalizes to exact zeros.
 """
 from __future__ import annotations
 
@@ -21,6 +39,29 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def _flash_update(s, v, m_ref, l_ref, acc_ref):
+    """One streaming-softmax accumulator update.
+
+    s: (..., BK) masked logits; v: (BK, hd) values; scratch shapes are
+    m/l: (..., 1) and acc: (..., hd).  A block must contain at least one
+    unmasked logit (callers guard with ``mask.any()``) — otherwise the
+    NEG_INF - NEG_INF shift would turn masked entries into exp(0).
+    """
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _finalize(o_ref, acc_ref, l_ref, idx):
+    o_ref[idx] = (acc_ref[...] /
+                  jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -127,3 +168,301 @@ def decode_attention(q, k, v, kv_len, *, bk=None, interpret=False):
         interpret=interpret,
     )(kv_len, qg, k, v)
     return out.reshape(B, H, hd)
+
+
+# ===================================================== pool-layout kernels
+# The serve engine's slot pool stores KV as (B, S, KV, hd) — scatters index
+# the cache axis right after the slot axis.  These kernels read that layout
+# directly (BlockSpec (1, bk, 1, hd) over the cache axis), so the hot path
+# never transposes the pool.
+
+def _slot_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, bk, scale):
+    """Full-KV slot decode: per-row valid length, pool layout."""
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[pl.program_id(0)]
+
+    @pl.when(ki * bk < kv_len)
+    def _body():
+        q = q_ref[0, 0]       # (G, hd)
+        k = k_ref[0, :, 0]    # (BK, hd)
+        v = v_ref[0, :, 0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        _flash_update(s, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        _finalize(o_ref, acc_ref, l_ref, (0, 0))
+
+
+def _ring_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, bk, ring, window, scale):
+    """Ring-buffer window slot decode, pool layout.
+
+    Each cache slot's ABSOLUTE position is reconstructed from the ring
+    invariant (slot ``s`` holds the largest position ``p <= qpos`` with
+    ``p % ring == s``) at the row's own length, and the attention band
+    ``(qpos - window, qpos]`` is masked on those positions — the in-kernel
+    mirror of ``models.attention.ring_slot_attend``.  Rows with
+    ``slot_positions < 0`` (done/idle) skip every block and finalize to
+    exact zeros.
+    """
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = pos_ref[pl.program_id(0)]  # row length - 1 == query position
+    slot = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    wrap = qpos // ring  # == (cur_len - 1) // ring with cur_len = qpos + 1
+    base = wrap * ring + slot
+    kpos = jnp.where(base <= qpos, base, base - ring)
+    valid = (kpos >= 0) & (kpos > qpos - window)  # kpos <= qpos by constr.
+
+    @pl.when((qpos >= 0) & jnp.any(valid))
+    def _body():
+        q = q_ref[0, 0]       # (G, hd)
+        k = k_ref[0, :, 0]    # (BK, hd)
+        v = v_ref[0, :, 0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, NEG_INF)
+        _flash_update(s, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        _finalize(o_ref, acc_ref, l_ref, (0, 0))
+
+
+def _chunk_kernel(off_ref, q_ref, ck_ref, cv_ref, kc_ref, vc_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, bk, nk, s_chunk, cache_len,
+                  ring, window, scale):
+    """Speculative chunk-verify: S = d+1 queries per row over
+    [cache ‖ chunk] at per-row offsets, cache READ-ONLY.
+
+    Grid axis 2 runs nk cache blocks then one chunk step (j == nk): the
+    cache streams through VMEM exactly once while all S chunk queries
+    accumulate, and the in-flight chunk's own K/V (tiny: S keys) is
+    attended causally in the final step.  ``ring`` selects the ring- vs
+    full-layout reconstruction of cache key positions; rows with
+    ``offsets < 0`` (done) produce exact zeros.
+    """
+    j = pl.program_id(2)
+    off = off_ref[pl.program_id(0)]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # query j sits at absolute position off + j  -> (S, 1, 1)
+    qpos = off + jax.lax.broadcasted_iota(jnp.int32, (s_chunk, 1, 1), 0)
+
+    def band(kpos):
+        v = (kpos >= 0) & (kpos <= qpos)
+        if window is not None:
+            v &= kpos > qpos - window
+        return v
+
+    @pl.when((off >= 0) & (j < nk))
+    def _cache_block():
+        slot = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk), 2)
+        if ring:
+            # committed length == off: slot s holds the largest p < off
+            # with p % ring == s (never-written slots go negative)
+            wrap = (off - 1) // cache_len
+            base = wrap * cache_len + slot
+            kpos = jnp.where(base < off, base, base - cache_len)
+        else:
+            kpos = jnp.where(slot < off, slot, -1)
+        valid = band(kpos)
+
+        @pl.when(jnp.any(valid))
+        def _():
+            q = q_ref[0, :, 0]      # (S, G, hd)
+            k = ck_ref[0, :, 0]     # (BK, hd)
+            v = cv_ref[0, :, 0]
+            s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+            s = jnp.where(valid, s, NEG_INF)
+            _flash_update(s, v, m_ref, l_ref, acc_ref)
+
+    @pl.when((off >= 0) & (j == nk))
+    def _chunk_block():
+        kpos = off + jax.lax.broadcasted_iota(jnp.int32, (1, 1, s_chunk), 2)
+        valid = band(kpos)  # causal within the chunk (first key always in)
+        q = q_ref[0, :, 0]      # (S, G, hd)
+        k = kc_ref[0, :, 0]     # (S, hd)
+        v = vc_ref[0, :, 0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, NEG_INF)
+        _flash_update(s, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(j == nk)
+    def _fin():
+        _finalize(o_ref, acc_ref, l_ref, (0, slice(None), 0))
+
+
+def _scalar_rows(x, B):
+    return jnp.broadcast_to(jnp.asarray(x, jnp.int32).reshape(-1), (B,))
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def slot_decode_attention(q, k, v, kv_len, *, bk=None, interpret=False):
+    """Full-KV slot decode in POOL layout.
+
+    q: (B, H, hd); k, v: (B, S, KV, hd) — the serve pool's native layout;
+    kv_len: (B,) per-row valid lengths (0 = idle/done row -> exact zeros).
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    if bk is None:
+        bk = _pick_bk(S)
+    assert S % bk == 0, (S, bk)
+    qg = q.reshape(B, KV, g, hd)
+    kv_len = _scalar_rows(kv_len, B)
+
+    out = pl.pallas_call(
+        functools.partial(_slot_kernel, bk=bk, scale=hd ** -0.5),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, KV, S // bk),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, bk, 1, hd),
+                             lambda b, h, j, *_: (b, j, h, 0)),
+                pl.BlockSpec((1, bk, 1, hd),
+                             lambda b, h, j, *_: (b, j, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda b, h, j, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, hd), q.dtype),
+        interpret=interpret,
+    )(kv_len, qg, k, v)
+    return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "bk", "interpret"))
+def ring_decode_attention(q, k, v, slot_positions, *, window, bk=None,
+                          interpret=False):
+    """Ring-buffer window slot decode in POOL layout.
+
+    q: (B, H, hd); k, v: (B, ring, KV, hd) ring caches that already hold
+    this step's K/V at ``slot_positions % ring``; slot_positions: (B,)
+    per-row query positions (== row length - 1 after the write), -1 for
+    done/idle rows (exact-zero output).  ``window`` is the attention band;
+    the ring modulus is the cache length itself (>= window once padded).
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    ring, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    if bk is None:
+        bk = _pick_bk(ring)
+    assert ring % bk == 0, (ring, bk)
+    qg = q.reshape(B, KV, g, hd)
+    slot_positions = _scalar_rows(slot_positions, B)
+
+    out = pl.pallas_call(
+        functools.partial(_ring_kernel, bk=bk, ring=ring, window=window,
+                          scale=hd ** -0.5),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, KV, ring // bk),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, bk, 1, hd),
+                             lambda b, h, j, *_: (b, j, h, 0)),
+                pl.BlockSpec((1, bk, 1, hd),
+                             lambda b, h, j, *_: (b, j, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda b, h, j, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, hd), q.dtype),
+        interpret=interpret,
+    )(slot_positions, qg, k, v)
+    return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ring", "window", "bk", "interpret"))
+def chunk_verify_attention(q, ck, cv, k, v, offsets, *, ring, window=None,
+                           bk=None, interpret=False):
+    """Speculative chunk-verify attention in POOL layout.
+
+    q: (B, S, H, hd) — the D+1-token verify chunk's queries; ck, cv:
+    (B, Sc, KV, hd) read-only cache (full prefix or ring buffer — pick
+    with the static ``ring`` flag); k, v: (B, S, KV, hd) the chunk's own
+    K/V; offsets: (B,) per-row committed lengths (-1 = done row -> exact
+    zeros).  ``window`` adds the sliding-window band.  Returns
+    (B, S, H, hd); the cache operands are never written.
+    """
+    B, S, H, hd = q.shape
+    Sc, KV = ck.shape[1], ck.shape[2]
+    g = H // KV
+    if bk is None:
+        bk = _pick_bk(Sc)
+    assert Sc % bk == 0, (Sc, bk)
+    nk = Sc // bk
+    qg = q.reshape(B, S, KV, g, hd)
+    offsets = _scalar_rows(offsets, B)
+
+    out = pl.pallas_call(
+        functools.partial(_chunk_kernel, bk=bk, nk=nk, s_chunk=S,
+                          cache_len=Sc, ring=ring, window=window,
+                          scale=hd ** -0.5),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, KV, nk + 1),
+            in_specs=[
+                pl.BlockSpec((1, S, 1, g, hd),
+                             lambda b, h, j, *_: (b, 0, h, 0, 0)),
+                pl.BlockSpec((1, bk, 1, hd),
+                             lambda b, h, j, *_: (b, jnp.minimum(j, nk - 1),
+                                                  h, 0)),
+                pl.BlockSpec((1, bk, 1, hd),
+                             lambda b, h, j, *_: (b, jnp.minimum(j, nk - 1),
+                                                  h, 0)),
+                pl.BlockSpec((1, S, 1, hd), lambda b, h, j, *_: (b, 0, h, 0)),
+                pl.BlockSpec((1, S, 1, hd), lambda b, h, j, *_: (b, 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, S, 1, g, hd),
+                                   lambda b, h, j, *_: (b, 0, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((S, g, 1), jnp.float32),
+                pltpu.VMEM((S, g, 1), jnp.float32),
+                pltpu.VMEM((S, g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S, KV, g, hd), q.dtype),
+        interpret=interpret,
+    )(offsets, qg, ck, cv, k, v)
+    return out.reshape(B, S, H, hd)

@@ -15,7 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.decode_attention import (
+    chunk_verify_attention as _chunk_verify,
+    decode_attention as _decode,
+    ring_decode_attention as _ring_decode,
+    slot_decode_attention as _slot_decode,
+)
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 from repro.kernels.tr_sandwich import tr_sandwich as _sandwich
@@ -50,6 +55,48 @@ def decode_attention(q, k, v, kv_len, *, mode="auto", done=None, **kw):
     if mode == "reference":
         return ref.decode_attention_ref(q, k, v, kv_len)
     return _decode(q, k, v, kv_len, interpret=_interp(mode), **kw)
+
+
+def slot_decode_attention(q, k, v, kv_len, *, mode="auto", done=None, **kw):
+    """Full-KV slot decode over the serve pool layout (B, S, KV, hd).
+    ``done`` rows are folded into ``kv_len = 0`` (exact-zero output)."""
+    kv_len = jnp.broadcast_to(
+        jnp.asarray(kv_len, jnp.int32).reshape(-1), (q.shape[0],))
+    if done is not None:
+        kv_len = jnp.where(done, 0, kv_len)
+    if mode == "reference":
+        return ref.slot_decode_attention_ref(q, k, v, kv_len)
+    return _slot_decode(q, k, v, kv_len, interpret=_interp(mode), **kw)
+
+
+def ring_decode_attention(q, k, v, slot_positions, *, window, mode="auto",
+                          done=None, **kw):
+    """Ring-buffer window slot decode over the pool layout.  ``done``
+    rows are folded into ``slot_positions = -1`` (exact-zero output)."""
+    slot_positions = jnp.broadcast_to(
+        jnp.asarray(slot_positions, jnp.int32).reshape(-1), (q.shape[0],))
+    if done is not None:
+        slot_positions = jnp.where(done, -1, slot_positions)
+    if mode == "reference":
+        return ref.ring_decode_attention_ref(q, k, v, slot_positions,
+                                             window=window)
+    return _ring_decode(q, k, v, slot_positions, window=window,
+                        interpret=_interp(mode), **kw)
+
+
+def chunk_verify_attention(q, ck, cv, k, v, offsets, *, ring, window=None,
+                           mode="auto", done=None, **kw):
+    """Speculative chunk-verify attention (read-only cache) over the pool
+    layout.  ``done`` rows are folded into ``offsets = -1``."""
+    offsets = jnp.broadcast_to(
+        jnp.asarray(offsets, jnp.int32).reshape(-1), (q.shape[0],))
+    if done is not None:
+        offsets = jnp.where(done, -1, offsets)
+    if mode == "reference":
+        return ref.chunk_verify_attention_ref(q, ck, cv, k, v, offsets,
+                                              ring=ring, window=window)
+    return _chunk_verify(q, ck, cv, k, v, offsets, ring=ring, window=window,
+                         interpret=_interp(mode), **kw)
 
 
 def rglru_scan(a, b, h0=None, *, mode="auto", **kw):

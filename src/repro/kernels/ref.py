@@ -50,6 +50,86 @@ def decode_attention_ref(q, k, v, kv_len):
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def _ring_kpos(cur_len, ring):
+    """Absolute position held by each ring slot at per-row lengths.
+
+    cur_len: (B,) -> (B, ring) int32, -1 where never written.  (An
+    independent re-derivation of the ring invariant — deliberately NOT
+    imported from ``models.attention`` so the oracle can catch bugs in
+    either implementation.)
+    """
+    slot = jnp.arange(ring, dtype=jnp.int32)[None]
+    cur = cur_len[:, None]
+    base = ((cur - 1) // ring) * ring + slot
+    pos = jnp.where(base < cur, base, base - ring)
+    return jnp.where(pos >= 0, pos, -1)
+
+
+def slot_decode_attention_ref(q, k, v, kv_len):
+    """Pool-layout twin of ``decode_attention_ref``: k, v are
+    (B, S, KV, hd) — the serve pool's native layout."""
+    return decode_attention_ref(q, k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3), kv_len)
+
+
+def ring_decode_attention_ref(q, k, v, slot_positions, *, window):
+    """q: (B, H, hd); k, v: (B, ring, KV, hd) pool-layout ring caches;
+    slot_positions: (B,) per-row query positions (-1: done -> zeros).
+    Masks by absolute position reconstructed from the ring invariant,
+    banded to ``(qpos - window, qpos]``."""
+    B, H, hd = q.shape
+    ring, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    kt = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vt = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    pos = jnp.asarray(slot_positions, jnp.int32).reshape(-1)
+    kpos = _ring_kpos(pos + 1, ring)  # (B, ring)
+    qpos = pos[:, None]
+    mask = (kpos >= 0) & (kpos > qpos - window) & (qpos >= 0)
+    logits = jnp.einsum("bkgh,bksh->bkgs", qg, kt) * hd ** -0.5
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", p, vt)
+    out = out * (pos >= 0).astype(out.dtype)[:, None, None, None]
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def chunk_verify_attention_ref(q, ck, cv, k, v, offsets, *, ring,
+                               window=None):
+    """q: (B, S, H, hd); ck, cv: (B, Sc, KV, hd) read-only cache; k, v:
+    (B, S, KV, hd) the chunk's own K/V; offsets: (B,) committed lengths
+    (-1: done -> zeros).  Attends [cache ‖ chunk] by absolute position."""
+    B, S, H, hd = q.shape
+    Sc, KV = ck.shape[1], ck.shape[2]
+    G = H // KV
+    off = jnp.asarray(offsets, jnp.int32).reshape(-1)
+    if ring:
+        kpos_cache = _ring_kpos(off, Sc)
+    else:
+        pos = jnp.broadcast_to(jnp.arange(Sc, dtype=jnp.int32)[None],
+                               (B, Sc))
+        kpos_cache = jnp.where(pos < off[:, None], pos, -1)
+    kpos_chunk = off[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    kpos = jnp.concatenate([kpos_cache, kpos_chunk], 1)  # (B, Sc + S)
+    qpos = off[:, None] + jnp.arange(S, dtype=jnp.int32)[None]  # (B, S)
+    mask = (kpos[:, None] >= 0) & (kpos[:, None] <= qpos[:, :, None]) \
+        & (off >= 0)[:, None, None]
+    if window is not None:
+        mask &= kpos[:, None] > qpos[:, :, None] - window
+    k_all = jnp.concatenate([ck.astype(jnp.float32), k.astype(jnp.float32)],
+                            1).transpose(0, 2, 1, 3)  # (B, KV, Sc+S, hd)
+    v_all = jnp.concatenate([cv.astype(jnp.float32), v.astype(jnp.float32)],
+                            1).transpose(0, 2, 1, 3)
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bksh->bkgqs", qg, k_all) * hd ** -0.5
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bqkgh", p, v_all)
+    out = out * (off >= 0).astype(out.dtype)[:, None, None, None, None]
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
 def rglru_scan_ref(a, b, h0=None):
     """Linear recurrence h_t = a_t * h_{t-1} + b_t.
 

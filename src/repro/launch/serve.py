@@ -64,8 +64,15 @@ def _jitted_steps(cfg):
 
 
 def generate(cfg, params, prompt_tokens, *, max_new_tokens=16,
-             max_len=None):
-    """prompt_tokens: (B, P) int32 -> (B, max_new_tokens) greedy tokens."""
+             max_len=None, eos_id=None):
+    """prompt_tokens: (B, P) int32 -> (B, <=max_new_tokens) greedy tokens.
+
+    ``eos_id`` enables per-row early stopping: a row that emits eos is
+    frozen (later entries clamp to eos) and the loop exits as soon as
+    EVERY row has fired — the returned array is then shorter than
+    ``max_new_tokens``.  Without eos the loop always decodes the full
+    budget and stays fully lazy (no per-step host sync).
+    """
     fam = get_family(cfg)
     B, P = prompt_tokens.shape
     max_len = max_len or (P + max_new_tokens)
@@ -75,8 +82,14 @@ def generate(cfg, params, prompt_tokens, *, max_new_tokens=16,
     logits, cache = prefill(params, {"tokens": prompt_tokens}, cache)
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     out = [tok]
+    done = None if eos_id is None else (tok == eos_id)
     for t in range(max_new_tokens - 1):
+        if done is not None and bool(done.all()):
+            break
         tok, cache = decode(params, tok, jnp.int32(P + t), cache)
+        if done is not None:
+            tok = jnp.where(done, eos_id, tok)  # freeze finished rows
+            done = done | (tok == eos_id)
         out.append(tok)
     return jnp.stack(out, axis=1)
 
@@ -190,19 +203,36 @@ def main():
     ap.add_argument("--spec-d", type=int, default=4,
                     help="speculation depth: draft proposals per block")
     ap.add_argument("--temperature", type=float, default=0.0,
-                    help="sampling temperature (0 = greedy)")
+                    help="sampling temperature (0 = greedy; implied 1.0 "
+                         "when only --top-k/--top-p are set)")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--sample-seed", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a sequence early when it emits this token")
+    ap.add_argument("--kernel", default="jnp",
+                    choices=["jnp", "auto", "interpret", "reference"],
+                    help="slot-decode attention backend: jnp (pure-jnp "
+                         "model path), auto (Pallas kernels — compiled on "
+                         "TPU, interpreter elsewhere), interpret (Pallas "
+                         "CPU interpreter), reference (kernels/ref.py "
+                         "oracles)")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
+    cfg = get_config(args.arch).replace(decode_kernel=args.kernel)
     if args.engine == "continuous":
         # probe BEFORE param init/growth — rejection must not cost a grow
         require_servable(cfg)
     sampling = None
-    if args.temperature > 0:
-        sampling = SamplingParams(temperature=args.temperature,
+    if args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0:
+        # honor ANY non-default sampling flag: --top-k/--top-p alone used
+        # to be silently greedy (SamplingParams was only built for
+        # --temperature > 0, and temperature 0 means greedy)
+        temperature = args.temperature if args.temperature > 0 else 1.0
+        if args.temperature <= 0:
+            print("[serve] --top-k/--top-p without --temperature: "
+                  "sampling at temperature 1.0")
+        sampling = SamplingParams(temperature=temperature,
                                   top_k=args.top_k, top_p=args.top_p,
                                   seed=args.sample_seed)
     if args.engine == "naive" and (sampling is not None
@@ -212,6 +242,11 @@ def main():
         raise SystemExit("error: --temperature/--top-k/--top-p/--policy "
                          "require --engine continuous (the naive loop is "
                          "greedy lock-step)")
+    if args.engine == "naive" and args.kernel != "jnp":
+        # same silently-ignored-flag class: the naive loop never touches
+        # the slot-decode protocol, so a kernel mode would not run
+        raise SystemExit("error: --kernel requires --engine continuous "
+                         "(the Pallas kernels back the slot-decode path)")
     speculative = None
     max_len = args.max_len or (args.prompt_len + args.gen)
     if args.speculate:
@@ -245,12 +280,23 @@ def main():
         prompts = jnp.asarray(lm_batch(cfg.vocab_size, args.batch,
                                        args.prompt_len))
         t0 = time.time()
-        toks = generate(cfg, params, prompts, max_new_tokens=args.gen)
+        toks = generate(cfg, params, prompts, max_new_tokens=args.gen,
+                        eos_id=args.eos_id)
         toks.block_until_ready()
         dt = time.time() - t0
-        print(f"[naive] generated {args.batch}x{args.gen} tokens in "
-              f"{dt:.2f}s ({args.batch * args.gen / dt:.1f} tok/s)")
-        print(np.asarray(toks[:2]))
+        toks_np = np.asarray(toks)
+        if args.eos_id is None:
+            n_tok = toks_np.size
+        else:
+            # count up to each row's first eos — the frozen filler past
+            # it was never really decoded
+            fired = toks_np == args.eos_id
+            n_tok = sum(int(np.argmax(r)) + 1 if r.any() else len(r)
+                        for r in fired)
+        print(f"[naive] generated {n_tok} tokens "
+              f"({args.batch}x<={toks_np.shape[1]}) in "
+              f"{dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+        print(toks_np[:2])
         return
 
     engine = ContinuousBatchingEngine(cfg, params, capacity=args.capacity,
@@ -264,7 +310,7 @@ def main():
                                 args.prompt_len + 1))
         prompt = lm_batch(cfg.vocab_size, 1, plen, seed=uid)[0]
         reqs.append(Request(uid=uid, prompt=prompt,
-                            max_new_tokens=args.gen))
+                            max_new_tokens=args.gen, eos_id=args.eos_id))
     t0 = time.time()
     out = engine.run(reqs)
     dt = time.time() - t0

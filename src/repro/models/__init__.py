@@ -17,6 +17,11 @@ implement the SLOT-STATE PROTOCOL (see docs/serving.md):
       no-ops (frozen state / bit-identical cache re-stores)
   serve_supported(cfg) -> (ok, detail)
 
+``cfg.decode_kernel`` selects the slot attention backend inside these
+hooks: "jnp" (default) or a Pallas kernel mode ("auto" / "interpret" /
+"reference" — see kernels/ops.py); caches are allocated in the TPU
+pool layout (cache axis padded via ``common.pad_cache_len``) either way.
+
 Families that additionally serve as a speculative draft/target implement
 the chunk-verify extension of the protocol:
   verify_step_slots(params, tokens (B,S), positions (B,), cache, cfg,

@@ -254,7 +254,7 @@ def ring_slot_attend(q, ck, cv, slot_positions, *, window, scale=None,
 
 
 def ring_slot_update_attend(q, cache, k, v, slot_positions, *, window,
-                            done=None, scale=None):
+                            done=None, scale=None, kernel=None):
     """One slot-decode step over a ring-buffer window cache: write each
     row's K/V at its own ring slot (``pos % ring``), freeze ``done`` rows
     to their old bytes, and attend by absolute position.
@@ -263,9 +263,13 @@ def ring_slot_update_attend(q, cache, k, v, slot_positions, *, window,
     write/freeze/attend ordering, shared by the transformer window path
     and griffin's local-attention blocks.  cache: {"k": (B, ring, KV, hd),
     "v": ...}; k/v: (B, 1, KV, hd) this step's projections; the ring
-    modulus is the cache length (== window, or shorter never-wrapping
-    caches when max_len < window); ``window`` sets the attention band.
-    Returns (out (B, 1, H, hd_v), new_cache).
+    modulus is the cache length (>= window once the pool is padded, or
+    shorter never-wrapping caches when max_len < window); ``window`` sets
+    the attention band.  ``kernel`` selects the attend backend: None runs
+    the jnp ``ring_slot_attend``, otherwise the Pallas
+    ``ring_decode_attention`` kernel in that mode (auto / interpret /
+    reference) reads the pool layout directly.  Returns
+    (out (B, 1, H, hd_v), new_cache).
     """
     from repro.models.common import freeze_rows
 
@@ -279,6 +283,13 @@ def ring_slot_update_attend(q, cache, k, v, slot_positions, *, window,
         # done rows' frozen (token, position) re-store identical bytes
         # anyway; the explicit freeze makes the no-op unconditional
         new_cache = freeze_rows(cache, new_cache, done)
+    if kernel is not None:
+        assert scale is None, "the ring kernel fixes scale at hd**-0.5"
+        from repro.kernels import ops
+        out = ops.ring_decode_attention(
+            q[:, 0], new_cache["k"], new_cache["v"], slot_positions,
+            window=window, done=done, mode=kernel)[:, None]
+        return out, new_cache
     out = ring_slot_attend(q, new_cache["k"].astype(q.dtype),
                            new_cache["v"].astype(q.dtype), slot_positions,
                            window=window, scale=scale, done=done)

@@ -63,6 +63,23 @@ def gelu(x):
     return jax.nn.gelu(x, approximate=True)
 
 
+def pad_cache_len(n: int) -> int:
+    """Kernel-friendly KV-cache sequence length (the TPU-layout pool).
+
+    The Pallas decode kernels tile the cache axis in blocks that must
+    divide it exactly (``kernels.decode_attention._pick_bk``), which a
+    prime or awkward-odd ``max_len`` > 256 cannot satisfy.  Lengths above
+    256 round up to a multiple of 64 — guaranteeing a block in [64, 256]
+    — and short caches round up to the f32 sublane quantum (8).  Padding
+    is invisible to the math: full layouts mask the tail behind per-row
+    ``kv_len``, ring layouts take the padded length as their ring modulus
+    (absolute-position masking makes a ring larger than the window
+    attend identically).
+    """
+    q = 8 if n <= 256 else 64
+    return -(-n // q) * q
+
+
 def take_layer(stacked, i):
     """Slice layer ``i`` from every leaf of a stacked-params subtree."""
     return jax.tree.map(lambda a: a[i], stacked)

@@ -256,17 +256,19 @@ def _attn_block(x, bp, cfg, positions, cache=None, q_offset=0,
     if slot_positions is not None:
         # continuous-batching decode: every row is a slot at its own
         # length — write this step's K/V at the row's own ring slot and
-        # attend by absolute position (the slot mirror of the S == 1 path)
+        # attend by absolute position (the slot mirror of the S == 1
+        # path); ``cfg.decode_kernel`` routes the attend through the
+        # Pallas ring kernel
         out, nc = attn_lib.ring_slot_update_attend(
             q, cache, k, v, slot_positions, window=cfg.window,
-            done=slot_done)
+            done=slot_done, kernel=tf._kernel_mode(cfg))
     elif cache is not None:
         ck, cv = cache["k"], cache["v"]
         window = cfg.window
+        ring = ck.shape[1]  # the ring modulus (>= window once padded)
         if plens is not None and S > 1:
             # bucketed admission prefill: fill each row's ring from its
             # TRUE prompt length by absolute position
-            ring = ck.shape[1]
             ck = attn_lib.ring_fill_rows(k, plens, ring, ck.dtype)
             cv = attn_lib.ring_fill_rows(v, plens, ring, cv.dtype)
             nc = {"k": ck, "v": cv}
@@ -275,13 +277,13 @@ def _attn_block(x, bp, cfg, positions, cache=None, q_offset=0,
                                      chunk_q=cfg.attn_chunk,
                                      unroll=cfg.unroll_scans)
         else:
-            w_eff = min(S, window)
-            idx = (q_offset + S - w_eff + jnp.arange(w_eff)) % window
+            w_eff = min(S, ring)
+            idx = (q_offset + S - w_eff + jnp.arange(w_eff)) % ring
             ck = ck.at[:, idx].set(k[:, -w_eff:].astype(ck.dtype))
             cv = cv.at[:, idx].set(v[:, -w_eff:].astype(cv.dtype))
             nc = {"k": ck, "v": cv}
             if S == 1:
-                kpos_abs = tf._ring_positions(q_offset + S, window)
+                kpos_abs = tf._ring_positions(q_offset + S, ring)
                 out = tf._ring_window_attend(q, ck.astype(x.dtype),
                                              cv.astype(x.dtype), kpos_abs,
                                              q_offset, cfg)
@@ -394,7 +396,8 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
     pat = block_pattern(cfg)
     n_rec = sum(1 for t in pat if t == "rec")
     n_attn = len(pat) - n_rec
-    wlen = min(max_len, cfg.window or max_len)
+    from repro.models.common import pad_cache_len
+    wlen = pad_cache_len(min(max_len, cfg.window or max_len))
     cache = {
         "rec": {
             "conv": jnp.zeros((n_rec, batch_size, cfg.conv_width - 1,
@@ -528,7 +531,11 @@ def serve_supported(cfg):
 
 def slot_cache_layout(cfg):
     has_attn = any(t == "attn" for t in block_pattern(cfg))
-    return "recurrent+ring" if has_attn else "recurrent"
+    if not has_attn:
+        return "recurrent"
+    if cfg.decode_kernel != "jnp":
+        return "recurrent+ring+kernel"
+    return "recurrent+ring"
 
 
 def cache_specs(cfg):

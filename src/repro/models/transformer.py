@@ -29,6 +29,7 @@ from repro.models.common import (
     apply_norm,
     init_norm,
     keygen,
+    pad_cache_len,
     rms_norm,
     trunc_normal,
 )
@@ -159,6 +160,22 @@ def _slot_kv_len(slot_positions, slot_done):
     return jnp.where(slot_done, 0, kv)
 
 
+def _kernel_mode(cfg):
+    """The slot-decode attention backend: None (pure jnp) or the mode
+    string handed to ``kernels.ops`` (auto / interpret / reference)."""
+    return None if cfg.decode_kernel == "jnp" else cfg.decode_kernel
+
+
+def _is_ring(cache_len, window):
+    """A window cache whose length reaches the window is a wrapping ring
+    (slot = pos % cache_len); a shorter one never wraps and uses the
+    full-cache layout.  ``>=`` not ``==``: the pool pads the cache axis to
+    a kernel block multiple, which may push a ring past the window —
+    absolute-position masking keeps a larger ring attend-identical.
+    """
+    return window is not None and cache_len >= window
+
+
 def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
                   kv_len=None, window=None, slot_positions=None,
                   slot_done=None, plens=None, chunk_offsets=None):
@@ -223,21 +240,26 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
     v = annotate(v, ("batch", "seq", "kv_heads", "head_dim"))
 
     if chunk_offsets is not None:
-        # speculative verify: attend [cache ‖ chunk] read-only; a window
-        # cache whose length equals the window is a wrapping ring (slot =
-        # pos % ring), a shorter one never wraps and indexes directly
-        is_ring = window is not None and cache["k"].shape[1] == window
-        out = attn_lib.chunk_verify_attend(
-            q, cache["k"], cache["v"], k, v, chunk_offsets, ring=is_ring,
-            window=window, done=slot_done,
-            logits_dtype=jnp.dtype(cfg.attn_logits_dtype))
+        # speculative verify: attend [cache ‖ chunk] read-only
+        is_ring = _is_ring(cache["k"].shape[1], window)
+        kmode = _kernel_mode(cfg)
+        if kmode is not None:
+            from repro.kernels import ops
+            out = ops.chunk_verify_attention(
+                q, cache["k"], cache["v"], k, v, chunk_offsets,
+                ring=is_ring, window=window, done=slot_done, mode=kmode)
+        else:
+            out = attn_lib.chunk_verify_attend(
+                q, cache["k"], cache["v"], k, v, chunk_offsets,
+                ring=is_ring, window=window, done=slot_done,
+                logits_dtype=jnp.dtype(cfg.attn_logits_dtype))
         return _attn_out(out, p, cfg, cdt), {"k": k, "v": v}
 
     new_cache = None
     if slot_positions is not None:
-        if window is not None and cache["k"].shape[1] == window:
+        if _is_ring(cache["k"].shape[1], window):
             # Ring-buffer window cache: each row writes its own slot
-            # ``pos % window`` and attends by ABSOLUTE position
+            # ``pos % ring`` and attends by ABSOLUTE position
             # reconstructed from the ring invariant — the per-slot mirror
             # of ``_ring_window_attend``.  Done rows freeze (their frozen
             # token/position would re-store identical bytes anyway) and
@@ -247,7 +269,7 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
             # the band by construction.)
             out, new_cache = attn_lib.ring_slot_update_attend(
                 q, cache, k, v, slot_positions, window=window,
-                done=slot_done)
+                done=slot_done, kernel=_kernel_mode(cfg))
             return _attn_out(out, p, cfg, cdt), new_cache
         # Scatter this step's K/V to each row's own write position, then
         # attend with a per-row valid length.  Row arithmetic is identical
@@ -263,26 +285,35 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
         cv = cache["v"].at[b_idx, slot_positions].set(
             v[:, 0].astype(cache["v"].dtype))
         new_cache = {"k": ck, "v": cv}
-        out = attn_lib.attention(
-            q, ck.astype(cdt), cv.astype(cdt), causal=False,
-            kv_len=_slot_kv_len(slot_positions, slot_done),
-            chunk_q=cfg.attn_chunk, unroll=cfg.unroll_scans,
-            logits_dtype=jnp.dtype(cfg.attn_logits_dtype))
+        kmode = _kernel_mode(cfg)
+        if kmode is not None:
+            from repro.kernels import ops
+            out = ops.slot_decode_attention(
+                q[:, 0], ck, cv, _slot_kv_len(slot_positions, slot_done),
+                mode=kmode)[:, None]
+        else:
+            out = attn_lib.attention(
+                q, ck.astype(cdt), cv.astype(cdt), causal=False,
+                kv_len=_slot_kv_len(slot_positions, slot_done),
+                chunk_q=cfg.attn_chunk, unroll=cfg.unroll_scans,
+                logits_dtype=jnp.dtype(cfg.attn_logits_dtype))
         return _attn_out(out, p, cfg, cdt), new_cache
     if cache is not None:
         # cache: {"k": (B, Smax, KV, hd), "v": ...} — window caches are ring
         # buffers of size ``window`` (slot = abs_pos % window).
         ck, cv = cache["k"], cache["v"]
         wsize = ck.shape[1]
-        if window is not None and wsize == window:
+        if _is_ring(wsize, window):
+            # the ring modulus is the CACHE length (>= window once the
+            # pool pads to a kernel block multiple), not the window
             if plens is not None and S > 1:
                 # admission prefill of tail-padded prompts: fill each
                 # row's ring from its TRUE length
-                ck = attn_lib.ring_fill_rows(k, plens, window, ck.dtype)
-                cv = attn_lib.ring_fill_rows(v, plens, window, cv.dtype)
+                ck = attn_lib.ring_fill_rows(k, plens, wsize, ck.dtype)
+                cv = attn_lib.ring_fill_rows(v, plens, wsize, cv.dtype)
             else:
-                w_eff = min(S, window)
-                idx = (q_offset + S - w_eff + jnp.arange(w_eff)) % window
+                w_eff = min(S, wsize)
+                idx = (q_offset + S - w_eff + jnp.arange(w_eff)) % wsize
                 ck = ck.at[:, idx].set(k[:, -w_eff:].astype(ck.dtype))
                 cv = cv.at[:, idx].set(v[:, -w_eff:].astype(cv.dtype))
             new_cache = {"k": ck, "v": cv}
@@ -293,7 +324,7 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
                     q_offset=q_offset, chunk_q=cfg.attn_chunk,
                     unroll=cfg.unroll_scans)
             else:
-                kpos_abs = _ring_positions(q_offset + S, window)
+                kpos_abs = _ring_positions(q_offset + S, wsize)
                 out = _ring_window_attend(q, ck.astype(cdt), cv.astype(cdt),
                                           kpos_abs, q_offset, cfg)
             return _attn_out(out, p, cfg, cdt), new_cache
@@ -322,12 +353,13 @@ def _attn_out(out, p, cfg, cdt):
     return y
 
 
-def _ring_positions(cur_len, window):
-    """Absolute position stored in each ring-buffer slot; -1 if unwritten."""
-    slot = jnp.arange(window)
-    wrap = (cur_len - 1) // window
-    base = wrap * window + slot
-    pos = jnp.where(base < cur_len, base, base - window)
+def _ring_positions(cur_len, ring):
+    """Absolute position stored in each ring-buffer slot; -1 if unwritten.
+    ``ring`` is the cache length (the ring modulus), not the window."""
+    slot = jnp.arange(ring)
+    wrap = (cur_len - 1) // ring
+    base = wrap * ring + slot
+    pos = jnp.where(base < cur_len, base, base - ring)
     return jnp.where(pos >= 0, pos, -1)
 
 
@@ -642,18 +674,28 @@ def _mtp_forward(params, h, batch, positions, cfg):
 
 # ============================================================== serve (KV)
 def init_cache(cfg, batch_size, max_len, dtype=None):
-    """Stacked per-group caches."""
+    """Stacked per-group caches.
+
+    The cache axis is padded to a kernel block multiple
+    (``common.pad_cache_len`` — the TPU-layout pool contract), so the
+    Pallas decode kernels always find a valid cache-axis block even for
+    prime/odd ``max_len``.  The padding is invisible: full layouts mask
+    it behind per-row ``kv_len``, ring layouts take the padded length as
+    their ring modulus.
+    """
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
     n_dense = cfg.moe_layer_start if cfg.moe else cfg.n_layers
     n_moe = cfg.n_layers - n_dense
     wlen = min(max_len, cfg.window) if cfg.window else max_len
+    wlen = pad_cache_len(wlen)
+    flen = pad_cache_len(max_len)
 
     def one(n):
         if cfg.mla:
             return {
-                "ckv": jnp.zeros((n, batch_size, max_len, cfg.kv_lora_rank),
+                "ckv": jnp.zeros((n, batch_size, flen, cfg.kv_lora_rank),
                                  dtype),
-                "kr": jnp.zeros((n, batch_size, max_len, cfg.qk_rope_dim),
+                "kr": jnp.zeros((n, batch_size, flen, cfg.qk_rope_dim),
                                 dtype),
             }
         return {
@@ -862,9 +904,16 @@ def serve_supported(cfg):
 
 
 def slot_cache_layout(cfg):
+    """Slot-pool layout tag for benchmarks/telemetry.  A ``+kernel``
+    suffix marks configs whose slot decode / chunk verify runs through
+    the Pallas kernel family (``cfg.decode_kernel != "jnp"``); MLA latent
+    caches always use the jnp absorbed-weight path."""
     if cfg.mla:
         return "full-mla"
-    return "ring" if cfg.window else "full"
+    base = "ring" if cfg.window else "full"
+    if _kernel_mode(cfg) is not None:
+        return base + "+kernel"
+    return base
 
 
 # ============================================================= param specs

@@ -44,6 +44,11 @@ pool instead:
                         PRNG chains through admission and the decode
                         loops (temperature / top-k / top-p; speculative
                         mode uses draft-rejection sampling);
+  * kernel backend    — ``cfg.decode_kernel`` swaps the slot attention
+                        inside ``decode_step_slots``/``verify_step_slots``
+                        between the jnp path and the Pallas kernel family
+                        (token-exact either way; the draft cfg is aligned
+                        to the target's switch automatically);
   * double buffering  — ``run()`` dispatches macro-block N+1 (pure
                         device-side dataflow, no sync) before blocking on
                         block N's tokens, so readback overlaps compute.
@@ -238,10 +243,17 @@ class ContinuousBatchingEngine:
             if not ok:
                 raise NotImplementedError(
                     f"speculative serving cannot run this pair: {why}")
+            if speculative.cfg.decode_kernel != cfg.decode_kernel:
+                # one attention backend per engine: the draft pool's slot
+                # decode and catch-up verify follow the target's switch
+                speculative = SpeculativeConfig(
+                    speculative.cfg.replace(decode_kernel=cfg.decode_kernel),
+                    speculative.params, speculative.d)
         self.cfg = cfg
         self.params = params
         self.fam = get_family(cfg)
         self.cache_layout = slot_cache_layout(cfg)
+        self.decode_kernel = cfg.decode_kernel  # telemetry / bench tag
         self.capacity = capacity
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket

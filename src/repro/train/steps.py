@@ -102,8 +102,10 @@ def make_prefill_step(cfg):
     return prefill_fn
 
 
-def make_decode_step(cfg, sample: str = "greedy"):
-    """One serving step: feed current tokens, emit next tokens + cache."""
+def make_decode_step(cfg):
+    """One greedy serving step: feed current tokens, emit next + cache.
+    (Non-greedy decode lives in the engine's sampled loops —
+    ``serve/sampling.py`` — not here.)"""
     fam = get_family(cfg)
 
     def decode_fn(params, tokens, pos, cache):

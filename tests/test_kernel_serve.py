@@ -1,0 +1,195 @@
+"""Kernel-backed slot decode: token-exactness of the Pallas serving path.
+
+``cfg.decode_kernel`` swaps the slot-decode / chunk-verify attention from
+the pure-jnp model path to the Pallas kernel family (interpret mode on
+this CPU container).  The contract: greedy engine tokens are EXACTLY the
+jnp path's tokens — which are themselves exactly the sequential
+``generate()`` tokens — for every slot cache layout:
+
+  * full KV          (transformer dense/GQA),
+  * ring-buffer window (sliding-window transformer, wraps included),
+  * recurrent + ring (griffin's local-attention blocks),
+  * speculative chunk-verify (draft proposals, target verify, commit).
+
+Configs are kept micro: every decode step in interpret mode emulates the
+kernel per layer, so these tests budget their traces tightly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import lm_batch
+from repro.launch.serve import generate
+from repro.models import get_family
+from repro.serve import ContinuousBatchingEngine, Request, SpeculativeConfig
+
+MAX_LEN = 32
+KMODE = "interpret"
+
+
+def tiny_cfg(**kw):
+    base = dict(name="kern-serve", n_layers=2, d_model=48, n_heads=4,
+                n_kv_heads=2, d_ff=96, vocab_size=97, attn_chunk=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def griffin_cfg():
+    # window (6) below MAX_LEN so the local-attention rings really wrap
+    return ModelConfig(name="kern-griffin", family="griffin", n_layers=3,
+                       d_model=48, n_heads=4, n_kv_heads=1, d_ff=96,
+                       vocab_size=97, lru_width=48, window=6, act="geglu",
+                       attn_chunk=8, scale_embeddings=True,
+                       block_pattern=("rec", "rec", "attn"))
+
+
+def _params(cfg):
+    return get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+
+
+def _requests(cfg, specs, *, seed0=50, eos=None):
+    reqs = [Request(uid=i,
+                    prompt=lm_batch(cfg.vocab_size, 1, p, seed=seed0 + i)[0],
+                    max_new_tokens=g)
+            for i, (p, g) in enumerate(specs)]
+    if eos is not None:
+        reqs[0].eos_id = eos
+    return reqs
+
+
+def _run(cfg, params, specs, *, k, capacity=2, speculative=None, eos=None):
+    engine = ContinuousBatchingEngine(cfg, params, capacity=capacity,
+                                      max_len=MAX_LEN, prefill_bucket=4,
+                                      k=k, speculative=speculative)
+    return engine.run(_requests(cfg, specs, eos=eos))
+
+
+def _assert_same(a, b, tag):
+    assert set(a) == set(b)
+    for uid in a:
+        np.testing.assert_array_equal(a[uid], b[uid],
+                                      err_msg=f"{tag} uid {uid}")
+
+
+@pytest.mark.parametrize("k", [1, 8])
+def test_full_kv_kernel_token_exact(k):
+    """Kernel-backed full-KV slot decode == jnp slot decode == sequential
+    generate(), through admission bucketing, slot reuse, and macro
+    stepping at K in {1, 8}."""
+    cfg = tiny_cfg()
+    params = _params(cfg)
+    specs = [(3, 6), (9, 2), (5, 8)]
+    jnp_out = _run(cfg, params, specs, k=k)
+    ker_out = _run(cfg.replace(decode_kernel=KMODE), params, specs, k=k)
+    _assert_same(ker_out, jnp_out, f"full k={k}")
+    seq = {r.uid: np.asarray(generate(
+        cfg, params, jnp.asarray(r.prompt)[None],
+        max_new_tokens=r.max_new_tokens, max_len=MAX_LEN)[0])
+        for r in _requests(cfg, specs)}
+    _assert_same(ker_out, seq, f"full-vs-seq k={k}")
+
+
+def test_full_kv_kernel_done_rows_freeze_mid_block():
+    """An eos inside a macro block: the kernel path's done rows take the
+    kv_len == 0 short-circuit as exact no-ops and the neighbour's tokens
+    stay exact (mirrors test_eos_mid_block on the jnp path)."""
+    cfg = tiny_cfg(name="kern-eos", learned_pos=64, rope="none",
+                   tie_embeddings=True)
+    params = _params(cfg)
+    specs = [(6, 12), (8, 12)]
+    base = _run(cfg, params, specs, k=4)
+    # first request's 3rd token as its eos: fires strictly inside a block
+    eos = int(base[0][2])
+    jnp_out = _run(cfg, params, specs, k=4, eos=eos)
+    ker_out = _run(cfg.replace(decode_kernel=KMODE), params, specs, k=4,
+                   eos=eos)
+    _assert_same(ker_out, jnp_out, "eos-mid-block")
+    assert len(ker_out[0]) < len(base[0])  # really stopped early
+
+
+@pytest.mark.parametrize("k", [1, 8])
+def test_ring_window_kernel_token_exact(k):
+    """Kernel-backed ring-window slot decode (band mask reconstructed
+    from the ring invariant in-kernel) == jnp path, across ring wraps."""
+    cfg = tiny_cfg(name="kern-win", window=8)
+    params = _params(cfg)
+    specs = [(3, 12), (10, 8), (6, 14)]  # well past the window: wraps
+    jnp_out = _run(cfg, params, specs, k=k, capacity=3)
+    ker_out = _run(cfg.replace(decode_kernel=KMODE), params, specs, k=k,
+                   capacity=3)
+    _assert_same(ker_out, jnp_out, f"ring k={k}")
+
+
+def test_griffin_ring_kernel_token_exact():
+    """Griffin's local-attention blocks route their ring slot decode
+    through the same kernel switch (recurrent state stays jnp)."""
+    cfg = griffin_cfg()
+    params = _params(cfg)
+    specs = [(3, 8), (9, 4), (5, 10)]
+    jnp_out = _run(cfg, params, specs, k=4)
+    ker_out = _run(cfg.replace(decode_kernel=KMODE), params, specs, k=4)
+    _assert_same(ker_out, jnp_out, "griffin")
+
+
+@pytest.mark.parametrize("d", [1, 3])
+def test_chunk_verify_kernel_token_exact(d):
+    """Speculative serving with the kernel backend: the draft's slot
+    decode, the target's chunk verify, and both commits produce exactly
+    the jnp engine's tokens (the engine aligns the draft cfg's switch to
+    the target's automatically)."""
+    cfg = tiny_cfg()
+    params = _params(cfg)
+    specs = [(3, 8), (6, 6)]
+    spec = SpeculativeConfig(cfg, params, d=d)
+    jnp_out = _run(cfg, params, specs, k=2, speculative=spec)
+    ker_out = _run(cfg.replace(decode_kernel=KMODE), params, specs, k=2,
+                   speculative=SpeculativeConfig(cfg, params, d=d))
+    _assert_same(ker_out, jnp_out, f"spec d={d}")
+
+
+def test_chunk_verify_kernel_ring_window():
+    """Speculative chunk-verify over a WRAPPING ring-buffer window cache:
+    the kernel's ring reconstruction at per-row committed lengths matches
+    the jnp path token for token."""
+    cfg = tiny_cfg(name="kern-win-spec", window=8)
+    params = _params(cfg)
+    specs = [(3, 12), (6, 10)]  # beyond the window: verify spans wraps
+    spec = SpeculativeConfig(cfg, params, d=2)
+    jnp_out = _run(cfg, params, specs, k=2, speculative=spec)
+    ker_out = _run(cfg.replace(decode_kernel=KMODE), params, specs, k=2,
+                   speculative=SpeculativeConfig(cfg, params, d=2))
+    _assert_same(ker_out, jnp_out, "spec-ring")
+
+
+def test_odd_and_prime_max_len_kernel_serves():
+    """Regression for the ``_pick_bk`` failure class: an odd max_len
+    (pool pads to a block multiple) serves through the kernel path, and
+    padded prime lengths > 256 always have a block."""
+    cfg = tiny_cfg(name="kern-odd").replace(decode_kernel=KMODE)
+    params = _params(cfg)
+    engine = ContinuousBatchingEngine(cfg, params, capacity=2, max_len=29,
+                                      prefill_bucket=4, k=4)
+    kleaf = engine.pool["dense"]["k"]
+    assert kleaf.shape[2] == 32  # 29 padded to the sublane quantum
+    reqs = _requests(cfg, [(3, 5), (7, 4)])
+    got = engine.run(reqs)
+    want = {r.uid: np.asarray(generate(
+        cfg.replace(decode_kernel="jnp"), params,
+        jnp.asarray(r.prompt)[None], max_new_tokens=r.max_new_tokens,
+        max_len=29)[0]) for r in reqs}
+    _assert_same(got, want, "odd-max-len")
+
+
+def test_reference_mode_matches_jnp_engine():
+    """mode="reference" (the kernels/ref.py oracles) is a third
+    independent implementation of the slot path — its engine tokens must
+    match the jnp engine's too."""
+    cfg = tiny_cfg(name="kern-refmode", window=8)
+    params = _params(cfg)
+    specs = [(3, 10), (6, 8)]
+    jnp_out = _run(cfg, params, specs, k=4)
+    ref_out = _run(cfg.replace(decode_kernel="reference"), params, specs,
+                   k=4)
+    _assert_same(ref_out, jnp_out, "reference")

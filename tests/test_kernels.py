@@ -130,6 +130,116 @@ def test_decode_attention_auto_bk_short_cache():
                                atol=2e-4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_slot_decode_attention_pool_layout(dtype):
+    """The pool-layout kernel (k/v as (B, S, KV, hd) — the serve engine's
+    slot pool, no transpose on the hot path) matches both its own oracle
+    and the head-major kernel on transposed operands."""
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    b, h, kv, s, hd = 3, 4, 2, 40, 32
+    q = jax.random.normal(keys[0], (b, h, hd), dtype)
+    k = jax.random.normal(keys[1], (b, s, kv, hd), dtype)
+    v = jax.random.normal(keys[2], (b, s, kv, hd), dtype)
+    lens = jnp.asarray([0, 7, 40], jnp.int32)
+    o = ops.slot_decode_attention(q, k, v, lens, mode="interpret")
+    orf = ref.slot_decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), **_tol(dtype))
+    assert (np.asarray(o[0], np.float32) == 0).all()  # idle row
+    ot = ops.decode_attention(q, k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3), lens,
+                              mode="interpret")
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ot, np.float32), rtol=2e-5,
+                               atol=2e-5)
+    # done folds to kv_len = 0
+    od = ops.slot_decode_attention(q, k, v, lens,
+                                   done=jnp.asarray([False, True, False]),
+                                   mode="interpret")
+    assert (np.asarray(od[1], np.float32) == 0).all()
+
+
+@pytest.mark.parametrize("positions", [[3, 9, 0], [15, 40, 101]])
+def test_ring_decode_attention(positions):
+    """Ring kernel vs oracle vs the model's jnp ``ring_slot_attend``:
+    pre-wrap, exactly-at-ring, and far-beyond-wrap positions; done rows
+    exact-zero."""
+    from repro.models.attention import ring_slot_attend
+
+    keys = jax.random.split(jax.random.PRNGKey(12), 3)
+    b, h, kv, ring, hd, window = 3, 4, 2, 16, 32, 10
+    q = jax.random.normal(keys[0], (b, h, hd))
+    k = jax.random.normal(keys[1], (b, ring, kv, hd))
+    v = jax.random.normal(keys[2], (b, ring, kv, hd))
+    pos = jnp.asarray(positions, jnp.int32)
+    o = ops.ring_decode_attention(q, k, v, pos, window=window,
+                                  mode="interpret")
+    orf = ref.ring_decode_attention_ref(q, k, v, pos, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-4,
+                               atol=2e-4)
+    om = ring_slot_attend(q[:, None], k, v, pos, window=window)[:, 0]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(om), rtol=2e-4,
+                               atol=2e-4)
+    done = jnp.asarray([True, False, True])
+    od = ops.ring_decode_attention(q, k, v, pos, window=window, done=done,
+                                   mode="interpret")
+    assert (np.asarray(od[0]) == 0).all() and (np.asarray(od[2]) == 0).all()
+    np.testing.assert_allclose(np.asarray(od[1]), np.asarray(o[1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("ring,window", [(False, None), (True, 10),
+                                         (False, 10)])
+def test_chunk_verify_attention(ring, window):
+    """Chunk-verify kernel vs oracle vs the model's jnp
+    ``chunk_verify_attend`` for full-prefix and ring-buffer caches; done
+    rows exact-zero and the cache operands are read-only by contract."""
+    from repro.models.attention import chunk_verify_attend
+
+    keys = jax.random.split(jax.random.PRNGKey(13), 6)
+    b, h, kv, sc, hd, s = 3, 4, 2, 24, 32, 3
+    q = jax.random.normal(keys[0], (b, s, h, hd))
+    ck = jax.random.normal(keys[1], (b, sc, kv, hd))
+    cv = jax.random.normal(keys[2], (b, sc, kv, hd))
+    k = jax.random.normal(keys[3], (b, s, kv, hd))
+    v = jax.random.normal(keys[4], (b, s, kv, hd))
+    off = jnp.asarray([1, 7, 20], jnp.int32)
+    o = ops.chunk_verify_attention(q, ck, cv, k, v, off, ring=ring,
+                                   window=window, mode="interpret")
+    orf = ref.chunk_verify_attention_ref(q, ck, cv, k, v, off, ring=ring,
+                                         window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-4,
+                               atol=2e-4)
+    om = chunk_verify_attend(q, ck, cv, k, v, off, ring=ring, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(om), rtol=2e-4,
+                               atol=2e-4)
+    done = jnp.asarray([False, True, False])
+    od = ops.chunk_verify_attention(q, ck, cv, k, v, off, ring=ring,
+                                    window=window, done=done,
+                                    mode="interpret")
+    assert (np.asarray(od[1]) == 0).all()
+    np.testing.assert_allclose(np.asarray(od[0]), np.asarray(o[0]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pad_cache_len_always_blockable():
+    """The TPU-layout pool contract: a padded cache length always has a
+    kernel block — including the prime/odd > 256 failure class that used
+    to raise in ``_pick_bk``."""
+    from repro.kernels.decode_attention import _pick_bk
+    from repro.models.common import pad_cache_len
+    for n in [1, 5, 8, 29, 47, 48, 127, 256, 257, 263, 514, 1021, 4111]:
+        p = pad_cache_len(n)
+        assert p >= n
+        bk = _pick_bk(p)  # must not raise
+        assert p % bk == 0
+        if p > 256:
+            assert bk >= 32
+    # unpadded prime > 256 still refuses loudly (callers must pad)
+    with pytest.raises(ValueError, match="no block divisor"):
+        _pick_bk(257)
+
+
 @pytest.mark.parametrize("b,s,w", [_p(2, 256, 256),
                                    _p(1, 128, 512, slow=True)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

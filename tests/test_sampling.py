@@ -109,7 +109,9 @@ def test_sampled_engine_matches_sequential_reference(qwen_smoke_cfg,
     mixed oversubscribed trace through recycled slots."""
     cfg, params = qwen_smoke_cfg, qwen_smoke_params
     sp = SamplingParams(temperature=0.8, top_k=12, top_p=0.9, seed=5)
-    specs = [(3, 7), (9, 3), (5, 8), (12, 4), (4, 6)]
+    # three requests through two slots: still oversubscribed (recycling)
+    # but ~2/5 less per-request replay time than the old 5-request trace
+    specs = [(3, 7), (9, 3), (5, 8)]
     reqs = _mixed_requests(cfg, specs)
     engine = ContinuousBatchingEngine(cfg, params, capacity=2,
                                       max_len=MAX_LEN, prefill_bucket=4,
@@ -200,11 +202,14 @@ def test_spec_rejection_sampling_self_draft(qwen_smoke_cfg,
                for r in reqs)
 
 
+@pytest.mark.slow
 def test_spec_rejection_sampling_perturbed_draft(qwen_smoke_cfg,
                                                  qwen_smoke_params):
     """A nearby-but-different draft: rejection sampling must stay inside
     the filtered support of the TARGET distribution and accept only part
-    of the proposals."""
+    of the proposals.  (slow tier: the self-draft test covers the
+    rejection-sampling mechanics in the default run — this adds the
+    partial-acceptance support check at ~30 s of replay compiles.)"""
     cfg, params = qwen_smoke_cfg, qwen_smoke_params
     keys = jax.random.split(jax.random.PRNGKey(3),
                             len(jax.tree.leaves(params)))

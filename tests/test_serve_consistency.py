@@ -12,7 +12,10 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.models import get_family
 
-B, S = 2, 24
+# 8 unjitted decode steps after the prefill: each eager step costs real
+# dispatch time, and 8 steps already cross every cache-write boundary the
+# 16-step sweep did (tier-1 time audit)
+B, S = 2, 16
 PROMPT = 8
 
 

@@ -190,6 +190,34 @@ def test_eos_early_exit_frees_slot(qwen_smoke_cfg, qwen_smoke_params):
     np.testing.assert_array_equal(got[1], base[1])
 
 
+def test_generate_eos_early_stop(gpt_micro_cfg):
+    """Regression: the naive ``generate()`` loop used to ignore eos and
+    always decode ``max_new_tokens``.  With ``eos_id`` it must stop as
+    soon as every row fired (shorter output), freeze finished rows to
+    eos, and leave the no-eos call byte-identical to before."""
+    from repro.models import get_family
+    cfg = gpt_micro_cfg
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray(lm_batch(cfg.vocab_size, 1, 6, seed=3))
+    base = np.asarray(generate(cfg, params, prompt, max_new_tokens=12))
+    assert base.shape == (1, 12)  # eos_id=None: full budget, unchanged
+    eos = int(base[0][2])
+    stop = int(np.argmax(base[0] == eos)) + 1
+    got = np.asarray(generate(cfg, params, prompt, max_new_tokens=12,
+                              eos_id=eos))
+    assert got.shape[1] == stop < 12  # early exit, not a full budget
+    np.testing.assert_array_equal(got[0], base[0][:stop])
+    # mixed batch: the finished row freezes to eos while the other runs
+    prompts = jnp.asarray(lm_batch(cfg.vocab_size, 2, 6, seed=3))
+    base2 = np.asarray(generate(cfg, params, prompts, max_new_tokens=12))
+    eos = int(base2[0][2])
+    got2 = np.asarray(generate(cfg, params, prompts, max_new_tokens=12,
+                               eos_id=eos))
+    i0 = int(np.argmax(base2[0] == eos))
+    np.testing.assert_array_equal(got2[0][:i0 + 1], base2[0][:i0 + 1])
+    assert (got2[0][i0:] == eos).all()
+
+
 @pytest.mark.parametrize("k", [4, 16])
 def test_eos_mid_block(k, gpt_micro_cfg):
     """An eos firing strictly inside a macro block must truncate exactly

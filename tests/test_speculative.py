@@ -112,7 +112,8 @@ def test_spec_self_draft_accepts_everything(qwen_smoke_cfg,
     assert engine.acceptance_rate == 1.0
 
 
-@pytest.mark.parametrize("d", [2, 4])
+@pytest.mark.parametrize(
+    "d", [pytest.param(2, marks=pytest.mark.slow), 4])
 def test_spec_exact_griffin(d):
     """Recurrent target + recurrent draft (griffin-micro): partial
     acceptance must roll rglru state, conv tails, AND the local-attention
