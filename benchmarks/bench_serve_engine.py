@@ -36,12 +36,18 @@ task, the target (gpt-micro-big) is grown from it with a Mango operator
 trained for a few steps (Eq. 7), and the source then drafts for its
 grown target.  Entries record ``acceptance_rate`` plus the draft/target
 config names next to tok/s, so the perf trajectory ties speedup to
-draft quality.  Partial runs (``--family``, ``--speculate``) MERGE into
-``BENCH_serve_engine.json`` — they never clobber the other sections'
-trajectory entries.
+draft quality.  A ``--pool`` sweep benches the dense slot pool against
+the paged pool (``pool="paged"``) on a mixed trace and a shared-prefix
+trace, recording pages-in-use high-water, prefix-cache hit rate, and
+pages-per-request next to tok/s — the dense-vs-paged pair per trace is
+the direct measure of the paged pool's reservation and re-prefill
+savings.  Partial runs (``--family``, ``--speculate``, ``--pool``) MERGE
+into ``BENCH_serve_engine.json`` — they never clobber the other
+sections' trajectory entries.
 
 Run:  PYTHONPATH=src:. python benchmarks/bench_serve_engine.py [--quick]
           [--family transformer|griffin|xlstm|all|none] [--speculate]
+          [--pool]
 """
 from __future__ import annotations
 
@@ -91,6 +97,25 @@ def poisson_trace(cfg, n, *, rate_hz, seed=0, max_prompt=24, max_gen=16):
     return reqs
 
 
+def prefix_trace(cfg, n, *, rate_hz, seed=0, prefix_len=18, max_gen=12):
+    """n requests that all share one ``prefix_len``-token prompt prefix
+    (distinct short tails), arriving at ``rate_hz``.  Against the paged
+    pool's copy-on-write prefix cache, every request after the first
+    admission wave hits resident pages and skips its prefix prefill."""
+    rng = np.random.default_rng(seed)
+    prefix = lm_batch(cfg.vocab_size, 1, prefix_len, seed=701)[0]
+    t = 0.0
+    reqs = []
+    for uid in range(n):
+        t += float(rng.exponential(1.0 / rate_hz))
+        tail = lm_batch(cfg.vocab_size, 1, 2 + uid % 3, seed=900 + uid)[0]
+        gen = int(rng.integers(2, max_gen + 1))
+        reqs.append(Request(uid=uid,
+                            prompt=np.concatenate([prefix, tail]),
+                            max_new_tokens=gen, arrival=t))
+    return reqs
+
+
 def _pctl(lat):
     return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
 
@@ -107,22 +132,40 @@ def warm_naive(cfg, params, reqs, batch):
 
 
 def warm_engine(cfg, params, reqs, *, capacity, max_len, k,
-                speculative=None):
+                speculative=None, pool="dense"):
     """Compile every shape a (cfg, k) engine can hit on this trace: the
     macro (or speculative) loop, and each (pow2 admission-group size,
-    prefill bucket) prefill/scatter pair."""
+    prefill bucket) prefill/scatter pair.  With ``pool='paged'`` the
+    uniform warm prompts also hit the prefix cache after the first wave,
+    compiling the hit-admission scan."""
     warm = ContinuousBatchingEngine(cfg, params, capacity=capacity,
                                     max_len=max_len, k=k,
-                                    speculative=speculative)
+                                    speculative=speculative, pool=pool)
     buckets = sorted({warm._bucketed(len(r.prompt)) for r in reqs})
     uid = -1
     n = 1
     while n <= capacity:
         for b in buckets:
-            warm.run([Request(uid=uid - i, prompt=np.ones(b, np.int32),
-                              max_new_tokens=2) for i in range(n)])
+            # distinct prompt CONTENT per request: identical prompts
+            # would hit the paged prefix cache after the first wave and
+            # skip the miss-path prefill this loop exists to compile
+            warm.run([Request(
+                uid=uid - i,
+                prompt=np.full(b, (i - uid) % (cfg.vocab_size - 1) + 1,
+                               np.int32),
+                max_new_tokens=2) for i in range(n)])
             uid -= n
         n *= 2
+    if getattr(warm, "pool_kind", "dense") == "paged":
+        # now the opposite: IDENTICAL prompts, so waves past the first
+        # hit resident prefix pages and compile the hit-admission scan
+        shared = np.zeros(max(buckets), np.int32)
+        n = 1
+        while n <= capacity:
+            warm.run([Request(uid=uid - i, prompt=shared,
+                              max_new_tokens=2) for i in range(n)])
+            uid -= n
+            n *= 2
     return warm
 
 
@@ -153,10 +196,10 @@ def bench_naive(cfg, params, reqs, batch):
 
 
 def bench_engine(cfg, params, reqs, *, capacity, max_len, k, pipeline,
-                 speculative=None):
+                 speculative=None, pool="dense"):
     engine = ContinuousBatchingEngine(cfg, params, capacity=capacity,
                                       max_len=max_len, k=k,
-                                      speculative=speculative)
+                                      speculative=speculative, pool=pool)
     t0 = time.monotonic()
     engine.run(reqs, realtime=True, pipeline=pipeline)
     dt = time.monotonic() - t0
@@ -176,6 +219,17 @@ def bench_engine(cfg, params, reqs, *, capacity, max_len, k, pipeline,
         out["acceptance_rate"] = engine.acceptance_rate
         out["d"] = speculative.d
         out["draft"] = speculative.cfg.name
+    out["pool"] = engine.pool_kind
+    if engine.pool_kind == "paged":
+        meta = engine._metas[0]
+        out["pages_highwater"] = engine.pages_highwater
+        out["prefix_hit_rate"] = engine.prefix_hit_rate
+        out["pages_per_request"] = (engine.n_pages_allocated
+                                    / max(len(reqs), 1))
+        # what one slot reserves under the dense pool, in page units —
+        # the over-reservation the paged pool avoids
+        out["dense_reservation_pages"] = meta.nblk
+        out["rejected"] = len(engine.rejected)
     return out
 
 
@@ -336,11 +390,57 @@ def _bench_kernel_modes(quick: bool):
     return results
 
 
+def _bench_pool_modes(quick: bool):
+    """Dense vs paged slot pool, side by side, on two traces:
+
+      * mixed  — the usual Poisson trace of unrelated prompts: measures
+        the paged indirection overhead and pages-per-request vs the dense
+        pool's full per-slot reservation;
+      * prefix — every request shares one prompt prefix: measures the
+        copy-on-write prefix cache (hit rate, fewer prefill batches,
+        fewer fresh pages per request).
+
+    Same trace, same K, only ``pool=`` differs per pair — the paged
+    engine is token-exact vs dense (tested in test_paged_pool.py), so the
+    pairs compare cost, not quality.
+    """
+    cfg = get_config(FAMILY_ARCHS["transformer"])
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    n = 8 if quick else 24
+    capacity, max_len, k = 4, 48, 8
+    traces = {
+        "mixed": poisson_trace(cfg, n, rate_hz=2000.0,
+                               max_gen=8 if quick else 16),
+        "prefix": prefix_trace(cfg, n, rate_hz=2000.0,
+                               max_gen=8 if quick else 12),
+    }
+
+    results = {}
+    layout = slot_cache_layout(cfg)
+    for tag, reqs in traces.items():
+        def fresh():
+            return [Request(uid=r.uid, prompt=r.prompt,
+                            max_new_tokens=r.max_new_tokens,
+                            arrival=r.arrival) for r in reqs]
+
+        for pool in ("dense", "paged"):
+            warm_engine(cfg, params, reqs, capacity=capacity,
+                        max_len=max_len, k=k, pool=pool)
+            m = bench_engine(cfg, params, fresh(), capacity=capacity,
+                             max_len=max_len, k=k, pipeline=True, pool=pool)
+            m["family"] = cfg.family
+            m["cache_layout"] = layout
+            results[f"pool_{pool}_{tag}_k{k}"] = m
+    return results
+
+
 def run(quick: bool = False, write_json: bool = True, families=None,
-        speculate: bool = False, kernel: bool = False):
+        speculate: bool = False, kernel: bool = False, pool: bool = False):
     families = tuple(FAMILY_ARCHS) if families is None else tuple(families)
     results = {}
-    partial = set(families) != set(FAMILY_ARCHS) or speculate or kernel
+    partial = set(families) != set(FAMILY_ARCHS) or speculate or kernel \
+        or pool
     if write_json and partial:
         # a partial run (--family subset, --speculate) must MERGE into
         # BENCH_serve_engine.json, never erase the other sections'
@@ -362,6 +462,12 @@ def run(quick: bool = False, write_json: bool = True, families=None,
         for key in [k for k in results if k.startswith("kernel_")]:
             del results[key]
         results.update(_bench_kernel_modes(quick))
+    if pool:
+        # like the kernel section: the dense-vs-paged pairs always
+        # reflect THIS sweep — purge merged-in pool_* keys first
+        for key in [k for k in results if k.startswith("pool_")]:
+            del results[key]
+        results.update(_bench_pool_modes(quick))
 
     for name, m in results.items():
         print(f"serve_{name},tok_per_s,{m['tok_per_s']:.1f}")
@@ -372,6 +478,12 @@ def run(quick: bool = False, write_json: bool = True, families=None,
                   f"{m['host_syncs_per_token']:.3f}")
         if "acceptance_rate" in m:
             print(f"serve_{name},acceptance_rate,{m['acceptance_rate']:.3f}")
+        if m.get("pool") == "paged":
+            print(f"serve_{name},pages_highwater,{m['pages_highwater']}")
+            print(f"serve_{name},prefix_hit_rate,"
+                  f"{m['prefix_hit_rate']:.3f}")
+            print(f"serve_{name},pages_per_request,"
+                  f"{m['pages_per_request']:.2f}")
     if write_json:
         path = write_bench_json("serve_engine", results)
         print(f"# wrote {path}")
@@ -392,8 +504,12 @@ if __name__ == "__main__":
     ap.add_argument("--kernel", action="store_true",
                     help="also bench kernel-vs-jnp slot decode side by "
                          "side (Pallas interpreter off-TPU — small trace)")
+    ap.add_argument("--pool", action="store_true",
+                    help="also bench dense-vs-paged slot pool pairs on a "
+                         "mixed and a shared-prefix trace (pages "
+                         "high-water, prefix hit rate recorded)")
     a = ap.parse_args()
     fams = {"all": tuple(FAMILY_ARCHS), "none": ()}.get(
         a.family, (a.family,))
     run(quick=a.quick, write_json=not a.no_json, families=fams,
-        speculate=a.speculate, kernel=a.kernel)
+        speculate=a.speculate, kernel=a.kernel, pool=a.pool)

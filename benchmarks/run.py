@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig6,fig7,transfer,roofline,"
-                         "kernels,serve,spec,servek")
+                         "kernels,serve,spec,servek,servep")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -45,6 +45,10 @@ def main() -> None:
         # kernel-vs-jnp slot decode only (merges into the serve JSON)
         from benchmarks.bench_serve_engine import run as sv_kern
         sv_kern(quick=args.quick, families=(), kernel=True)
+    if section("servep"):
+        # dense-vs-paged slot pool pairs only (merges into the serve JSON)
+        from benchmarks.bench_serve_engine import run as sv_pool
+        sv_pool(quick=args.quick, families=(), pool=True)
     if section("fig6"):
         from benchmarks.bench_fig6_rank_ablation import run as f6
         f6(quick=args.quick)

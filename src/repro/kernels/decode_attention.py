@@ -320,6 +320,184 @@ def _scalar_rows(x, B):
     return jnp.broadcast_to(jnp.asarray(x, jnp.int32).reshape(-1), (B,))
 
 
+# ====================================================== paged-pool kernels
+# The paged pool stores KV as a shared page arena (n_pages, page, KV, hd)
+# plus per-row block tables (B, nblk).  The page INDIRECTION lives entirely
+# in the BlockSpec index_map — logical cache block ``j`` of row ``b``
+# fetches physical page ``bt[b, j]`` via scalar prefetch — so the kernel
+# bodies delegate verbatim to the dense pool-layout bodies above: position
+# arithmetic is over LOGICAL blocks and is unchanged.  Sentinel table
+# entries (never-allocated blocks, value n_pages) are clamped to the last
+# page; the fetched garbage is dropped by the same kv_len/ring/band masks
+# that hide the dense pool's unwritten tail.
+
+def _paged_slot_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+                       l_ref, acc_ref, *, bk, scale):
+    del bt_ref  # consumed by the index_map only
+    _slot_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                 acc_ref, bk=bk, scale=scale)
+
+
+def _paged_ring_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+                       l_ref, acc_ref, *, bk, ring, window, scale):
+    del bt_ref
+    _ring_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                 acc_ref, bk=bk, ring=ring, window=window, scale=scale)
+
+
+def _paged_chunk_kernel(off_ref, bt_ref, q_ref, ck_ref, cv_ref, kc_ref,
+                        vc_ref, o_ref, m_ref, l_ref, acc_ref, **kw):
+    del bt_ref
+    _chunk_kernel(off_ref, q_ref, ck_ref, cv_ref, kc_ref, vc_ref, o_ref,
+                  m_ref, l_ref, acc_ref, **kw)
+
+
+def _page_index_map(n_pages, nblk):
+    """Cache-operand index_map: logical block j -> physical page bt[b, j]
+    (clamped sentinel), block offset 0 on the page axis."""
+    def index_map(b, h, j, scal_ref, bt_ref):
+        del scal_ref
+        jj = jnp.minimum(j, nblk - 1)  # chunk grid overruns clamp (no-op
+        return (jnp.minimum(bt_ref[b, jj], n_pages - 1), 0, h, 0)  # else)
+    return index_map
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_slot_decode_attention(q, k, v, bt, kv_len, *, interpret=False):
+    """``slot_decode_attention`` over a page arena.
+
+    q: (B, H, hd); k, v: (n_pages, page, KV, hd) shared arenas; bt:
+    (B, nblk) int32 block tables (page ids; n_pages = OOB sentinel);
+    kv_len: (B,) valid lengths.  The block size is pinned to the page —
+    pages are only contiguous within themselves.  Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    n_pages, page, KV = k.shape[0], k.shape[1], k.shape[2]
+    nblk = bt.shape[1]
+    g = H // KV
+    qg = q.reshape(B, KV, g, hd)
+    kv_len = _scalar_rows(kv_len, B)
+    pmap = _page_index_map(n_pages, nblk)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_slot_kernel, bk=page, scale=hd ** -0.5),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, nblk),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, page, 1, hd), pmap),
+                pl.BlockSpec((1, page, 1, hd), pmap),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda b, h, j, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, hd), q.dtype),
+        interpret=interpret,
+    )(kv_len, bt.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_ring_decode_attention(q, k, v, bt, slot_positions, *, window,
+                                interpret=False):
+    """``ring_decode_attention`` over a page arena.
+
+    The ring modulus is the LOGICAL length ``nblk * page``; ring slot
+    ``s`` of row ``b`` lives at ``arena[bt[b, s // page], s % page]``.
+    slot_positions: (B,) query positions, -1 for done rows.
+    """
+    B, H, hd = q.shape
+    n_pages, page, KV = k.shape[0], k.shape[1], k.shape[2]
+    nblk = bt.shape[1]
+    ring = nblk * page
+    g = H // KV
+    qg = q.reshape(B, KV, g, hd)
+    slot_positions = _scalar_rows(slot_positions, B)
+    pmap = _page_index_map(n_pages, nblk)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_ring_kernel, bk=page, ring=ring,
+                          window=window, scale=hd ** -0.5),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, nblk),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, page, 1, hd), pmap),
+                pl.BlockSpec((1, page, 1, hd), pmap),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda b, h, j, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, hd), q.dtype),
+        interpret=interpret,
+    )(slot_positions, bt.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ring", "window", "interpret"))
+def paged_chunk_verify_attention(q, ck, cv, bt, k, v, offsets, *, ring,
+                                 window=None, interpret=False):
+    """``chunk_verify_attention`` over a page arena (cache read-only).
+
+    ck, cv: (n_pages, page, KV, hd) arenas; bt: (B, nblk); the logical
+    cache length is ``nblk * page``.  Grid axis 2 runs the nblk cache
+    blocks then one chunk step — the cache index_map clamps the chunk
+    step's overrun to the last logical block before resolving the page.
+    """
+    B, S, H, hd = q.shape
+    n_pages, page, KV = ck.shape[0], ck.shape[1], ck.shape[2]
+    nblk = bt.shape[1]
+    g = H // KV
+    qg = q.reshape(B, S, KV, g, hd)
+    offsets = _scalar_rows(offsets, B)
+
+    def cmap(b, h, j, scal_ref, bt_ref):
+        del scal_ref
+        jj = jnp.minimum(j, nblk - 1)
+        return (jnp.minimum(bt_ref[b, jj], n_pages - 1), 0, h, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_chunk_kernel, bk=page, nk=nblk, s_chunk=S,
+                          cache_len=nblk * page, ring=ring, window=window,
+                          scale=hd ** -0.5),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, nblk + 1),
+            in_specs=[
+                pl.BlockSpec((1, S, 1, g, hd),
+                             lambda b, h, j, *_: (b, 0, h, 0, 0)),
+                pl.BlockSpec((1, page, 1, hd), cmap),
+                pl.BlockSpec((1, page, 1, hd), cmap),
+                pl.BlockSpec((1, S, 1, hd), lambda b, h, j, *_: (b, 0, h, 0)),
+                pl.BlockSpec((1, S, 1, hd), lambda b, h, j, *_: (b, 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, S, 1, g, hd),
+                                   lambda b, h, j, *_: (b, 0, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((S, g, 1), jnp.float32),
+                pltpu.VMEM((S, g, 1), jnp.float32),
+                pltpu.VMEM((S, g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S, KV, g, hd), q.dtype),
+        interpret=interpret,
+    )(offsets, bt.astype(jnp.int32), qg, ck, cv, k, v)
+    return out.reshape(B, S, H, hd)
+
+
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
 def slot_decode_attention(q, k, v, kv_len, *, bk=None, interpret=False):
     """Full-KV slot decode in POOL layout.

@@ -18,6 +18,9 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import (
     chunk_verify_attention as _chunk_verify,
     decode_attention as _decode,
+    paged_chunk_verify_attention as _paged_chunk_verify,
+    paged_ring_decode_attention as _paged_ring_decode,
+    paged_slot_decode_attention as _paged_slot_decode,
     ring_decode_attention as _ring_decode,
     slot_decode_attention as _slot_decode,
 )
@@ -97,6 +100,52 @@ def chunk_verify_attention(q, ck, cv, k, v, offsets, *, ring, window=None,
                                               ring=ring, window=window)
     return _chunk_verify(q, ck, cv, k, v, offsets, ring=ring, window=window,
                          interpret=_interp(mode), **kw)
+
+
+def paged_slot_decode_attention(q, k, v, bt, kv_len, *, mode="auto",
+                                done=None, **kw):
+    """Full-KV slot decode over a PAGED pool: (n_pages, page, KV, hd)
+    arenas + (B, nblk) block tables.  ``done`` rows fold into
+    ``kv_len = 0`` exactly as in the dense entry."""
+    kv_len = jnp.broadcast_to(
+        jnp.asarray(kv_len, jnp.int32).reshape(-1), (q.shape[0],))
+    if done is not None:
+        kv_len = jnp.where(done, 0, kv_len)
+    if mode == "reference":
+        return ref.paged_slot_decode_attention_ref(q, k, v, bt, kv_len)
+    return _paged_slot_decode(q, k, v, bt, kv_len, interpret=_interp(mode),
+                              **kw)
+
+
+def paged_ring_decode_attention(q, k, v, bt, slot_positions, *, window,
+                                mode="auto", done=None, **kw):
+    """Ring-buffer window slot decode over a PAGED pool.  ``done`` rows
+    fold into ``slot_positions = -1``."""
+    slot_positions = jnp.broadcast_to(
+        jnp.asarray(slot_positions, jnp.int32).reshape(-1), (q.shape[0],))
+    if done is not None:
+        slot_positions = jnp.where(done, -1, slot_positions)
+    if mode == "reference":
+        return ref.paged_ring_decode_attention_ref(q, k, v, bt,
+                                                   slot_positions,
+                                                   window=window)
+    return _paged_ring_decode(q, k, v, bt, slot_positions, window=window,
+                              interpret=_interp(mode), **kw)
+
+
+def paged_chunk_verify_attention(q, ck, cv, bt, k, v, offsets, *, ring,
+                                 window=None, mode="auto", done=None, **kw):
+    """Speculative chunk-verify over a PAGED pool (cache read-only).
+    ``done`` rows fold into ``offsets = -1``."""
+    offsets = jnp.broadcast_to(
+        jnp.asarray(offsets, jnp.int32).reshape(-1), (q.shape[0],))
+    if done is not None:
+        offsets = jnp.where(done, -1, offsets)
+    if mode == "reference":
+        return ref.paged_chunk_verify_attention_ref(
+            q, ck, cv, bt, k, v, offsets, ring=ring, window=window)
+    return _paged_chunk_verify(q, ck, cv, bt, k, v, offsets, ring=ring,
+                               window=window, interpret=_interp(mode), **kw)
 
 
 def rglru_scan(a, b, h0=None, *, mode="auto", **kw):

@@ -130,6 +130,36 @@ def chunk_verify_attention_ref(q, ck, cv, k, v, offsets, *, ring,
     return out.reshape(B, S, H, hd).astype(q.dtype)
 
 
+def _paged_gather_ref(arena, bt):
+    """(n_pages, page, ...) arena + (B, nblk) block table -> the dense
+    pool layout (B, nblk * page, ...).  Sentinel entries clamp to the
+    last page; the garbage bytes sit at positions every paged oracle
+    masks away (an independent twin of ``models.attention.paged_gather``
+    — deliberately re-derived, same as ``_ring_kpos``)."""
+    n_pages = arena.shape[0]
+    g = arena[jnp.minimum(jnp.asarray(bt, jnp.int32), n_pages - 1)]
+    return g.reshape((bt.shape[0], -1) + arena.shape[2:])
+
+
+def paged_slot_decode_attention_ref(q, k, v, bt, kv_len):
+    """Paged oracle: materialize the dense view, defer to the dense ref."""
+    return slot_decode_attention_ref(
+        q, _paged_gather_ref(k, bt), _paged_gather_ref(v, bt), kv_len)
+
+
+def paged_ring_decode_attention_ref(q, k, v, bt, slot_positions, *, window):
+    return ring_decode_attention_ref(
+        q, _paged_gather_ref(k, bt), _paged_gather_ref(v, bt),
+        slot_positions, window=window)
+
+
+def paged_chunk_verify_attention_ref(q, ck, cv, bt, k, v, offsets, *, ring,
+                                     window=None):
+    return chunk_verify_attention_ref(
+        q, _paged_gather_ref(ck, bt), _paged_gather_ref(cv, bt), k, v,
+        offsets, ring=ring, window=window)
+
+
 def rglru_scan_ref(a, b, h0=None):
     """Linear recurrence h_t = a_t * h_{t-1} + b_t.
 

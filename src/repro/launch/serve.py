@@ -217,6 +217,15 @@ def main():
                          "TPU, interpreter elsewhere), interpret (Pallas "
                          "CPU interpreter), reference (kernels/ref.py "
                          "oracles)")
+    ap.add_argument("--pool", default="dense", choices=["dense", "paged"],
+                    help="continuous: slot-pool layout — dense (one full "
+                         "max_len row per slot) or paged (block tables "
+                         "over a shared page arena + copy-on-write prefix "
+                         "cache; families without a pageable KV group "
+                         "fall back to dense)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="paged: page-arena depth (0 = capacity * blocks "
+                         "per slot, i.e. the dense pool's footprint)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).replace(decode_kernel=args.kernel)
@@ -247,6 +256,9 @@ def main():
         # the slot-decode protocol, so a kernel mode would not run
         raise SystemExit("error: --kernel requires --engine continuous "
                          "(the Pallas kernels back the slot-decode path)")
+    if args.engine == "naive" and (args.pool != "dense" or args.pages):
+        raise SystemExit("error: --pool/--pages require --engine "
+                         "continuous (the naive loop has no slot pool)")
     speculative = None
     max_len = args.max_len or (args.prompt_len + args.gen)
     if args.speculate:
@@ -301,8 +313,13 @@ def main():
 
     engine = ContinuousBatchingEngine(cfg, params, capacity=args.capacity,
                                       max_len=max_len, k=args.k,
-                                      policy=args.policy, sampling=sampling,
+                                      policy=args.policy, pool=args.pool,
+                                      pages=args.pages or None,
+                                      sampling=sampling,
                                       speculative=speculative)
+    if args.pool == "paged" and engine.pool_kind == "dense":
+        print(f"[serve] --pool paged: {cfg.family}/{engine.cache_layout} "
+              "has no pageable KV group — serving dense")
     rng = np.random.default_rng(0)
     reqs = []
     for uid in range(args.batch):
@@ -319,13 +336,23 @@ def main():
     spec_note = "" if speculative is None else (
         f", draft={speculative.cfg.name} d={speculative.d} "
         f"acceptance={engine.acceptance_rate:.2f}")
-    print(f"[{mode}] {cfg.family}/{engine.cache_layout} served "
+    paged_note = "" if engine.pool_kind != "paged" else (
+        f", {engine.pages_highwater} pages peak"
+        f" ({engine._metas[0].page} tok/page)"
+        f", prefix hit rate {engine.prefix_hit_rate:.2f}")
+    print(f"[{mode}] {cfg.family}/{engine.cache_layout} "
+          f"({engine.pool_kind} pool) served "
           f"{len(reqs)} requests / {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, "
           f"{engine.n_decode_dispatches} macro-steps of K={args.k}, "
           f"{engine.n_prefills} prefill batches, "
           f"{engine.n_host_syncs / max(n_tok, 1):.2f} host syncs/token"
-          f"{spec_note})")
+          f"{spec_note}{paged_note})")
+    if engine.rejected:
+        # rejections are recorded, not raised — surface them in the report
+        print(f"[{mode}] rejected {len(engine.rejected)} request(s):")
+        for uid, why in sorted(engine.rejected.items()):
+            print(f"  uid {uid}: {why}")
     for uid in sorted(out)[:2]:
         print(uid, out[uid])
 

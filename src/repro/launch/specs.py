@@ -63,6 +63,25 @@ def slot_pool_specs(cfg: ModelConfig, capacity: int, max_len: int):
     return cache_specs_abstract(cfg, capacity, max_len)
 
 
+def paged_slot_pool_specs(cfg: ModelConfig, capacity: int, max_len: int,
+                          pages: int | None = None):
+    """Abstract PAGED slot pool (``--pool paged``): sequence-indexed cache
+    groups are re-laid as shared page arenas ``(L, n_pages, page, KV, hd)``
+    plus per-slot block tables ``(L, capacity, nblk)``; groups with no
+    pageable seq axis (recurrent state, MLA latents) stay dense.  Returns
+    None when no group is pageable — the engine serves dense in that case."""
+    from repro.serve import paged as paged_lib
+
+    fam = get_family(cfg)
+    meta = paged_lib.pool_meta(cache_specs_abstract(cfg, capacity, max_len),
+                               pages)
+    if meta is None:
+        return None
+    return jax.eval_shape(
+        lambda: paged_lib.build_paged_pool(fam, cfg, capacity, max_len,
+                                           pages)[0])
+
+
 def slot_decode_specs(cfg: ModelConfig, capacity: int, max_len: int):
     """Abstract inputs of one slot-decode macro-step dispatch
     (``make_slot_decode_loop`` / ``make_speculative_loop``): the engine's

@@ -296,6 +296,64 @@ def ring_slot_update_attend(q, cache, k, v, slot_positions, *, window,
     return out, new_cache
 
 
+def paged_gather(arena, bt):
+    """Materialize a slot's dense cache view from a page arena.
+
+    arena: (n_pages, page, ...) shared pages; bt: (B, nblk) int32 block
+    table (page ids; ``n_pages`` is the OOB sentinel for never-allocated
+    blocks).  Sentinels are CLAMPED to the last page — the garbage rows
+    that produces are finite bytes at positions every caller masks away
+    (per-row ``kv_len``, ring validity, or the verify band), so their
+    softmax weight underflows to exactly 0.0.  Returns (B, nblk * page,
+    ...) in the dense pool layout.
+    """
+    n_pages = arena.shape[0]
+    g = arena[jnp.minimum(bt, n_pages - 1)]  # (B, nblk, page, ...)
+    return g.reshape((bt.shape[0], -1) + arena.shape[2:])
+
+
+def paged_ring_slot_update_attend(q, cache, k, v, slot_positions, *,
+                                  window, done=None, scale=None,
+                                  kernel=None):
+    """``ring_slot_update_attend`` over a PAGED ring cache.
+
+    cache: {"k": (n_pages, page, KV, hd), "v": ..., "bt": (B, nblk)} —
+    the ring modulus is the logical length ``nblk * page`` and row ``b``'s
+    ring slot ``s`` lives at ``arena[bt[b, s // page], s % page]``.  The
+    write resolves its page through the block table; ``done`` rows (and
+    rows whose block was never allocated) redirect to the page sentinel,
+    where the scatter is dropped — the paged realization of the dense
+    path's freeze-is-a-no-op-restore.  The attend runs either on a
+    gathered dense view through the exactness-proven ``ring_slot_attend``
+    (jnp) or through the paged Pallas kernel (``kernel`` mode string).
+    """
+    bt = cache["bt"]
+    n_pages, page = cache["k"].shape[:2]
+    ring = bt.shape[1] * page
+    sidx = slot_positions % ring
+    pid = jnp.take_along_axis(bt, (sidx // page)[:, None], axis=1)[:, 0]
+    if done is not None:
+        pid = jnp.where(done, n_pages, pid)
+    off = sidx % page
+    ck = cache["k"].at[pid, off].set(k[:, 0].astype(cache["k"].dtype),
+                                     mode="drop")
+    cv = cache["v"].at[pid, off].set(v[:, 0].astype(cache["v"].dtype),
+                                     mode="drop")
+    new_cache = {"k": ck, "v": cv, "bt": bt}
+    if kernel is not None:
+        assert scale is None, "the ring kernel fixes scale at hd**-0.5"
+        from repro.kernels import ops
+        out = ops.paged_ring_decode_attention(
+            q[:, 0], ck, cv, bt, slot_positions, window=window, done=done,
+            mode=kernel)[:, None]
+        return out, new_cache
+    out = ring_slot_attend(q, paged_gather(ck, bt).astype(q.dtype),
+                           paged_gather(cv, bt).astype(q.dtype),
+                           slot_positions, window=window, scale=scale,
+                           done=done)
+    return out, new_cache
+
+
 def chunk_verify_kpos(offsets, cache_len, S, *, ring: bool):
     """Absolute key positions of [cache ‖ chunk] for the speculative
     verify: (B, cache_len + S) int32, -1 for unattendable cache entries.

@@ -258,8 +258,11 @@ def _attn_block(x, bp, cfg, positions, cache=None, q_offset=0,
         # length — write this step's K/V at the row's own ring slot and
         # attend by absolute position (the slot mirror of the S == 1
         # path); ``cfg.decode_kernel`` routes the attend through the
-        # Pallas ring kernel
-        out, nc = attn_lib.ring_slot_update_attend(
+        # Pallas ring kernel.  A paged pool routes the write through the
+        # row's block table instead of a private ring row.
+        update = (attn_lib.paged_ring_slot_update_attend
+                  if "bt" in cache else attn_lib.ring_slot_update_attend)
+        out, nc = update(
             q, cache, k, v, slot_positions, window=cfg.window,
             done=slot_done, kernel=tf._kernel_mode(cfg))
     elif cache is not None:

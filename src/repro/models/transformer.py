@@ -176,6 +176,62 @@ def _is_ring(cache_len, window):
     return window is not None and cache_len >= window
 
 
+def _cache_seq_len(cache):
+    """Logical sequence length of a slot cache group: the cache axis for
+    the dense layout, ``nblk * page`` through the block table for a paged
+    group (whose arrays no longer carry a per-slot sequence axis)."""
+    if "bt" in cache:
+        return cache["bt"].shape[1] * cache["k"].shape[1]
+    return cache["k"].shape[1]
+
+
+def _paged_slot_forward(q, p, cfg, cache, k, v, slot_positions, slot_done,
+                        window, cdt):
+    """Slot-decode step over a PAGED cache group.
+
+    cache: {"k"/"v": (n_pages, page, KV, hd), "bt": (B, nblk)}.  The
+    write position resolves through the block table (logical block
+    ``pos // page`` → physical page); ``done`` rows redirect to the page
+    sentinel so their write is dropped — the paged freeze (a done row's
+    table may be all-sentinel after eviction, so the dense path's
+    "re-store identical bytes" trick is not available).  Reads either
+    gather the arena back to the dense layout and reuse the
+    exactness-proven jnp paths, or hand the arena + table to the paged
+    Pallas kernels.
+    """
+    bt = cache["bt"]
+    n_pages, page = cache["k"].shape[:2]
+    S = bt.shape[1] * page
+    if _is_ring(S, window):
+        out, new_cache = attn_lib.paged_ring_slot_update_attend(
+            q, cache, k, v, slot_positions, window=window, done=slot_done,
+            kernel=_kernel_mode(cfg))
+        return _attn_out(out, p, cfg, cdt), new_cache
+    blk = slot_positions // page
+    pid = jnp.take_along_axis(bt, blk[:, None], axis=1)[:, 0]
+    if slot_done is not None:
+        pid = jnp.where(slot_done, n_pages, pid)
+    off = slot_positions % page
+    ck = cache["k"].at[pid, off].set(k[:, 0].astype(cache["k"].dtype),
+                                     mode="drop")
+    cv = cache["v"].at[pid, off].set(v[:, 0].astype(cache["v"].dtype),
+                                     mode="drop")
+    new_cache = {"k": ck, "v": cv, "bt": bt}
+    kvl = _slot_kv_len(slot_positions, slot_done)
+    kmode = _kernel_mode(cfg)
+    if kmode is not None:
+        from repro.kernels import ops
+        out = ops.paged_slot_decode_attention(
+            q[:, 0], ck, cv, bt, kvl, mode=kmode)[:, None]
+    else:
+        out = attn_lib.attention(
+            q, attn_lib.paged_gather(ck, bt).astype(cdt),
+            attn_lib.paged_gather(cv, bt).astype(cdt), causal=False,
+            kv_len=kvl, chunk_q=cfg.attn_chunk, unroll=cfg.unroll_scans,
+            logits_dtype=jnp.dtype(cfg.attn_logits_dtype))
+    return _attn_out(out, p, cfg, cdt), new_cache
+
+
 def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
                   kv_len=None, window=None, slot_positions=None,
                   slot_done=None, plens=None, chunk_offsets=None):
@@ -240,9 +296,26 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
     v = annotate(v, ("batch", "seq", "kv_heads", "head_dim"))
 
     if chunk_offsets is not None:
-        # speculative verify: attend [cache ‖ chunk] read-only
-        is_ring = _is_ring(cache["k"].shape[1], window)
+        # speculative verify: attend [cache ‖ chunk] read-only.  The
+        # pending entry never carries a block table — commit resolves
+        # pages through the live cache's own "bt".
+        is_ring = _is_ring(_cache_seq_len(cache), window)
         kmode = _kernel_mode(cfg)
+        if "bt" in cache:
+            if kmode is not None:
+                from repro.kernels import ops
+                out = ops.paged_chunk_verify_attention(
+                    q, cache["k"], cache["v"], cache["bt"], k, v,
+                    chunk_offsets, ring=is_ring, window=window,
+                    done=slot_done, mode=kmode)
+            else:
+                out = attn_lib.chunk_verify_attend(
+                    q, attn_lib.paged_gather(cache["k"], cache["bt"]),
+                    attn_lib.paged_gather(cache["v"], cache["bt"]),
+                    k, v, chunk_offsets, ring=is_ring, window=window,
+                    done=slot_done,
+                    logits_dtype=jnp.dtype(cfg.attn_logits_dtype))
+            return _attn_out(out, p, cfg, cdt), {"k": k, "v": v}
         if kmode is not None:
             from repro.kernels import ops
             out = ops.chunk_verify_attention(
@@ -257,6 +330,10 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
 
     new_cache = None
     if slot_positions is not None:
+        if "bt" in cache:
+            return _paged_slot_forward(q, p, cfg, cache, k, v,
+                                       slot_positions, slot_done, window,
+                                       cdt)
         if _is_ring(cache["k"].shape[1], window):
             # Ring-buffer window cache: each row writes its own slot
             # ``pos % ring`` and attends by ABSOLUTE position
@@ -881,7 +958,36 @@ def commit_slots(params, tokens, positions, n_feed, cache, pending, cfg,
         return jax.vmap(
             lambda c, ch: c.at[b_idx, idx].set(ch.astype(c.dtype)))(cl, pl)
 
-    return jax.tree.map(per_leaf, cache, pending)
+    def per_paged_group(cg, pg):
+        # cg: {"k"/"v": (L, n_pages, page, ...), "bt": (L, B, nblk)};
+        # pg: {"k"/"v": (L, B, S, ...)} — pending never carries a table.
+        # Chunk position ``pos`` resolves to page ``bt[b, (pos % ring) //
+        # page]`` (ring == the logical length, so the mod is the identity
+        # for full layouts); rejected positions — and rows whose block
+        # was never allocated — redirect to the page sentinel and drop.
+        n_pages, page = cg["k"].shape[1:3]
+        bt = cg["bt"][0]  # layers share one table
+        ring = bt.shape[1] * page
+        sidx = pos % ring
+        pid = jnp.take_along_axis(bt, sidx // page, axis=1)  # (B, S)
+        pid = jnp.where(committed, pid, n_pages)
+        off = sidx % page
+        out = {"bt": cg["bt"]}
+        for key in ("k", "v"):
+            out[key] = jax.vmap(
+                lambda c, ch: c.at[pid, off].set(ch.astype(c.dtype),
+                                                 mode="drop"))(
+                cg[key], pg[key])
+        return out
+
+    def walk(cg, pg):
+        if isinstance(cg, dict) and "bt" in cg:
+            return per_paged_group(cg, pg)
+        if isinstance(cg, dict):
+            return {key: walk(cg[key], pg[key]) for key in cg}
+        return per_leaf(cg, pg)
+
+    return walk(cache, pending)
 
 
 def serve_supported(cfg):

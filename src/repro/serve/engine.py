@@ -78,6 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import get_family, serve_supported, slot_cache_layout
+from repro.serve import paged as paged_lib
 from repro.serve import sampling as sampling_lib
 from repro.serve.speculative import (
     SpeculativeConfig,
@@ -89,6 +90,16 @@ from repro.train.steps import make_prefill_admit_step, make_slot_decode_loop
 
 POLICIES = ("fifo", "spf")
 
+# Telemetry that accumulates per drain window.  ``drain()`` folds these
+# into ``engine.lifetime`` and zeroes them, so a long-lived server's
+# windowed rates (acceptance, tok/s, hit rate) reflect the CURRENT window
+# instead of everything since boot.
+_WINDOW_COUNTERS = (
+    "n_decode_dispatches", "n_decode_steps", "n_prefills", "n_host_syncs",
+    "n_tokens", "n_spec_proposed", "n_spec_accepted", "n_admitted",
+    "n_prefix_hits", "n_prefix_misses", "n_pages_allocated",
+)
+
 
 def _pow2(n: int) -> int:
     p = 1
@@ -98,20 +109,27 @@ def _pow2(n: int) -> int:
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_engine_fns(cfg, k, sampling, spec_key):
-    """Shared jitted (loop, prefill, draft_prefill, admit, evict) per
-    (config, K, sampling, speculative pair): every engine instance over
-    the same frozen configs reuses one compile cache.  Pool and state
-    buffers are donated throughout — the engine always rebinds the
-    returned handles, so every update is in place instead of a pool copy.
+def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key):
+    """Shared jitted (loop, prefill, draft_prefill, admit, evict,
+    hit_admit) per (config, K, sampling, speculative pair, paging
+    geometry): every engine instance over the same frozen configs reuses
+    one compile cache.  Pool and state buffers are donated throughout —
+    the engine always rebinds the returned handles, so every update is in
+    place instead of a pool copy.
 
     ``pools`` is a TUPLE of slot pools — ``(target,)`` normally,
     ``(target, draft)`` in speculative mode — so admission and eviction
-    scatter every model's pool in the same donated update.
+    scatter every model's pool in the same donated update.  ``paged_key``
+    carries one :class:`repro.serve.paged.PoolMeta` (or None for a dense
+    pool) per pool; the decode/prefill jits are pool-structure-opaque
+    (``decode_step_slots`` dispatches on ``"bt" in cache`` internally),
+    only admission and eviction scatter differently.
 
     ``admit`` and ``evict`` take slot-index vectors that may contain the
     out-of-range index ``capacity`` (padding rows); jnp scatters drop
     out-of-bounds updates, so padded rows are no-ops by construction.
+    The same convention covers paged pools: unallocated / padding block
+    table entries carry the out-of-range page id ``n_pages``.
     """
     sampled = not sampling_lib.is_greedy(sampling)
     if spec_key is None:
@@ -128,11 +146,7 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key):
     prefill = jax.jit(make_prefill_admit_step(cfg, sampling),
                       donate_argnums=(3,))
 
-    def admit_fn(pools, rows, state, slots, first, plens, rem0, eos_new,
-                 keys_new):
-        pools = tuple(
-            jax.tree.map(lambda p, r: p.at[:, slots].set(r), pool, row)
-            for pool, row in zip(pools, rows))
+    def _scatter_state(state, slots, first, plens, rem0, eos_new, keys_new):
         tokens, positions, remaining, eos, done, keys = state
         tokens = tokens.at[slots].set(first)
         positions = positions.at[slots].set(plens)
@@ -141,11 +155,30 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key):
         keys = keys.at[slots].set(keys_new)
         # a request can finish at its very first (prefill) token
         done = done.at[slots].set((first == eos_new) | (rem0 <= 0))
-        return pools, (tokens, positions, remaining, eos, done, keys)
+        return tokens, positions, remaining, eos, done, keys
 
-    def evict_fn(pools, state, slots):
-        pools = tuple(jax.tree.map(lambda p: p.at[:, slots].set(0), pool)
-                      for pool in pools)
+    def admit_fn(pools, rows, state, slots, bt_rows, first, plens, rem0,
+                 eos_new, keys_new):
+        new_pools = []
+        for pool, row, btr in zip(pools, rows, bt_rows):
+            if btr is None:
+                new_pools.append(jax.tree.map(
+                    lambda p, r: p.at[:, slots].set(r), pool, row))
+            else:
+                new_pools.append(paged_lib.admit_scatter(pool, row, slots,
+                                                         btr))
+        state = _scatter_state(state, slots, first, plens, rem0, eos_new,
+                               keys_new)
+        return tuple(new_pools), state
+
+    def evict_fn(pools, state, slots, zero_pids):
+        new_pools = []
+        for pool, zp in zip(pools, zero_pids):
+            if zp is None:
+                new_pools.append(jax.tree.map(
+                    lambda p: p.at[:, slots].set(0), pool))
+            else:
+                new_pools.append(paged_lib.evict_clear(pool, slots, zp))
         tokens, positions, remaining, eos, done, keys = state
         tokens = tokens.at[slots].set(0)
         positions = positions.at[slots].set(0)
@@ -153,13 +186,68 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key):
         eos = eos.at[slots].set(-1)
         keys = keys.at[slots].set(0)
         done = done.at[slots].set(True)
-        return pools, (tokens, positions, remaining, eos, done, keys)
+        return tuple(new_pools), (tokens, positions, remaining, eos, done,
+                                  keys)
 
     # rows (arg 1) is NOT donated: an (n, ...)-shaped buffer can never alias
     # the (capacity, ...) pool, so donating it only produces warnings
     admit = jax.jit(admit_fn, donate_argnums=(0, 2))
     evict = jax.jit(evict_fn, donate_argnums=(0, 1))
-    return loop, prefill, draft_prefill, admit, evict
+
+    # prefix-hit admission: the shared prompt pages are already resident,
+    # so the new slot only runs its private TAIL tokens (at most one
+    # page) through decode steps — no bucket prefill dispatch at all.
+    # Only built for the greedy, non-speculative, paged-target engines
+    # that can actually take the path.
+    hit_admit = None
+    if (paged_key and paged_key[0] is not None and spec_key is None
+            and not sampled):
+        meta0 = paged_key[0]
+        fam = get_family(cfg)
+
+        def hit_fn(params, pools, state, slots, bt_rows0, tail_tokens,
+                   tail_len, pos0, plens, rem0, eos_new):
+            pool = paged_lib.set_block_tables(pools[0], slots, bt_rows0)
+            cap = state[0].shape[0]
+
+            def scat(vals, fill, dtype):
+                return jnp.full((cap,), fill, dtype).at[slots].set(
+                    vals, mode="drop")
+
+            wave = jnp.zeros((cap,), bool).at[slots].set(
+                jnp.ones(slots.shape, bool), mode="drop")
+            tl = scat(tail_len, 0, jnp.int32)
+            p0 = scat(pos0, 0, jnp.int32)
+            toks = jnp.zeros((cap, meta0.page), jnp.int32).at[slots].set(
+                tail_tokens, mode="drop")
+
+            def body(carry, j):
+                cache, first = carry
+                live = wave & (j < tl)
+                logits, cache = fam.decode_step_slots(
+                    params, toks[:, j], p0 + j, cache, cfg, done=~live)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                first = jnp.where(live & (j == tl - 1), nxt, first)
+                return (cache, first), None
+
+            (pool, first), _ = jax.lax.scan(
+                body, (pool, jnp.zeros((cap,), jnp.int32)),
+                jnp.arange(meta0.page, dtype=jnp.int32))
+            tokens, positions, remaining, eos, done, keys = state
+            plc = scat(plens, 0, jnp.int32)
+            rmc = scat(rem0, 0, jnp.int32)
+            eoc = scat(eos_new, -1, jnp.int32)
+            tokens = jnp.where(wave, first, tokens)
+            positions = jnp.where(wave, plc, positions)
+            remaining = jnp.where(wave, rmc, remaining)
+            eos = jnp.where(wave, eoc, eos)
+            keys = jnp.where(wave[:, None], jnp.zeros_like(keys), keys)
+            done = jnp.where(wave, (first == eoc) | (rmc <= 0), done)
+            return ((pool,) + pools[1:],
+                    (tokens, positions, remaining, eos, done, keys), first)
+
+        hit_admit = jax.jit(hit_fn, donate_argnums=(1, 2))
+    return loop, prefill, draft_prefill, admit, evict, hit_admit
 
 
 @dataclasses.dataclass
@@ -217,9 +305,13 @@ class ContinuousBatchingEngine:
 
     def __init__(self, cfg, params, *, capacity: int = 8,
                  max_len: int = 256, prefill_bucket: int = 16, k: int = 8,
-                 policy: str = "fifo",
+                 policy: str = "fifo", pool: str = "dense",
+                 pages: Optional[int] = None,
                  sampling: Optional[sampling_lib.SamplingParams] = None,
                  speculative: Optional[SpeculativeConfig] = None):
+        if pool not in ("dense", "paged"):
+            raise ValueError(f"unknown pool kind {pool!r} "
+                             "(choose 'dense' or 'paged')")
         ok, why = serve_supported(cfg)
         if not ok:
             raise NotImplementedError(
@@ -263,11 +355,43 @@ class ContinuousBatchingEngine:
             else sampling
         self.speculative = speculative
 
-        pools = [self.fam.init_cache(cfg, capacity, max_len)]
+        if pool == "paged" and speculative is not None \
+                and cfg.family != "transformer":
+            # recurrent families commit speculative blocks through
+            # state-restore paths (spec_ring_restore) that have no paged
+            # twin — serve the pair dense rather than corrupt state
+            pool = "dense"
+        fams = [self.fam]
+        cfgs = [cfg]
         if speculative is not None:
-            pools.append(get_family(speculative.cfg).init_cache(
-                speculative.cfg, capacity, max_len))
+            fams.append(get_family(speculative.cfg))
+            cfgs.append(speculative.cfg)
+        pools, metas = [], []
+        for f, c in zip(fams, cfgs):
+            if pool == "paged":
+                p, m = paged_lib.build_paged_pool(f, c, capacity, max_len,
+                                                  pages)
+            else:
+                p, m = f.init_cache(c, capacity, max_len), None
+            pools.append(p)
+            metas.append(m)
         self._pools = tuple(pools)
+        self._metas = tuple(metas)
+        self._paged = any(m is not None for m in metas)
+        # "paged" only if a pool actually paged (xlstm / MLA fall back)
+        self.pool_kind = "paged" if self._paged else "dense"
+        self._allocs = tuple(paged_lib.PageAllocator(m) if m is not None
+                             else None for m in metas)
+        # slot -> per-pool page-id lists owned by the admitted request
+        self._slot_pages: Dict[int, list] = {}
+        # release()d pages awaiting their zeroing scatter (rollbacks)
+        self._zero_pending: List[List[int]] = [[] for _ in metas]
+        # shared-prefix admission: only meaningful where the block table
+        # is absolute-position-addressed and decode is deterministic
+        self._prefix_ok = (metas[0] is not None and speculative is None
+                           and sampling_lib.is_greedy(sampling)
+                           and cfg.family == "transformer"
+                           and not getattr(cfg, "window", None))
         # persistent device-resident decode state: (tokens, positions,
         # remaining, eos_ids, done, sampling keys) — idle slots are done
         self._state = (jnp.zeros((capacity,), jnp.int32),
@@ -281,6 +405,7 @@ class ContinuousBatchingEngine:
         self.active: Dict[int, _Sequence] = {}
         self.finished: Dict[int, np.ndarray] = {}
         self.retired: List[_Sequence] = []  # kept for latency accounting
+        self.rejected: Dict[int, str] = {}  # uid -> why submit refused it
         self._seen_uids: set = set()
         self._evict_pending: List[int] = []
         # (block, valid, [(slot, uid)], stats) of dispatched-but-unread
@@ -293,11 +418,19 @@ class ContinuousBatchingEngine:
         self.n_tokens = 0  # generated tokens (incl. prefill first tokens)
         self.n_spec_proposed = 0  # draft tokens offered to the target
         self.n_spec_accepted = 0  # draft tokens the target kept
+        self.n_admitted = 0  # requests that got a slot (+pages if paged)
+        self.n_prefix_hits = 0  # admissions served from resident pages
+        self.n_prefix_misses = 0  # prefix probes that found no full chain
+        self.n_pages_allocated = 0  # fresh target-pool pages handed out
+        # drained-window history (satellite: drain() snapshots + resets
+        # the window counters; lifetime totals live here)
+        self.lifetime: Dict[str, int] = {c: 0 for c in _WINDOW_COUNTERS}
 
         spec_key = None if speculative is None \
             else (speculative.cfg, speculative.d)
         (self._loop, self._prefill, self._draft_prefill, self._admit,
-         self._evict) = _jitted_engine_fns(cfg, k, self.sampling, spec_key)
+         self._evict, self._hit_admit) = _jitted_engine_fns(
+            cfg, k, self.sampling, spec_key, self._metas)
 
     @property
     def pool(self):
@@ -310,6 +443,31 @@ class ContinuousBatchingEngine:
         mode; 0.0 before any speculative block was read back)."""
         return self.n_spec_accepted / max(self.n_spec_proposed, 1)
 
+    @property
+    def pages_in_use(self) -> int:
+        """Live (refcounted) target-pool pages right now (0 when dense)."""
+        a = self._allocs[0]
+        return a.pages_in_use() if a is not None else 0
+
+    @property
+    def pages_highwater(self) -> int:
+        """Peak live target-pool pages since construction (0 when dense)."""
+        a = self._allocs[0]
+        return a.highwater if a is not None else 0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefix probes served from resident pages (current
+        drain window)."""
+        probes = self.n_prefix_hits + self.n_prefix_misses
+        return self.n_prefix_hits / max(probes, 1)
+
+    def lifetime_totals(self) -> Dict[str, int]:
+        """Window counters summed across every drained window PLUS the
+        live one — the "since boot" view ``drain()`` no longer clobbers."""
+        return {c: self.lifetime[c] + getattr(self, c)
+                for c in _WINDOW_COUNTERS}
+
     # ------------------------------------------------------------- admission
     def submit(self, req: Request):
         if req.uid in self._seen_uids:
@@ -321,10 +479,13 @@ class ContinuousBatchingEngine:
         if len(req.prompt) < 1:
             raise ValueError(f"request {req.uid}: empty prompt")
         if len(req.prompt) + req.max_new_tokens > self.max_len:
-            raise ValueError(
-                f"request {req.uid}: prompt {len(req.prompt)} + "
-                f"{req.max_new_tokens} new tokens exceeds max_len "
-                f"{self.max_len}")
+            # an oversize request in the middle of a trace must not kill
+            # the replay: record it and keep serving.  (It is NOT marked
+            # seen — a corrected resubmission under the same uid is fine.)
+            self.rejected[req.uid] = (
+                f"prompt {len(req.prompt)} + {req.max_new_tokens} new "
+                f"tokens exceeds max_len {self.max_len}")
+            return
         self._seen_uids.add(req.uid)
         self.waiting.append(req)
 
@@ -342,44 +503,149 @@ class ContinuousBatchingEngine:
         bucket — less pad waste per batched prefill and faster TTFT for
         cheap requests.  Selection never skips an arrived request when a
         slot is free for it.
+
+        Cost note: this used to ``del self.waiting[i]`` once per taken
+        request — each delete is O(queue) on a deque, so a deep backlog
+        paid O(queue * capacity) per admission wave on top of the scan.
+        Selection is now one linear pass and ONE queue rebuild per wave
+        (and the common fifo/no-clock case is a plain popleft run).
         """
-        arrived = [i for i, r in enumerate(self.waiting)
+        nfree = len(self.free)
+        if nfree == 0 or not self.waiting:
+            return []
+        if now is None and self.policy == "fifo":
+            # everything has "arrived": take straight off the head
+            return [self.waiting.popleft()
+                    for _ in range(min(nfree, len(self.waiting)))]
+        items = list(self.waiting)
+        arrived = [i for i, r in enumerate(items)
                    if now is None or r.arrival <= now]
         if self.policy == "spf":
             arrived.sort(key=lambda i: (
-                self._bucketed(len(self.waiting[i].prompt)), i))
-        take = arrived[:len(self.free)]
-        grabbed = [self.waiting[i] for i in take]
-        for i in sorted(take, reverse=True):
-            del self.waiting[i]
-        return grabbed
+                self._bucketed(len(items[i].prompt)), i))
+        take = arrived[:nfree]
+        if not take:
+            return []
+        taken = set(take)
+        self.waiting = collections.deque(
+            r for i, r in enumerate(items) if i not in taken)
+        return [items[i] for i in take]
+
+    def _alloc_request(self, req: Request):
+        """Reserve device pages for one request across every paged pool.
+
+        Returns an admission record, or None when some pool cannot
+        currently supply the pages — with every partial grab rolled back,
+        so backpressure is all-or-nothing per request.  The target pool
+        is probed for a shared-prefix hit first: every full page strictly
+        before the prompt's last token must resolve through the registry
+        (full chain or nothing), in which case the request increfs the
+        resident pages, allocates only its private tail, and rides the
+        no-prefill admission path.
+        """
+        P = len(req.prompt)
+        info = {"hit": False, "share": 0, "digests": None,
+                "pids": [None] * len(self._pools)}
+        if self._prefix_ok:
+            meta, alloc = self._metas[0], self._allocs[0]
+            digests = paged_lib.prefix_digests(req.prompt, meta.page)
+            info["digests"] = digests
+            share = (P - 1) // meta.page  # >= 1 private tail token stays
+            resident = alloc.lookup(digests[:share]) if share > 0 else None
+            if resident is not None:
+                total = paged_lib.pages_needed(P, req.max_new_tokens, meta)
+                tail = alloc.alloc(total - share)
+                if tail is not None:
+                    alloc.incref(resident)
+                    info.update(hit=True, share=share)
+                    info["pids"][0] = list(resident) + tail
+                    self.n_prefix_hits += 1
+                    self.n_pages_allocated += len(tail)
+                    return info
+            self.n_prefix_misses += 1
+        got = []
+        for pi, (meta, alloc) in enumerate(zip(self._metas, self._allocs)):
+            if meta is None:
+                continue
+            pids = alloc.alloc(
+                paged_lib.pages_needed(P, req.max_new_tokens, meta))
+            if pids is None:
+                # roll the earlier pools back; the zeroing rides the next
+                # eviction scatter (before any page can be re-handed out)
+                for pj, pj_pids in got:
+                    self._zero_pending[pj].extend(
+                        self._allocs[pj].release(pj_pids))
+                return None
+            got.append((pi, pids))
+            info["pids"][pi] = pids
+            if pi == 0:
+                self.n_pages_allocated += len(pids)
+        return info
 
     def _admit_batch(self, now: Optional[float]):
         """Admit every arrived request a free slot can take, ONE prefill
         dispatch per model + ONE pool/state scatter + ONE host sync per
-        prefill-bucket group — instead of three host syncs per request."""
+        prefill-bucket group — instead of three host syncs per request.
+
+        Paged pools add two stages in front: a host-side page-allocation
+        pass (all-or-nothing per request; the first request that cannot
+        get its pages returns itself and everything grabbed after it to
+        the FRONT of the queue, preserving order), and the prefix probe
+        that diverts full-chain hits to the no-prefill admission path.
+        """
         grabbed = self._select_admissions(now)
         if not grabbed:
             return
-        groups: Dict[int, List[Request]] = {}
-        for r in grabbed:
-            groups.setdefault(self._bucketed(len(r.prompt)), []).append(r)
-        for bucket, reqs in sorted(groups.items()):
-            n = len(reqs)
+        if self._paged:
+            pairs = []
+            for i, r in enumerate(grabbed):
+                info = self._alloc_request(r)
+                if info is None:
+                    # page backpressure: wait for the next eviction wave
+                    self.waiting.extendleft(reversed(grabbed[i:]))
+                    break
+                pairs.append((r, info))
+        else:
+            pairs = [(r, None) for r in grabbed]
+        misses = [(r, a) for r, a in pairs if a is None or not a["hit"]]
+        hits = [(r, a) for r, a in pairs if a is not None and a["hit"]]
+        if misses:
+            self._admit_miss_groups(misses)
+        if hits:
+            self._admit_hits(hits)
+
+    def _admit_miss_groups(self, pairs):
+        """The batched-prefill admission path (dense pools, and paged
+        requests whose prefix missed)."""
+        groups: Dict[int, list] = {}
+        for r, a in pairs:
+            groups.setdefault(self._bucketed(len(r.prompt)),
+                              []).append((r, a))
+        for bucket, group in sorted(groups.items()):
+            n = len(group)
             npad = _pow2(n)  # bound (group size, bucket) compile count
             padded = np.zeros((npad, bucket), np.int32)
             plens = np.ones((npad,), np.int32)
             rem0 = np.zeros((npad,), np.int32)
             eos_new = np.full((npad,), -1, np.int32)
             # padding rows target the out-of-range slot ``capacity``:
-            # their scatters are dropped entirely
+            # their scatters are dropped entirely (paged pools likewise
+            # pad block-table rows with the out-of-range page sentinel)
             slots = np.full((npad,), self.capacity, np.int32)
-            for j, r in enumerate(reqs):
+            bt_rows = [None if m is None else
+                       np.full((npad, m.nblk), m.sentinel, np.int32)
+                       for m in self._metas]
+            for j, (r, a) in enumerate(group):
                 plens[j] = len(r.prompt)
                 padded[j, :plens[j]] = r.prompt
                 rem0[j] = r.max_new_tokens - 1
                 eos_new[j] = -1 if r.eos_id is None else r.eos_id
                 slots[j] = self.free.pop()
+                if a is not None:
+                    self._slot_pages[int(slots[j])] = a["pids"]
+                    for pi, pids in enumerate(a["pids"]):
+                        if pids:
+                            bt_rows[pi][j, :len(pids)] = pids
             rows = [self.fam.init_cache(self.cfg, npad, self.max_len)]
             # pad-tail cache entries are garbage but never visible: each
             # decode step overwrites its own position before the per-row
@@ -393,7 +659,7 @@ class ContinuousBatchingEngine:
                 # chain roots are derived from (seed, uid) ON DEVICE in
                 # the same prefill dispatch — no key round-trip/sync
                 uids = np.zeros((npad,), np.int32)
-                uids[:len(reqs)] = [r.uid for r in reqs]
+                uids[:n] = [r.uid for r, _ in group]
                 first, rows[0], keys_dev = self._prefill(
                     self.params, jnp.asarray(padded), jnp.asarray(plens),
                     rows[0], jnp.asarray(uids))
@@ -409,18 +675,75 @@ class ContinuousBatchingEngine:
                 self.n_prefills += 1
             self._pools, self._state = self._admit(
                 self._pools, tuple(rows), self._state, jnp.asarray(slots),
+                tuple(None if b is None else jnp.asarray(b)
+                      for b in bt_rows),
                 first, jnp.asarray(plens), jnp.asarray(rem0),
                 jnp.asarray(eos_new), keys_dev)
             self.n_prefills += 1
             first_host = np.asarray(first)
             self.n_host_syncs += 1
             t = time.monotonic()
-            for j, r in enumerate(reqs):
+            for j, (r, a) in enumerate(group):
                 seq = _Sequence(r, int(slots[j]), pos=int(plens[j]),
                                 tokens=[int(first_host[j])], t_first=t)
                 self.active[seq.slot] = seq
                 self.n_tokens += 1
+                self.n_admitted += 1
+                if a is not None and self._prefix_ok and a["digests"]:
+                    # pages fully covered by the prompt now hold its
+                    # canonical prefill-built KV — make them shareable.
+                    # (Tail pages decode-built by the HIT path are never
+                    # registered: only prefill bytes enter the registry.)
+                    reg = len(r.prompt) // self._metas[0].page
+                    if reg:
+                        self._allocs[0].register(a["digests"][:reg],
+                                                 a["pids"][0][:reg])
                 self._finish_if_done(seq, seq.tokens[-1])
+
+    def _admit_hits(self, pairs):
+        """No-prefill admission: point the slots' leading block-table
+        entries at the resident shared pages, then run ONLY the private
+        tail tokens (at most one page of them) through masked decode
+        steps inside one jit — no bucket prefill dispatch at all."""
+        meta = self._metas[0]
+        n = len(pairs)
+        npad = _pow2(n)
+        slots = np.full((npad,), self.capacity, np.int32)
+        bt_rows = np.full((npad, meta.nblk), meta.sentinel, np.int32)
+        tail_tokens = np.zeros((npad, meta.page), np.int32)
+        tail_len = np.zeros((npad,), np.int32)
+        pos0 = np.zeros((npad,), np.int32)
+        plens = np.ones((npad,), np.int32)
+        rem0 = np.zeros((npad,), np.int32)
+        eos_new = np.full((npad,), -1, np.int32)
+        for j, (r, a) in enumerate(pairs):
+            pids = a["pids"][0]
+            slots[j] = self.free.pop()
+            self._slot_pages[int(slots[j])] = a["pids"]
+            bt_rows[j, :len(pids)] = pids
+            pos0[j] = a["share"] * meta.page
+            tail = np.asarray(r.prompt[pos0[j]:], np.int32)
+            tail_len[j] = len(tail)
+            tail_tokens[j, :len(tail)] = tail
+            plens[j] = len(r.prompt)
+            rem0[j] = r.max_new_tokens - 1
+            eos_new[j] = -1 if r.eos_id is None else r.eos_id
+        self._pools, self._state, first = self._hit_admit(
+            self.params, self._pools, self._state, jnp.asarray(slots),
+            jnp.asarray(bt_rows), jnp.asarray(tail_tokens),
+            jnp.asarray(tail_len), jnp.asarray(pos0), jnp.asarray(plens),
+            jnp.asarray(rem0), jnp.asarray(eos_new))
+        first_host = np.asarray(first)  # capacity-wide: index by slot
+        self.n_host_syncs += 1
+        t = time.monotonic()
+        for j, (r, a) in enumerate(pairs):
+            slot = int(slots[j])
+            seq = _Sequence(r, slot, pos=int(plens[j]),
+                            tokens=[int(first_host[slot])], t_first=t)
+            self.active[slot] = seq
+            self.n_tokens += 1
+            self.n_admitted += 1
+            self._finish_if_done(seq, seq.tokens[-1])
 
     # ------------------------------------------------------------- lifecycle
     def _finish_if_done(self, seq: _Sequence, last_token: int):
@@ -451,13 +774,54 @@ class ContinuousBatchingEngine:
         not outlive the request in device memory; resetting the frozen
         token also means idle-slot no-op steps derive from token 0, never
         from a previous tenant's text.
+
+        Paged pools release the retired slots' pages here too (symmetric
+        with slot reuse — a page re-enters circulation only once its
+        zeroing is applied).  Pages whose refcount drops to zero while
+        PREFIX-REGISTERED are retained with their bytes intact (they ARE
+        the cached value) and are absent from the zero list.
         """
-        if not self._evict_pending:
+        if not self._evict_pending and not (self._paged
+                                            and any(self._zero_pending)):
             return
+        zero = [None if m is None else list(zp)
+                for m, zp in zip(self._metas, self._zero_pending)]
+        for zp in self._zero_pending:
+            zp.clear()
+        for slot in self._evict_pending:
+            pids = self._slot_pages.pop(slot, None)
+            if pids:
+                for pi, plist in enumerate(pids):
+                    if plist:
+                        zero[pi].extend(self._allocs[pi].release(plist))
         slots = np.full((self.capacity,), self.capacity, np.int32)
         slots[:len(self._evict_pending)] = self._evict_pending
-        self._pools, self._state = self._evict(self._pools, self._state,
-                                               jnp.asarray(slots))
+        if not self._paged:
+            self._pools, self._state = self._evict(
+                self._pools, self._state, jnp.asarray(slots),
+                (None,) * len(self._pools))
+        else:
+            # fixed zero-list shape (capacity * nblk per pool) bounds the
+            # compile count; overflow (possible after alloc rollbacks)
+            # loops — the slot scatter is idempotent
+            while True:
+                chunk, more = [], False
+                for pi, m in enumerate(self._metas):
+                    if m is None:
+                        chunk.append(None)
+                        continue
+                    lim = self.capacity * m.nblk
+                    zp = np.full((lim,), m.sentinel, np.int32)
+                    takek = zero[pi][:lim]
+                    zp[:len(takek)] = takek
+                    del zero[pi][:lim]
+                    more = more or bool(zero[pi])
+                    chunk.append(jnp.asarray(zp))
+                self._pools, self._state = self._evict(
+                    self._pools, self._state, jnp.asarray(slots),
+                    tuple(chunk))
+                if not more:
+                    break
         self.free.extend(self._evict_pending)
         self._evict_pending.clear()
 
@@ -587,14 +951,24 @@ class ContinuousBatchingEngine:
                 if uid not in already}
 
     def drain(self):
-        """Return and clear all accumulated results and latency history.
+        """Return and clear all accumulated results and latency history,
+        and roll the telemetry window.
 
         A long-lived server must call this periodically — ``finished``,
-        ``retired``, and the uid-dedup set otherwise grow with every
-        request ever served.  Drained uids become submittable again.
+        ``retired``, ``rejected``, and the uid-dedup set otherwise grow
+        with every request ever served, and the window counters (token /
+        sync / acceptance / prefix tallies) otherwise accumulate forever,
+        silently turning every derived rate into a since-boot average.
+        The counters snapshot into ``self.lifetime`` and reset to zero;
+        ``lifetime_totals()`` keeps the since-boot view.  Drained uids
+        become submittable again.
         """
         out = self.finished
         self.finished = {}
         self.retired = []
+        self.rejected = {}
         self._seen_uids.difference_update(out)
+        for c in _WINDOW_COUNTERS:
+            self.lifetime[c] += getattr(self, c)
+            setattr(self, c, 0)
         return out

@@ -1,0 +1,346 @@
+"""Paged KV slot pool: block tables over a shared page arena.
+
+The dense slot pool reserves a full ``(capacity, max_len)`` cache row per
+slot.  This module re-lays every sequence-axis cache group as a shared
+page arena plus per-slot block tables:
+
+    dense   {"k": (L, B, S, KV, hd), "v": ...}
+    paged   {"k": (L, n_pages, page, KV, hd), "v": ...,
+             "bt": (L, B, nblk) int32}
+
+with ``page`` the ``pad_cache_len`` quantum for ``S`` (8 below 256, 64
+above) and ``nblk = S // page``.  The block table rides inside the group
+dict, tiled identically per layer, so it flows through ``lax.scan`` over
+the layer axis with zero plumbing changes; model code detects a paged
+group purely by ``"bt" in cache``.
+
+Page-id conventions
+-------------------
+* Page ids live in ``[0, n_pages)``; the value ``n_pages`` is the OOB
+  SENTINEL.  Scatters through a sentinel entry are dropped (jnp
+  out-of-bounds scatter semantics) and gathers clamp it to the last page
+  — the garbage read is finite and always hidden behind a ``kv_len`` /
+  ring-validity / band mask, which pins masked logits to ``NEG_INF`` so
+  the softmax contribution underflows to exactly 0.0.
+* All layers of a group share one logical page-id space: page ``p`` is
+  row ``p`` of EVERY layer's arena, and ``bt`` is the same (B, nblk)
+  table broadcast over L.
+* Pools whose sequence groups disagree on the padded cache length (none
+  in the current zoo) and pools with no ``{"k", "v"}`` sequence group at
+  all (xlstm's O(1) recurrent state, MLA's latent layout) are not
+  pageable — the engine keeps their dense pool.
+
+The host-side :class:`PageAllocator` owns the free list, per-page
+refcounts, and the prefix registry (rolling blake2b chain hashes of full
+prompt pages).  "Copy-on-write" prefix sharing needs no actual copy:
+shared pages cover only FULL pages strictly before a prompt's last
+token, and every write a slot performs lands at positions at or past
+that last token — i.e. always in the slot's private tail pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolMeta:
+    """Static paging geometry of one pool (hashable: jit-cache key)."""
+    page: int        # tokens per page (the pad_cache_len quantum)
+    nblk: int        # block-table entries per slot (= padded S // page)
+    n_pages: int     # arena depth; also the OOB sentinel page id
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_pages
+
+
+def page_quantum(padded_len: int) -> int:
+    """The natural page size for a padded cache axis — the same quantum
+    ``pad_cache_len`` rounded to, re-derived from its output (both
+    branches of the quantum divide their padded lengths exactly)."""
+    return 8 if padded_len <= 256 else 64
+
+
+def _seq_group(node: Any) -> bool:
+    """A pageable cache group: exactly {"k", "v"} leaves of matching
+    (L, B, S, ...) shape.  MLA's {"ckv", "kr"} and recurrent leaves fail
+    this test and stay dense."""
+    if not (isinstance(node, dict) and set(node.keys()) == {"k", "v"}):
+        return False
+    k, v = node["k"], node["v"]
+    return (hasattr(k, "ndim") and k.ndim >= 4 and v.ndim == k.ndim
+            and k.shape[:3] == v.shape[:3])
+
+
+def _walk_groups(cache: Any):
+    """Yield every pageable {"k","v"} group dict inside a pool pytree."""
+    if _seq_group(cache):
+        yield cache
+        return
+    if isinstance(cache, dict):
+        for sub in cache.values():
+            yield from _walk_groups(sub)
+
+
+def pool_meta(cache_shapes: Any, pages: Optional[int] = None
+              ) -> Optional[PoolMeta]:
+    """Paging geometry for a pool (concrete or ``jax.eval_shape`` tree).
+
+    Returns None when the pool has no pageable group or its groups
+    disagree on the padded sequence length.
+    """
+    lens, batch = set(), set()
+    for g in _walk_groups(cache_shapes):
+        lens.add(g["k"].shape[2])
+        batch.add(g["k"].shape[1])
+    if len(lens) != 1 or len(batch) != 1:
+        return None
+    (S,), (B,) = lens, batch
+    page = page_quantum(S)
+    if S % page:
+        return None
+    nblk = S // page
+    return PoolMeta(page=page, nblk=nblk,
+                    n_pages=int(pages) if pages else B * nblk)
+
+
+def build_paged_pool(fam, cfg, capacity: int, max_len: int,
+                     pages: Optional[int] = None):
+    """Construct a zeroed paged pool for ``fam``/``cfg``.
+
+    Returns ``(pool, meta)``; ``meta is None`` means the family is not
+    pageable and ``pool`` is the ordinary dense pool.
+    """
+    shapes = jax.eval_shape(
+        lambda: fam.init_cache(cfg, capacity, max_len))
+    meta = pool_meta(shapes, pages)
+    if meta is None:
+        return fam.init_cache(cfg, capacity, max_len), None
+
+    def one(node):
+        if _seq_group(node):
+            out = {}
+            for key in ("k", "v"):
+                sd = node[key]
+                L = sd.shape[0]
+                out[key] = jnp.zeros(
+                    (L, meta.n_pages, meta.page) + sd.shape[3:], sd.dtype)
+            out["bt"] = jnp.full((L, capacity, meta.nblk), meta.sentinel,
+                                 jnp.int32)
+            return out
+        if isinstance(node, dict):
+            return {k: one(v) for k, v in node.items()}
+        # dense leaf (recurrent state etc.) — allocate as-is
+        return jnp.zeros(node.shape, node.dtype)
+
+    return one(shapes), meta
+
+
+def pages_needed(prompt_len: int, max_new: int, meta: PoolMeta) -> int:
+    """Pages a request needs up-front so no mid-flight top-up is ever
+    required.  The ``nblk`` clamp covers both layouts at once: a full
+    cache fits ``prompt + max_new`` inside ``nblk`` pages by the engine's
+    admission check, and a ring layout wraps at ``nblk * page``, so it
+    never touches more than the full table either."""
+    return min(-(-(prompt_len + max_new) // meta.page), meta.nblk)
+
+
+# --------------------------------------------------------------- jit helpers
+def admit_scatter(pool, rows, slots, bt_rows):
+    """Scatter freshly-prefilled dense cache rows into a (possibly paged)
+    pool.  jit-safe; donated in the engine's admit step.
+
+    pool: the live pool pytree (paged groups carry "bt").
+    rows: matching DENSE pytree of (L, npad, S, ...) prefill scratch rows
+          (no "bt" keys — prefill always runs on dense scratch).
+    slots: (npad,) int32 slot ids; padding rows carry the OOB slot id.
+    bt_rows: (npad, nblk) int32 page ids per admitted row; unallocated
+          blocks and padding rows carry the page sentinel.
+    """
+    def walk(p, r):
+        if isinstance(p, dict) and "bt" in p:
+            L, _, page = p["k"].shape[:3]
+            npad, nblk = bt_rows.shape
+            flat = bt_rows.reshape(-1)  # (npad * nblk,)
+            out = {}
+            for key in ("k", "v"):
+                chunks = r[key].reshape(
+                    (L, npad * nblk, page) + r[key].shape[3:])
+                out[key] = p[key].at[:, flat].set(
+                    chunks.astype(p[key].dtype), mode="drop")
+            out["bt"] = p["bt"].at[:, slots].set(
+                jnp.broadcast_to(bt_rows[None], (L, npad, nblk)),
+                mode="drop")
+            return out
+        if isinstance(p, dict):
+            return {k: walk(p[k], r[k]) for k in p}
+        return p.at[:, slots].set(r.astype(p.dtype), mode="drop")
+
+    return walk(pool, rows)
+
+
+def evict_clear(pool, slots, zero_pids):
+    """Clear evicted slots.  Dense leaves zero their rows; paged groups
+    zero the handed-back pages listed in ``zero_pids`` (padded with the
+    page sentinel — prefix-registered pages are retained, so they are
+    simply absent from the list) and reset the rows' block tables to the
+    sentinel."""
+    def walk(p):
+        if isinstance(p, dict) and "bt" in p:
+            out = {}
+            for key in ("k", "v"):
+                out[key] = p[key].at[:, zero_pids].set(0, mode="drop")
+            L, _, nblk = p["bt"].shape
+            sent = p["k"].shape[1]
+            out["bt"] = p["bt"].at[:, slots].set(
+                jnp.full((L, slots.shape[0], nblk), sent, jnp.int32),
+                mode="drop")
+            return out
+        if isinstance(p, dict):
+            return {k: walk(v) for k, v in p.items()}
+        return p.at[:, slots].set(0, mode="drop")
+
+    return walk(pool)
+
+
+def set_block_tables(pool, slots, bt_rows):
+    """Point admitted rows' block tables at pages WITHOUT touching arena
+    bytes — the prefix-hit admission path (leading entries alias resident
+    pages; tail pages fill via the decode-scan tail prefill)."""
+    def walk(p):
+        if isinstance(p, dict) and "bt" in p:
+            L = p["bt"].shape[0]
+            npad, nblk = bt_rows.shape
+            return {**p, "bt": p["bt"].at[:, slots].set(
+                jnp.broadcast_to(bt_rows[None], (L, npad, nblk)),
+                mode="drop")}
+        if isinstance(p, dict):
+            return {k: walk(v) for k, v in p.items()}
+        return p
+
+    return walk(pool)
+
+
+# ------------------------------------------------------------ prefix hashing
+def prefix_digests(tokens, page: int) -> list:
+    """Rolling chain digests of each FULL page of a prompt.
+
+    ``digest[j]`` commits to tokens ``[0, (j+1) * page)`` — chaining means
+    a page is only ever shared under an identical full prefix, never by
+    content coincidence at different offsets.
+    """
+    toks = np.asarray(tokens, np.int64)
+    out = []
+    h = b""
+    for j in range(len(toks) // page):
+        h = hashlib.blake2b(
+            h + toks[j * page:(j + 1) * page].tobytes(),
+            digest_size=16).digest()
+        out.append(h)
+    return out
+
+
+# ------------------------------------------------------------ host allocator
+class PageAllocator:
+    """Host-side page bookkeeping for one arena: free list, refcounts,
+    and the prefix registry with LRU retention of zero-ref registered
+    pages (their bytes ARE the cached value — they are reclaimed lazily,
+    oldest first, only when the free list runs dry)."""
+
+    def __init__(self, meta: PoolMeta):
+        self.meta = meta
+        self.free: list[int] = list(range(meta.n_pages))[::-1]
+        self.refcount = np.zeros(meta.n_pages, np.int32)
+        self.registry: dict[bytes, int] = {}       # digest -> page id
+        self.page_key: dict[int, bytes] = {}       # page id -> digest
+        self.lru: OrderedDict[int, None] = OrderedDict()
+        self.highwater = 0
+
+    # -- capacity -----------------------------------------------------------
+    def pages_in_use(self) -> int:
+        return self.meta.n_pages - len(self.free) - len(self.lru)
+
+    def available(self) -> int:
+        return len(self.free) + len(self.lru)
+
+    # -- alloc / release ----------------------------------------------------
+    def alloc(self, n: int) -> Optional[list[int]]:
+        """Take ``n`` pages (refcount 1 each), reclaiming retained
+        prefix pages oldest-first if the free list runs dry.  Returns
+        None — allocating NOTHING — when fewer than ``n`` are available:
+        admission backpressure is all-or-nothing per request."""
+        if n > self.available():
+            return None
+        out = []
+        for _ in range(n):
+            if self.free:
+                pid = self.free.pop()
+            else:
+                pid, _ = self.lru.popitem(last=False)
+                self._unregister(pid)
+            self.refcount[pid] = 1
+            out.append(pid)
+        self.highwater = max(self.highwater, self.pages_in_use())
+        return out
+
+    def incref(self, pids) -> None:
+        for pid in pids:
+            if self.refcount[pid] == 0:
+                # a retained registry page comes back to life
+                self.lru.pop(pid, None)
+            self.refcount[pid] += 1
+        self.highwater = max(self.highwater, self.pages_in_use())
+
+    def release(self, pids) -> list[int]:
+        """Drop one reference per page; returns the page ids whose bytes
+        must be ZEROED (refcount hit zero and the page is not prefix-
+        registered — registered pages are retained in the LRU with their
+        bytes intact)."""
+        zero = []
+        for pid in pids:
+            self.refcount[pid] -= 1
+            if self.refcount[pid] > 0:
+                continue
+            if pid in self.page_key:
+                self.lru[pid] = None
+                self.lru.move_to_end(pid)
+            else:
+                self.free.append(pid)
+                zero.append(pid)
+        return zero
+
+    # -- prefix registry ----------------------------------------------------
+    def _unregister(self, pid: int) -> None:
+        d = self.page_key.pop(pid, None)
+        if d is not None:
+            self.registry.pop(d, None)
+
+    def register(self, digests, pids) -> None:
+        """Record ``pids[j]`` as holding the page whose chain digest is
+        ``digests[j]``.  First writer wins — re-registering a digest that
+        already resolves elsewhere is a no-op (the resident page keeps
+        serving hits)."""
+        for d, pid in zip(digests, pids):
+            if d in self.registry or pid in self.page_key:
+                continue
+            self.registry[d] = pid
+            self.page_key[pid] = d
+
+    def lookup(self, digests) -> Optional[list[int]]:
+        """Resolve a FULL chain of share digests to resident pages.
+        Partial chains are misses: the tail-prefill contract needs every
+        shared position's KV bytes resident."""
+        out = []
+        for d in digests:
+            pid = self.registry.get(d)
+            if pid is None:
+                return None
+            out.append(pid)
+        return out

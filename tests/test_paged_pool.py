@@ -1,0 +1,424 @@
+"""Paged slot-pool invariants: block-table KV + copy-on-write prefix cache.
+
+The paged pool re-lays the engine's sequence-indexed cache groups as a
+shared page arena plus per-slot block tables (``pool="paged"``).  Its
+contract mirrors the dense pool's: *token-exactness* — for any trace,
+greedy tokens equal both the dense engine's and the sequential
+``generate()`` loop's, across transformer full-KV, ring-window, griffin,
+and speculative chunk-verify serving, in the jnp path and the Pallas
+interpreter path alike.  On top of that sit the pool's own invariants:
+all-or-nothing page allocation with backpressure (never a partial
+admission), refcounted page release on eviction, and prefix-cache hits
+that skip re-prefill without changing a single token.
+"""
+import collections
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import lm_batch
+from repro.launch.serve import generate
+from repro.serve import ContinuousBatchingEngine, Request, SpeculativeConfig
+from repro.serve.paged import PageAllocator, PoolMeta, prefix_digests
+
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_compile_caches():
+    """Release this module's jitted executables when it finishes.
+
+    The engine parity tests here compile ~15 distinct engine variants
+    (paged/dense x family x kernel).  Those executables stay pinned by
+    ``_jitted_engine_fns``'s unbounded lru_cache and jax's global jit
+    caches for the rest of the pytest process, and the cumulative XLA
+    state has been observed to push later unrelated compiles into a
+    segfault on small containers.  Dropping the caches at module teardown
+    keeps the suite's peak compiled-state bounded.
+    """
+    yield
+    from repro.serve.engine import _jitted_engine_fns
+    _jitted_engine_fns.cache_clear()
+    jax.clear_caches()
+
+
+def _requests(cfg, specs, *, uid0=0, seed0=50):
+    return [Request(uid=uid0 + i,
+                    prompt=lm_batch(cfg.vocab_size, 1, p, seed=seed0 + i)[0],
+                    max_new_tokens=g)
+            for i, (p, g) in enumerate(specs)]
+
+
+def _clone(reqs, *, uid0=0):
+    return [Request(uid=uid0 + r.uid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, arrival=r.arrival)
+            for r in reqs]
+
+
+def _sequential(cfg, params, reqs):
+    return {r.uid: np.asarray(generate(
+        cfg, params, jnp.asarray(r.prompt)[None],
+        max_new_tokens=r.max_new_tokens, max_len=MAX_LEN)[0])
+        for r in reqs}
+
+
+def _run_both(cfg, params, reqs, *, capacity=3, k=4, pages=None, **kw):
+    """Run the same trace through a dense and a paged engine; return
+    (dense tokens, paged tokens, paged engine)."""
+    dense = ContinuousBatchingEngine(cfg, params, capacity=capacity,
+                                     max_len=MAX_LEN, prefill_bucket=4,
+                                     k=k, pool="dense", **kw)
+    paged = ContinuousBatchingEngine(cfg, params, capacity=capacity,
+                                     max_len=MAX_LEN, prefill_bucket=4,
+                                     k=k, pool="paged", pages=pages, **kw)
+    got_d = dense.run(_clone(reqs))
+    got_p = paged.run(_clone(reqs))
+    return got_d, got_p, paged
+
+
+def _assert_equal(got_d, got_p, want=None):
+    assert set(got_d) == set(got_p)
+    for uid in got_d:
+        np.testing.assert_array_equal(got_p[uid], got_d[uid],
+                                      err_msg=f"uid {uid} paged vs dense")
+        if want is not None:
+            np.testing.assert_array_equal(got_p[uid], want[uid],
+                                          err_msg=f"uid {uid} vs generate")
+
+
+def _window_cfg():
+    return ModelConfig(name="win-paged", n_layers=2, d_model=48, n_heads=4,
+                       n_kv_heads=2, d_ff=96, vocab_size=97, window=8,
+                       attn_chunk=8)
+
+
+def _griffin_cfg():
+    return ModelConfig(name="griffin-paged", family="griffin", n_layers=3,
+                       d_model=48, n_heads=4, n_kv_heads=1, d_ff=96,
+                       vocab_size=97, lru_width=48, window=6, act="geglu",
+                       attn_chunk=8, scale_embeddings=True,
+                       block_pattern=("rec", "rec", "attn"))
+
+
+def _params(cfg):
+    from repro.models import get_family
+    return get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+
+
+def test_paged_matches_dense_and_sequential(qwen_smoke_cfg,
+                                            qwen_smoke_params):
+    """Full-KV transformer serving through the paged pool is token-exact
+    vs the dense pool AND vs sequential ``generate()`` across admission
+    bucketing, slot recycling, and macro stepping."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    specs = [(3, 6), (9, 2), (5, 8), (12, 4), (4, 7), (7, 1), (6, 5)]
+    reqs = _requests(cfg, specs)
+    got_d, got_p, engine = _run_both(cfg, params, reqs)
+    assert engine.pool_kind == "paged"
+    _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
+    assert len(reqs) > engine.capacity  # slots really were recycled
+
+
+def test_paged_ring_window_wrap_parity():
+    """Ring-buffer window slots through the paged pool: sequences far
+    beyond the window wrap their (single-page) ring exactly as dense."""
+    cfg = _window_cfg()
+    params = _params(cfg)
+    specs = [(3, 12), (10, 8), (6, 14), (12, 4), (5, 9)]
+    reqs = _requests(cfg, specs, seed0=80)
+    got_d, got_p, engine = _run_both(cfg, params, reqs)
+    assert engine.pool_kind == "paged"
+    _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
+
+
+def test_paged_griffin_mixed_groups():
+    """Griffin pools page the local-attention KV group while the
+    recurrent-state group stays dense — both ride the same admission,
+    decode, and eviction paths, token-exact vs dense and sequential."""
+    cfg = _griffin_cfg()
+    params = _params(cfg)
+    specs = [(3, 6), (9, 2), (5, 8), (12, 4), (4, 7)]
+    reqs = _requests(cfg, specs)
+    got_d, got_p, engine = _run_both(cfg, params, reqs)
+    assert engine.pool_kind == "paged"
+    # the recurrent group really is dense alongside the paged attn group
+    paged_groups = [g for g in engine.pool.values()
+                    if isinstance(g, dict) and "bt" in g]
+    assert paged_groups and len(paged_groups) < len(engine.pool)
+    _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
+
+
+def test_unpageable_family_serves_dense():
+    """A family with no sequence-indexed cache group (xlstm: O(1)
+    recurrent state only) degrades to the dense pool — reported via
+    ``pool_kind`` — and still serves token-exactly."""
+    cfg = ModelConfig(name="xlstm-paged", family="xlstm", n_layers=2,
+                      d_model=48, n_heads=4, n_kv_heads=4, d_ff=0,
+                      vocab_size=97, proj_factor=2.0, attn_chunk=8,
+                      block_pattern=("m", "s"))
+    params = _params(cfg)
+    reqs = _requests(cfg, [(3, 6), (9, 2), (5, 8)])
+    engine = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                      max_len=MAX_LEN, prefill_bucket=4,
+                                      k=4, pool="paged")
+    assert engine.pool_kind == "dense"
+    got = engine.run(reqs)
+    want = _sequential(cfg, params, reqs)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid])
+
+
+def test_paged_speculative_chunk_verify(gpt_micro_cfg, gpt_micro_big_cfg):
+    """Speculative serving allocates BOTH pools (draft + target) from
+    page arenas; chunk-verify over block tables accepts/rejects exactly
+    as the dense pools do."""
+    from repro.models import get_family
+    cfg_t, cfg_d = gpt_micro_big_cfg, gpt_micro_cfg
+    params_t = get_family(cfg_t).init(jax.random.PRNGKey(0), cfg_t)
+    params_d = get_family(cfg_d).init(jax.random.PRNGKey(1), cfg_d)
+    reqs = _requests(cfg_t, [(4, 6), (9, 3), (6, 5)], seed0=70)
+    got_d, got_p, engine = _run_both(
+        cfg_t, params_t, reqs, capacity=2, k=2,
+        speculative=SpeculativeConfig(cfg_d, params_d, d=2))
+    assert engine.pool_kind == "paged"
+    _assert_equal(got_d, got_p, _sequential(cfg_t, params_t, reqs))
+
+
+def test_paged_griffin_speculative_falls_back_dense():
+    """Griffin + speculative commits blocks through state-restore paths
+    with no paged twin — the engine must serve dense, not corrupt."""
+    cfg = _griffin_cfg()
+    params = _params(cfg)
+    cfg_d = ModelConfig(name="draft-97", n_layers=1, d_model=32, n_heads=2,
+                        n_kv_heads=2, d_ff=64, vocab_size=97, attn_chunk=8)
+    engine = ContinuousBatchingEngine(
+        cfg, params, capacity=2, max_len=MAX_LEN, k=2, pool="paged",
+        speculative=SpeculativeConfig(cfg_d, _params(cfg_d), d=2))
+    assert engine.pool_kind == "dense"
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_paged_kernel_interpret_parity(gpt_micro_cfg, window):
+    """The paged Pallas kernels (block-table indirection in the index
+    map, scalar-prefetched bt) are token-exact vs the jnp paged path in
+    interpreter mode, full-KV and ring alike."""
+    cfg = gpt_micro_cfg if window is None else \
+        gpt_micro_cfg.replace(name="gpt-micro-win", window=window)
+    params = _params(gpt_micro_cfg)
+    reqs = _requests(cfg, [(4, 6), (9, 4)], seed0=90)
+    jnp_engine = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                          max_len=MAX_LEN, prefill_bucket=4,
+                                          k=2, pool="paged")
+    kcfg = cfg.replace(decode_kernel="interpret")
+    k_engine = ContinuousBatchingEngine(kcfg, params, capacity=2,
+                                        max_len=MAX_LEN, prefill_bucket=4,
+                                        k=2, pool="paged")
+    got_j = jnp_engine.run(_clone(reqs))
+    got_k = k_engine.run(_clone(reqs))
+    assert k_engine.pool_kind == "paged"
+    _assert_equal(got_j, got_k)
+
+
+def test_page_exhaustion_backpressure(qwen_smoke_cfg, qwen_smoke_params):
+    """With fewer pages than the trace wants at once, admission applies
+    backpressure (requests wait for released pages) instead of partially
+    admitting — every request still finishes with exact tokens, and the
+    arena high-water never exceeds the budget."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    specs = [(9, 8), (10, 7), (11, 6), (9, 5), (12, 4), (10, 8)]
+    reqs = _requests(cfg, specs, seed0=120)
+    # each request needs 3 pages (8-token quantum); 4 pages admit only
+    # one at a time even though 4 slots are free
+    got_d, got_p, engine = _run_both(cfg, params, reqs, capacity=4,
+                                     pages=4)
+    assert engine.pages_highwater <= 4
+    assert set(got_p) == {r.uid for r in reqs}  # nobody starved
+    _assert_equal(got_d, got_p)
+
+
+def test_prefix_hit_skips_prefill_token_exact(qwen_smoke_cfg,
+                                              qwen_smoke_params):
+    """Requests sharing a prompt prefix: after the first admission wave
+    registers its prefill pages, later requests hit the prefix cache —
+    fewer prefill dispatches, shared pages referenced copy-on-write —
+    with tokens exactly equal to the dense engine's and generate()'s."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    prefix = lm_batch(cfg.vocab_size, 1, 18, seed=200)[0]
+    reqs = []
+    for i in range(4):
+        tail = lm_batch(cfg.vocab_size, 1, 2 + i, seed=210 + i)[0]
+        reqs.append(Request(uid=i, prompt=np.concatenate([prefix, tail]),
+                            max_new_tokens=5))
+    # capacity 1 forces one admission wave per request, so waves 2-4 can
+    # hit the pages wave 1 registered
+    got_d, got_p, engine = _run_both(cfg, params, reqs, capacity=1)
+    dense = ContinuousBatchingEngine(cfg, params, capacity=1,
+                                     max_len=MAX_LEN, prefill_bucket=4,
+                                     k=4, pool="dense")
+    dense.run(_clone(reqs, uid0=100))
+    assert engine.n_prefix_hits == 3 and engine.n_prefix_misses == 1
+    assert engine.n_prefills < dense.n_prefills  # re-prefill skipped
+    assert engine.prefix_hit_rate == pytest.approx(0.75)
+    # hits allocate only tail pages: strictly fewer than a miss would
+    assert engine.n_pages_allocated < 4 * 3
+    _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
+
+
+def test_cow_divergence_and_refcount_release(qwen_smoke_cfg,
+                                             qwen_smoke_params):
+    """Copy-on-write: two live requests share resident prefix pages but
+    write their decode tokens to private tail pages — divergent suffixes
+    never cross-contaminate — and eviction drops refcounts so the arena
+    returns to zero pages in use."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    prefix = lm_batch(cfg.vocab_size, 1, 17, seed=300)[0]
+    reqs = [Request(uid=i,
+                    prompt=np.concatenate(
+                        [prefix, lm_batch(cfg.vocab_size, 1, 3 + i,
+                                          seed=310 + i)[0]]),
+                    max_new_tokens=6) for i in range(3)]
+    engine = ContinuousBatchingEngine(cfg, params, capacity=1,
+                                      max_len=MAX_LEN, prefill_bucket=4,
+                                      k=4, pool="paged")
+    got = engine.run(_clone(reqs))
+    assert engine.n_prefix_hits >= 1
+    want = _sequential(cfg, params, reqs)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+    # all requests retired: flush releases every slot's pages; only
+    # zero-ref registered pages may linger (LRU-retained for reuse)
+    engine._flush_evictions()
+    alloc = engine._allocs[0]
+    assert engine.pages_in_use == 0
+    assert not engine._slot_pages
+    # and the retained pages are reclaimable: a fresh burst fits
+    got2 = engine.run(_clone(reqs, uid0=100))
+    for uid in want:
+        np.testing.assert_array_equal(got2[100 + uid], want[uid])
+    assert alloc.highwater <= alloc.meta.n_pages
+
+
+def test_page_allocator_refcounts_and_lru_reclaim():
+    """PageAllocator unit contract: all-or-nothing alloc, refcounted
+    release, digest registry lookups, and LRU reclaim of zero-ref
+    registered pages when the free list runs dry."""
+    alloc = PageAllocator(PoolMeta(page=8, nblk=2, n_pages=4))
+    a = alloc.alloc(3)
+    assert len(a) == 3 and alloc.pages_in_use() == 3
+    assert alloc.alloc(2) is None  # only 1 free: all-or-nothing refusal
+    assert alloc.pages_in_use() == 3  # the refused alloc grabbed nothing
+    # register two of them under a digest chain, then fully release
+    digs = prefix_digests(np.arange(16, dtype=np.int32), 8)
+    alloc.register(digs, a[:2])
+    assert alloc.lookup(digs) == a[:2]
+    zero = alloc.release(a)
+    # registered pages are retained (no zeroing) for future hits;
+    # the unregistered page is returned for zeroing
+    assert zero == [a[2]] and alloc.pages_in_use() == 0
+    assert alloc.lookup(digs) == a[:2]
+    # a hit increfs resident pages without touching the free list
+    alloc.incref(a[:2])
+    assert alloc.pages_in_use() == 2
+    alloc.release(a[:2])
+    # demand exceeding the free list reclaims the LRU retained pages
+    b = alloc.alloc(4)
+    assert b is not None and sorted(b) == sorted(range(4))
+    assert alloc.lookup(digs) is None  # reclaim evicted the registry entry
+    assert alloc.highwater == 4
+
+
+def test_select_admissions_linear_not_quadratic(qwen_smoke_cfg,
+                                                qwen_smoke_params):
+    """Regression guard for the admission-scan bugfix: selecting from a
+    deep waiting queue must scale ~linearly (one scan + one rebuild per
+    wave), not quadratically (per-take deque deletes)."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    engine = ContinuousBatchingEngine(cfg, params, capacity=4,
+                                      max_len=MAX_LEN, prefill_bucket=4,
+                                      policy="spf")
+    prompt = np.ones(4, np.int32)
+
+    def timed(n):
+        reqs = [Request(uid=i, prompt=prompt, max_new_tokens=1,
+                        arrival=float(i % 7)) for i in range(n)]
+        best = float("inf")
+        for _ in range(3):
+            engine.waiting = collections.deque(reqs)
+            t0 = time.perf_counter()
+            take = engine._select_admissions(now=1e9)
+            best = min(best, time.perf_counter() - t0)
+            assert len(take) == engine.capacity
+        return best
+
+    t_small, t_big = timed(500), timed(4000)
+    # 8x the queue: linear ≈ 8x, the old quadratic path ≈ 64x.  The
+    # bound sits far above linear noise and far below quadratic.
+    assert t_big < 24 * max(t_small, 1e-5), (t_small, t_big)
+
+
+def test_drain_resets_window_keeps_lifetime(qwen_smoke_cfg,
+                                            qwen_smoke_params):
+    """Regression: drain() used to clear results but leave the telemetry
+    counters accumulating forever, so per-window rates (bench traces,
+    acceptance checks) were polluted by history.  drain() must zero the
+    window counters, fold them into lifetime totals, and clear the
+    rejection log."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    engine = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                      max_len=MAX_LEN, prefill_bucket=4,
+                                      k=4, pool="paged")
+    engine.submit(Request(uid=999, prompt=np.zeros(MAX_LEN, np.int32),
+                          max_new_tokens=4))  # rejected, not raised
+    engine.run(_requests(cfg, [(4, 5), (6, 3)], seed0=400))
+    w1 = {c: getattr(engine, c) for c in ("n_tokens", "n_prefills",
+                                          "n_decode_dispatches")}
+    assert w1["n_tokens"] == 8 and engine.rejected
+    engine.drain()
+    for c in w1:
+        assert getattr(engine, c) == 0, c  # window reset
+        assert engine.lifetime[c] == w1[c], c  # history kept
+    assert not engine.rejected
+    # a second window accumulates independently; totals = both windows
+    engine.run(_requests(cfg, [(5, 2)], uid0=10, seed0=410))
+    assert engine.n_tokens == 2
+    assert engine.lifetime_totals()["n_tokens"] == w1["n_tokens"] + 2
+
+
+def test_paged_pool_specs_match_engine(qwen_smoke_cfg, qwen_smoke_params):
+    """launch/specs.py's abstract paged-pool specs must track the real
+    engine pool (shape + dtype), or dry-run lowering drifts silently;
+    unpageable configs must report None, matching the dense fallback."""
+    from repro.launch import specs as specs_lib
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    engine = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                      max_len=MAX_LEN, prefill_bucket=4,
+                                      pool="paged")
+    spec = specs_lib.paged_slot_pool_specs(cfg, 2, MAX_LEN)
+    assert jax.tree.map(lambda s: (s.shape, str(s.dtype)), spec) \
+        == jax.tree.map(lambda a: (a.shape, str(a.dtype)), engine.pool)
+    xcfg = ModelConfig(name="xlstm-spec", family="xlstm", n_layers=2,
+                       d_model=48, n_heads=4, n_kv_heads=4, d_ff=0,
+                       vocab_size=97, proj_factor=2.0, attn_chunk=8,
+                       block_pattern=("m", "s"))
+    assert specs_lib.paged_slot_pool_specs(xcfg, 2, MAX_LEN) is None
+
+
+def test_oversize_rejection_is_resubmittable(qwen_smoke_cfg,
+                                             qwen_smoke_params):
+    """A rejected request is not burned: its uid stays reusable, the
+    reason is recorded, and the trace around it keeps serving."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    engine = ContinuousBatchingEngine(cfg, params, capacity=1,
+                                      max_len=MAX_LEN, prefill_bucket=4,
+                                      pool="paged")
+    engine.submit(Request(uid=0, prompt=np.zeros(30, np.int32),
+                          max_new_tokens=8))  # 30 + 8 > 32
+    assert "exceeds max_len" in engine.rejected[0]
+    # resubmit the same uid with a servable budget: accepted this time
+    got = engine.run(_requests(cfg, [(4, 3)], seed0=500))
+    assert set(got) == {0} and len(got[0]) == 3

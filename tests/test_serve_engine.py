@@ -130,12 +130,15 @@ def test_rejects_oversized_and_wrong_family(qwen_smoke_cfg,
     cfg, params = qwen_smoke_cfg, qwen_smoke_params
     engine = ContinuousBatchingEngine(cfg, params, capacity=1,
                                       max_len=MAX_LEN)
-    with pytest.raises(ValueError, match="exceeds max_len"):
-        engine.submit(Request(uid=0,
-                              prompt=np.zeros(MAX_LEN, np.int32),
-                              max_new_tokens=4))
+    # an oversize request is RECORDED, not raised — raising mid-trace used
+    # to kill the whole replay; the engine keeps serving around it
+    engine.submit(Request(uid=0, prompt=np.zeros(MAX_LEN, np.int32),
+                          max_new_tokens=4))
+    assert "exceeds max_len" in engine.rejected[0]
+    assert not engine.waiting and 0 not in engine._seen_uids
     engine.run([Request(uid=7, prompt=np.zeros(4, np.int32),
                         max_new_tokens=2)])
+    assert set(engine.finished) == {7}  # rejection didn't stop serving
     with pytest.raises(ValueError, match="already submitted"):
         engine.submit(Request(uid=7, prompt=np.zeros(4, np.int32),
                               max_new_tokens=2))
