@@ -97,7 +97,8 @@ POLICIES = ("fifo", "spf")
 _WINDOW_COUNTERS = (
     "n_decode_dispatches", "n_decode_steps", "n_prefills", "n_host_syncs",
     "n_tokens", "n_spec_proposed", "n_spec_accepted", "n_admitted",
-    "n_prefix_hits", "n_prefix_misses", "n_pages_allocated",
+    "n_prefix_hits", "n_prefix_misses", "n_prefix_stalls",
+    "n_pages_allocated",
 )
 
 
@@ -421,6 +422,7 @@ class ContinuousBatchingEngine:
         self.n_admitted = 0  # requests that got a slot (+pages if paged)
         self.n_prefix_hits = 0  # admissions served from resident pages
         self.n_prefix_misses = 0  # prefix probes that found no full chain
+        self.n_prefix_stalls = 0  # hits deferred on tail-page backpressure
         self.n_pages_allocated = 0  # fresh target-pool pages handed out
         # drained-window history (satellite: drain() snapshots + resets
         # the window counters; lifetime totals live here)
@@ -486,6 +488,20 @@ class ContinuousBatchingEngine:
                 f"prompt {len(req.prompt)} + {req.max_new_tokens} new "
                 f"tokens exceeds max_len {self.max_len}")
             return
+        for meta in self._metas:
+            if meta is None:
+                continue
+            need = paged_lib.pages_needed(
+                len(req.prompt), req.max_new_tokens, meta)
+            if need > meta.n_pages:
+                # a request no eviction wave can ever make room for must
+                # not enter the queue: _admit_batch would push it back to
+                # the front forever and livelock the whole server
+                self.rejected[req.uid] = (
+                    f"needs {need} pages but the arena holds only "
+                    f"{meta.n_pages} (raise --pages or shrink the "
+                    f"request)")
+                return
         self._seen_uids.add(req.uid)
         self.waiting.append(req)
 
@@ -553,16 +569,30 @@ class ContinuousBatchingEngine:
             share = (P - 1) // meta.page  # >= 1 private tail token stays
             resident = alloc.lookup(digests[:share]) if share > 0 else None
             if resident is not None:
+                # Pin the resident pages BEFORE the tail alloc: under
+                # memory pressure alloc() reclaims zero-ref LRU-retained
+                # pages, which can include the very pages lookup() just
+                # returned — the same physical page would then serve as
+                # both a shared prefix page and a private tail page of
+                # this slot, and tail writes would corrupt the prefix KV.
+                alloc.incref(resident)
                 total = paged_lib.pages_needed(P, req.max_new_tokens, meta)
                 tail = alloc.alloc(total - share)
-                if tail is not None:
-                    alloc.incref(resident)
-                    info.update(hit=True, share=share)
-                    info["pids"][0] = list(resident) + tail
-                    self.n_prefix_hits += 1
-                    self.n_pages_allocated += len(tail)
-                    return info
-            self.n_prefix_misses += 1
+                if tail is None:
+                    # Tail backpressure, NOT a registry miss: unpin and
+                    # wait for the next eviction wave.  (A fresh full
+                    # alloc of ``total > tail`` pages cannot succeed
+                    # either, so don't fall through to the miss path.)
+                    self._zero_pending[0].extend(alloc.release(resident))
+                    self.n_prefix_stalls += 1
+                    return None
+                info.update(hit=True, share=share)
+                info["pids"][0] = list(resident) + tail
+                self.n_prefix_hits += 1
+                self.n_pages_allocated += len(tail)
+                return info
+            if share > 0:
+                self.n_prefix_misses += 1
         got = []
         for pi, (meta, alloc) in enumerate(zip(self._metas, self._allocs)):
             if meta is None:

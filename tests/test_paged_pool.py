@@ -268,6 +268,83 @@ def test_prefix_hit_skips_prefill_token_exact(qwen_smoke_cfg,
     _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
 
 
+def test_prefix_hit_under_pressure_pins_resident_pages(
+        qwen_smoke_cfg, qwen_smoke_params, monkeypatch):
+    """Regression: a prefix-hit admission must pin (incref) the resident
+    pages BEFORE allocating its tail.  With a dry free list, alloc()
+    reclaims zero-ref LRU-retained pages — previously including the very
+    pages the lookup just returned, so one physical page served as both
+    shared prefix and private tail of the same slot (pids like
+    ``[3, 4, 5, 3]``) and tail writes aliased the prefix KV.  The fixed
+    path stalls the hit (telemetry: ``n_prefix_stalls``, not a registry
+    miss) until pages free up; no admission record may ever book the
+    same page twice."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    prefix = lm_batch(cfg.vocab_size, 1, 17, seed=600)[0]
+    long_runner = Request(uid=0,
+                          prompt=lm_batch(cfg.vocab_size, 1, 9,
+                                          seed=601)[0],
+                          max_new_tokens=15)  # 3 pages, held for many steps
+    registrar = Request(uid=1, prompt=prefix, max_new_tokens=1)  # 3 pages
+    hitter = Request(uid=2,
+                     prompt=np.concatenate(
+                         [prefix[:16], lm_batch(cfg.vocab_size, 1, 1,
+                                                seed=602)[0]]),
+                     max_new_tokens=14)  # hit: 2 resident + 2 tail pages
+    reqs = [long_runner, registrar, hitter]
+    # arena of 6: wave 1 (long_runner + registrar) takes all 6 pages; by
+    # the hitter's admission only ONE page is free while the 2 resident
+    # pages sit zero-ref in the LRU — exactly the reclaim-aliasing setup
+    engine = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                      max_len=MAX_LEN, prefill_bucket=4,
+                                      k=4, pool="paged", pages=6)
+    orig = ContinuousBatchingEngine._alloc_request
+    double_booked = []
+
+    def checked(self, req):
+        info = orig(self, req)
+        if info is not None:
+            for pids in info["pids"]:
+                if pids and len(set(pids)) != len(pids):
+                    double_booked.append((req.uid, list(pids)))
+        return info
+
+    monkeypatch.setattr(ContinuousBatchingEngine, "_alloc_request",
+                        checked)
+    got = engine.run(_clone(reqs))
+    assert not double_booked  # the direct aliasing signature
+    assert engine.n_prefix_hits == 1
+    assert engine.n_prefix_stalls >= 1  # the hit waited, pages pinned
+    assert engine.n_prefix_misses == 2  # stalls are NOT misses
+    assert engine.pages_highwater <= 6
+    want = _sequential(cfg, params, reqs)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+
+
+def test_unservable_page_budget_rejected_not_livelocked(qwen_smoke_cfg,
+                                                        qwen_smoke_params):
+    """Regression: a request whose page need exceeds the whole arena used
+    to bounce off admission forever (run() livelocked re-queueing it).
+    submit() must reject it up front — recorded, uid reusable — while
+    requests the arena CAN hold keep serving."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    engine = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                      max_len=MAX_LEN, prefill_bucket=4,
+                                      k=4, pool="paged", pages=2)
+    reqs = [Request(uid=0,
+                    prompt=lm_batch(cfg.vocab_size, 1, 9, seed=700)[0],
+                    max_new_tokens=8),   # 3 pages > 2-page arena
+            Request(uid=1,
+                    prompt=lm_batch(cfg.vocab_size, 1, 4, seed=701)[0],
+                    max_new_tokens=3)]   # 1 page: servable
+    got = engine.run(reqs)
+    assert "pages" in engine.rejected[0] and 0 not in got
+    np.testing.assert_array_equal(
+        got[1], _sequential(cfg, params, reqs[1:])[1])
+
+
 def test_cow_divergence_and_refcount_release(qwen_smoke_cfg,
                                              qwen_smoke_params):
     """Copy-on-write: two live requests share resident prefix pages but
