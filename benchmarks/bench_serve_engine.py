@@ -41,13 +41,20 @@ the paged pool (``pool="paged"``) on a mixed trace and a shared-prefix
 trace, recording pages-in-use high-water, prefix-cache hit rate, and
 pages-per-request next to tok/s — the dense-vs-paged pair per trace is
 the direct measure of the paged pool's reservation and re-prefill
-savings.  Partial runs (``--family``, ``--speculate``, ``--pool``) MERGE
-into ``BENCH_serve_engine.json`` — they never clobber the other
+savings.  A ``--chaos`` sweep benches the fault-tolerance layer: the
+``chaos_faultfree`` entry pins the journaling overhead (its
+``host_syncs_per_token`` must match the plain macro entry — flushes
+ride existing readbacks), ``chaos_injected`` records survival rate
+under a seeded nan/oom/slow/malformed plan with every survivor
+token-checked against the fault-free run, and ``chaos_crash`` kills
+the engine mid-trace and records the journal-restart recovery latency.
+Partial runs (``--family``, ``--speculate``, ``--pool``, ``--chaos``)
+MERGE into ``BENCH_serve_engine.json`` — they never clobber the other
 sections' trajectory entries.
 
 Run:  PYTHONPATH=src:. python benchmarks/bench_serve_engine.py [--quick]
           [--family transformer|griffin|xlstm|all|none] [--speculate]
-          [--pool]
+          [--pool] [--chaos]
 """
 from __future__ import annotations
 
@@ -435,12 +442,136 @@ def _bench_pool_modes(quick: bool):
     return results
 
 
+def _bench_chaos(quick: bool):
+    """Fault-tolerance cost and recovery, measured:
+
+      * chaos_faultfree — the same trace on a journal-attached engine
+        with an EMPTY fault plan: its ``host_syncs_per_token`` vs the
+        plain ``macro_k8`` entry is the direct price of journaling
+        (the acceptance bar is: none — flushes ride existing syncs);
+      * chaos_injected  — a seeded plan (nan/oom/slow/malformed) against
+        the same trace: ``survival_rate`` is the fraction of requests
+        finishing normally, and every survivor is asserted token-equal
+        to the fault-free run (a mismatch raises — the bench doubles as
+        an integration check);
+      * chaos_crash     — kill the engine mid-trace, rebuild from the
+        journal, finish: ``recovery_latency_s`` is construction +
+        journal replay + re-admission prefill of the resumed requests
+        (first token of the first resumed request), and survivors are
+        again token-checked.
+    """
+    from repro.serve import (EngineKilled, FaultPlan, RequestJournal,
+                             read_journal, recovery_requests)
+    import tempfile
+
+    cfg = get_config(FAMILY_ARCHS["transformer"])
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    n = 8 if quick else 24
+    capacity, max_len, k = 4, 48, 8
+    reqs = poisson_trace(cfg, n, rate_hz=2000.0, max_gen=8 if quick else 16)
+
+    def fresh():
+        return [Request(uid=r.uid, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens, arrival=r.arrival)
+                for r in reqs]
+
+    warm_engine(cfg, params, reqs, capacity=capacity, max_len=max_len, k=k)
+    results = {}
+    tmp = tempfile.mkdtemp(prefix="chaos_journal_")
+    layout = slot_cache_layout(cfg)
+
+    # fault-free, journal attached: the journaling overhead entry
+    j0 = RequestJournal(f"{tmp}/faultfree.jsonl")
+    e0 = ContinuousBatchingEngine(cfg, params, capacity=capacity,
+                                  max_len=max_len, k=k, journal=j0,
+                                  faults=FaultPlan([]))
+    t0 = time.monotonic()
+    e0.run(fresh(), realtime=True, pipeline=True)
+    dt = time.monotonic() - t0
+    j0.close()
+    want = dict(e0.finished)
+    n_tok = sum(len(v) for v in want.values())
+    results["chaos_faultfree_k8"] = {
+        "tok_per_s": n_tok / dt, "p50_s": 0.0, "p99_s": 0.0,
+        "host_syncs_per_token": e0.n_host_syncs / max(n_tok, 1),
+        "survival_rate": 1.0, "journaled": True, "k": k,
+    }
+
+    # seeded non-crash plan: survival + blast radius
+    plan = FaultPlan.seeded(3, 10, kinds=("nan", "oom", "slow",
+                                          "malformed"), n_faults=3,
+                            slow_s=0.01)
+    e1 = ContinuousBatchingEngine(cfg, params, capacity=capacity,
+                                  max_len=max_len, k=k, faults=plan)
+    t0 = time.monotonic()
+    e1.run(fresh(), realtime=True, pipeline=True)
+    dt = time.monotonic() - t0
+    survived = [u for u in want
+                if e1.outcomes.get(u) == "finished"]
+    mismatch = sum(
+        not np.array_equal(e1.finished[u], want[u]) for u in survived)
+    if mismatch:
+        raise AssertionError(f"{mismatch} survivors token-mismatched "
+                             "under injected faults")
+    n_tok1 = sum(len(v) for v in e1.finished.values())
+    results["chaos_injected_k8"] = {
+        "tok_per_s": n_tok1 / dt, "p50_s": 0.0, "p99_s": 0.0,
+        "survival_rate": len(survived) / len(reqs),
+        "faults_injected": e1.n_faults_injected,
+        "quarantined": e1.n_quarantined, "token_mismatches": 0, "k": k,
+    }
+
+    # crash + journal restart: recovery latency
+    jpath = f"{tmp}/crash.jsonl"
+    j2 = RequestJournal(jpath)
+    e2 = ContinuousBatchingEngine(
+        cfg, params, capacity=capacity, max_len=max_len, k=k, journal=j2,
+        faults=FaultPlan.parse("crash@3"))
+    try:
+        e2.run(fresh(), realtime=True, pipeline=True)
+        raise AssertionError("crash fault never fired")
+    except EngineKilled:
+        j2.close()
+    t0 = time.monotonic()
+    resumed, done = recovery_requests(read_journal(jpath))
+    j3 = RequestJournal(jpath)
+    e3 = ContinuousBatchingEngine(cfg, params, capacity=capacity,
+                                  max_len=max_len, k=k, journal=j3)
+    for r in resumed:
+        e3.submit(r)
+    while not e3.finished and (e3.waiting or e3.active or e3._inflight):
+        e3.step()  # drive until the FIRST resumed request completes
+    recovery_latency = time.monotonic() - t0
+    e3.run([])  # drain the rest
+    j3.close()
+    out = {**done, **e3.finished}
+    mismatch = sum(not np.array_equal(out[u], want[u]) for u in want
+                   if u in out)
+    if mismatch:
+        raise AssertionError(f"{mismatch} resumed requests "
+                             "token-mismatched vs uninterrupted run")
+    results["chaos_crash_k8"] = {
+        "tok_per_s": 0.0, "p50_s": 0.0, "p99_s": 0.0,
+        "recovery_latency_s": recovery_latency,
+        "resumed_requests": len(resumed),
+        "recovered_done": len(done),
+        "survival_rate": len(out) / len(reqs),
+        "token_mismatches": 0, "k": k,
+    }
+    for m in results.values():
+        m["family"] = cfg.family
+        m["cache_layout"] = layout
+    return results
+
+
 def run(quick: bool = False, write_json: bool = True, families=None,
-        speculate: bool = False, kernel: bool = False, pool: bool = False):
+        speculate: bool = False, kernel: bool = False, pool: bool = False,
+        chaos: bool = False):
     families = tuple(FAMILY_ARCHS) if families is None else tuple(families)
     results = {}
     partial = set(families) != set(FAMILY_ARCHS) or speculate or kernel \
-        or pool
+        or pool or chaos
     if write_json and partial:
         # a partial run (--family subset, --speculate) must MERGE into
         # BENCH_serve_engine.json, never erase the other sections'
@@ -468,6 +599,10 @@ def run(quick: bool = False, write_json: bool = True, families=None,
         for key in [k for k in results if k.startswith("pool_")]:
             del results[key]
         results.update(_bench_pool_modes(quick))
+    if chaos:
+        for key in [k for k in results if k.startswith("chaos_")]:
+            del results[key]
+        results.update(_bench_chaos(quick))
 
     for name, m in results.items():
         print(f"serve_{name},tok_per_s,{m['tok_per_s']:.1f}")
@@ -478,6 +613,11 @@ def run(quick: bool = False, write_json: bool = True, families=None,
                   f"{m['host_syncs_per_token']:.3f}")
         if "acceptance_rate" in m:
             print(f"serve_{name},acceptance_rate,{m['acceptance_rate']:.3f}")
+        if "survival_rate" in m:
+            print(f"serve_{name},survival_rate,{m['survival_rate']:.3f}")
+        if "recovery_latency_s" in m:
+            print(f"serve_{name},recovery_latency_s,"
+                  f"{m['recovery_latency_s']:.3f}")
         if m.get("pool") == "paged":
             print(f"serve_{name},pages_highwater,{m['pages_highwater']}")
             print(f"serve_{name},prefix_hit_rate,"
@@ -508,8 +648,14 @@ if __name__ == "__main__":
                     help="also bench dense-vs-paged slot pool pairs on a "
                          "mixed and a shared-prefix trace (pages "
                          "high-water, prefix hit rate recorded)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also bench fault tolerance: journaling "
+                         "overhead, survival under a seeded fault plan "
+                         "(survivors token-checked), and crash+journal "
+                         "recovery latency")
     a = ap.parse_args()
     fams = {"all": tuple(FAMILY_ARCHS), "none": ()}.get(
         a.family, (a.family,))
     run(quick=a.quick, write_json=not a.no_json, families=fams,
-        speculate=a.speculate, kernel=a.kernel, pool=a.pool)
+        speculate=a.speculate, kernel=a.kernel, pool=a.pool,
+        chaos=a.chaos)

@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig6,fig7,transfer,roofline,"
-                         "kernels,serve,spec,servek,servep")
+                         "kernels,serve,spec,servek,servep,servec")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -49,6 +49,10 @@ def main() -> None:
         # dense-vs-paged slot pool pairs only (merges into the serve JSON)
         from benchmarks.bench_serve_engine import run as sv_pool
         sv_pool(quick=args.quick, families=(), pool=True)
+    if section("servec"):
+        # chaos/fault-tolerance sweep only (merges into the serve JSON)
+        from benchmarks.bench_serve_engine import run as sv_chaos
+        sv_chaos(quick=args.quick, families=(), chaos=True)
     if section("fig6"):
         from benchmarks.bench_fig6_rank_ablation import run as f6
         f6(quick=args.quick)

@@ -141,16 +141,17 @@ class CheckpointManager:
         self.every = every
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     def maybe_save(self, step: int, tree: Any, extra=None, force=False):
         if not force and (self.every <= 0 or step % self.every != 0):
             return False
         if self.async_save:
-            self.wait()  # one in flight at a time
+            self.wait()  # one in flight at a time; surfaces prior failure
             host_tree = jax.tree.map(
                 lambda x: np.asarray(jax.device_get(x)), tree)
             self._thread = threading.Thread(
-                target=self._save_and_gc, args=(step, host_tree, extra),
+                target=self._save_bg, args=(step, host_tree, extra),
                 daemon=True)
             self._thread.start()
         else:
@@ -161,10 +162,24 @@ class CheckpointManager:
         save_checkpoint(self.ckpt_dir, step, tree, extra)
         self._gc()
 
+    def _save_bg(self, step, tree, extra):
+        # a daemon thread's traceback otherwise evaporates — and with it
+        # the fact that the checkpoint was silently never written
+        try:
+            self._save_and_gc(step, tree, extra)
+        except BaseException as e:  # noqa: BLE001 — re-raised on wait()
+            self._error = e
+
     def wait(self):
+        """Join the in-flight async save.  If it FAILED, re-raise its
+        exception here (and on the next ``maybe_save``) instead of
+        letting the train loop believe the checkpoint exists."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
         if not os.path.isdir(self.ckpt_dir):

@@ -226,6 +226,28 @@ def main():
     ap.add_argument("--pages", type=int, default=0,
                     help="paged: page-arena depth (0 = capacity * blocks "
                          "per slot, i.e. the dense pool's footprint)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="continuous: per-request TTL in seconds — the "
+                         "watchdog evicts a request this long after its "
+                         "arrival with outcome 'expired' (0 = off)")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="continuous: append-only crash-safe request "
+                         "journal (JSONL); committed tokens flush at "
+                         "block-readback granularity")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay --journal before serving: mid-flight "
+                         "requests re-admit token-exactly (prompt ‖ "
+                         "committed), finished ones are not re-run")
+    ap.add_argument("--snapshot", default=None, metavar="DIR",
+                    help="continuous: write an engine snapshot (weights + "
+                         "geometry, checkpoint format) before serving — "
+                         "restore_engine() rebuilds the engine from it")
+    ap.add_argument("--faults", default=None, metavar="PLAN",
+                    help="continuous: deterministic fault injection — "
+                         "'kind@step[:arg],...' with kinds "
+                         "nan/oom/slow/hang/malformed/crash, or "
+                         "'seed:S[:N]' for a seeded random plan "
+                         "(chaos testing; see serve/faults.py)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).replace(decode_kernel=args.kernel)
@@ -259,6 +281,15 @@ def main():
     if args.engine == "naive" and (args.pool != "dense" or args.pages):
         raise SystemExit("error: --pool/--pages require --engine "
                          "continuous (the naive loop has no slot pool)")
+    if args.engine == "naive" and (args.deadline or args.journal
+                                   or args.resume or args.faults
+                                   or args.snapshot):
+        raise SystemExit("error: --deadline/--journal/--resume/--snapshot/"
+                         "--faults require --engine continuous (the fault "
+                         "tolerance layer lives in the slot-pool engine)")
+    if args.resume and not args.journal:
+        raise SystemExit("error: --resume needs --journal PATH (the "
+                         "journal IS the recovery record)")
     speculative = None
     max_len = args.max_len or (args.prompt_len + args.gen)
     if args.speculate:
@@ -311,26 +342,63 @@ def main():
         print(toks_np[:2])
         return
 
+    from repro.serve import (
+        EngineKilled,
+        FaultPlan,
+        RequestJournal,
+        read_journal,
+        recovery_requests,
+        snapshot_engine,
+    )
+
+    recovered = {}
+    resumed = []
+    if args.resume:
+        st = read_journal(args.journal)
+        resumed, recovered = recovery_requests(st)
+        print(f"[serve] --resume: journal replays {len(st.order)} "
+              f"request(s) — {len(recovered)} already complete, "
+              f"{len(resumed)} re-admitting mid-flight")
+    journal = RequestJournal(args.journal) if args.journal else None
+    faults = FaultPlan.parse(args.faults) if args.faults else None
     engine = ContinuousBatchingEngine(cfg, params, capacity=args.capacity,
                                       max_len=max_len, k=args.k,
                                       policy=args.policy, pool=args.pool,
                                       pages=args.pages or None,
                                       sampling=sampling,
-                                      speculative=speculative)
+                                      speculative=speculative,
+                                      deadline=args.deadline or None,
+                                      journal=journal, faults=faults)
     if args.pool == "paged" and engine.pool_kind == "dense":
         print(f"[serve] --pool paged: {cfg.family}/{engine.cache_layout} "
               "has no pageable KV group — serving dense")
+    if args.snapshot:
+        path = snapshot_engine(engine, args.snapshot)
+        print(f"[serve] engine snapshot -> {path}")
     rng = np.random.default_rng(0)
-    reqs = []
+    reqs = list(resumed)
+    known = {r.uid for r in resumed} | set(recovered)
     for uid in range(args.batch):
+        if uid in known:
+            continue  # --resume already owns this uid
         plen = int(rng.integers(max(1, args.prompt_len // 2),
                                 args.prompt_len + 1))
         prompt = lm_batch(cfg.vocab_size, 1, plen, seed=uid)[0]
         reqs.append(Request(uid=uid, prompt=prompt,
                             max_new_tokens=args.gen, eos_id=args.eos_id))
     t0 = time.time()
-    out = engine.run(reqs)
+    try:
+        out = engine.run(reqs)
+    except EngineKilled as e:
+        # the injected crash: the journal survived, the process "died" —
+        # exit cleanly so the kill/restart smoke can resume us
+        if journal is not None:
+            journal.close()
+        print(f"[serve] ENGINE KILLED ({e}) — journal at {args.journal} "
+              "holds the committed state; rerun with --resume")
+        return
     dt = time.time() - t0
+    out = {**recovered, **out}
     n_tok = sum(len(v) for v in out.values())
     mode = "speculative" if speculative is not None else "continuous"
     spec_note = "" if speculative is None else (
@@ -353,6 +421,17 @@ def main():
         print(f"[{mode}] rejected {len(engine.rejected)} request(s):")
         for uid, why in sorted(engine.rejected.items()):
             print(f"  uid {uid}: {why}")
+    bad = {u: o for u, o in engine.outcomes.items() if o != "finished"}
+    if bad or engine.n_faults_injected:
+        print(f"[{mode}] fault report: {engine.n_faults_injected} "
+              f"fault(s) injected, {engine.n_expired} expired, "
+              f"{engine.n_quarantined} quarantined, {engine.n_shed} shed, "
+              f"{engine.n_spec_fallbacks} spec fallback(s), "
+              f"{engine.n_degraded_admissions} degraded admission(s)")
+        for uid, o in sorted(bad.items()):
+            print(f"  uid {uid}: {o}")
+    if journal is not None:
+        journal.close()
     for uid in sorted(out)[:2]:
         print(uid, out[uid])
 

@@ -1,8 +1,20 @@
 """Continuous-batching serving (slot-pool scheduler over family caches),
-speculative draft/target decoding, and decode-time sampling."""
+speculative draft/target decoding, decode-time sampling, and the fault
+tolerance layer (crash-safe journal + restart, deterministic fault
+injection)."""
 from repro.serve.engine import ContinuousBatchingEngine, Request
+from repro.serve.faults import EngineKilled, Fault, FaultPlan
+from repro.serve.recovery import (
+    RequestJournal,
+    read_journal,
+    recovery_requests,
+    restore_engine,
+    snapshot_engine,
+)
 from repro.serve.sampling import SamplingParams
 from repro.serve.speculative import SpeculativeConfig, spec_pair_supported
 
 __all__ = ["ContinuousBatchingEngine", "Request", "SamplingParams",
-           "SpeculativeConfig", "spec_pair_supported"]
+           "SpeculativeConfig", "spec_pair_supported", "EngineKilled",
+           "Fault", "FaultPlan", "RequestJournal", "read_journal",
+           "recovery_requests", "restore_engine", "snapshot_engine"]

@@ -64,6 +64,18 @@ greedy tokens are *exactly* the sequential ``generate()`` tokens for
 every request, for any interleaving, any K — and any speculation depth:
 a speculative block only ever emits the target's own argmax tokens, so
 acceptance changes speed, never output.
+
+Fault tolerance (PR 7): per-request deadlines and queue-age load
+shedding fold into the same done-mask/eviction machinery; per-slot
+NaN/Inf sentinels computed INSIDE the decode scans ride the existing
+block readback (zero extra host syncs) and quarantine-evict poisoned
+slots; a speculative engine whose draft misbehaves drops to the plain
+macro loop, and a faulted paged arena drops prefix sharing for
+dense-style full reservation.  A :class:`repro.serve.recovery
+.RequestJournal` (``journal=``) makes every committed token crash-safe,
+and a :class:`repro.serve.faults.FaultPlan` (``faults=``) injects
+deterministic failures for the chaos harness.  All of it defaults off:
+the fault-free hot path dispatches exactly as before.
 """
 from __future__ import annotations
 
@@ -78,6 +90,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import get_family, serve_supported, slot_cache_layout
+from repro.serve import faults as faults_lib
 from repro.serve import paged as paged_lib
 from repro.serve import sampling as sampling_lib
 from repro.serve.speculative import (
@@ -98,7 +111,8 @@ _WINDOW_COUNTERS = (
     "n_decode_dispatches", "n_decode_steps", "n_prefills", "n_host_syncs",
     "n_tokens", "n_spec_proposed", "n_spec_accepted", "n_admitted",
     "n_prefix_hits", "n_prefix_misses", "n_prefix_stalls",
-    "n_pages_allocated",
+    "n_pages_allocated", "n_expired", "n_quarantined", "n_shed",
+    "n_spec_fallbacks", "n_faults_injected", "n_degraded_admissions",
 )
 
 
@@ -133,6 +147,7 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key):
     table entries carry the out-of-range page id ``n_pages``.
     """
     sampled = not sampling_lib.is_greedy(sampling)
+    fb_loop = None
     if spec_key is None:
         loop = jax.jit(make_slot_decode_loop(cfg, k, sampling),
                        donate_argnums=(1, 2, 3, 5, 6)
@@ -144,6 +159,12 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key):
                        donate_argnums=(2, 3, 4, 6, 7, 8, 9))
         draft_prefill = jax.jit(make_draft_prefill(cfg_d),
                                 donate_argnums=(3,))
+        # the degradation ladder's target: a plain (non-speculative)
+        # macro loop over the TARGET pool alone, compiled lazily on
+        # first use when the draft misbehaves mid-serve
+        fb_loop = jax.jit(make_slot_decode_loop(cfg, k, sampling),
+                          donate_argnums=(1, 2, 3, 5, 6)
+                          + ((7,) if sampled else ()))
     prefill = jax.jit(make_prefill_admit_step(cfg, sampling),
                       donate_argnums=(3,))
 
@@ -248,17 +269,27 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key):
                     (tokens, positions, remaining, eos, done, keys), first)
 
         hit_admit = jax.jit(hit_fn, donate_argnums=(1, 2))
-    return loop, prefill, draft_prefill, admit, evict, hit_admit
+    return loop, prefill, draft_prefill, admit, evict, hit_admit, fb_loop
 
 
 @dataclasses.dataclass
 class Request:
-    """One generation request."""
+    """One generation request.
+
+    ``deadline`` (seconds from arrival/submission) overrides the
+    engine-wide TTL; ``n_committed`` marks the last N prompt tokens as
+    previously-COMMITTED generated tokens — the journal-resume contract:
+    the "prompt" is the original prompt ‖ the committed run, prefill
+    re-derives the exact next token, and the budget counts the committed
+    run against ``max_new_tokens``.
+    """
     uid: int
     prompt: np.ndarray  # (P,) int32 prompt tokens
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     arrival: float = 0.0  # seconds since trace start (trace replay only)
+    deadline: Optional[float] = None  # per-request TTL override
+    n_committed: int = 0  # journal resume: committed suffix of ``prompt``
 
 
 @dataclasses.dataclass
@@ -309,7 +340,10 @@ class ContinuousBatchingEngine:
                  policy: str = "fifo", pool: str = "dense",
                  pages: Optional[int] = None,
                  sampling: Optional[sampling_lib.SamplingParams] = None,
-                 speculative: Optional[SpeculativeConfig] = None):
+                 speculative: Optional[SpeculativeConfig] = None,
+                 deadline: Optional[float] = None,
+                 shed_age: Optional[float] = None,
+                 journal=None, faults=None):
         if pool not in ("dense", "paged"):
             raise ValueError(f"unknown pool kind {pool!r} "
                              "(choose 'dense' or 'paged')")
@@ -355,6 +389,14 @@ class ContinuousBatchingEngine:
         self.sampling = None if sampling_lib.is_greedy(sampling) \
             else sampling
         self.speculative = speculative
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be > 0 (got {deadline})")
+        if shed_age is not None and shed_age <= 0:
+            raise ValueError(f"shed_age must be > 0 (got {shed_age})")
+        self.deadline = deadline  # engine-wide TTL (seconds); None = off
+        self.shed_age = shed_age  # queue-age load-shed threshold
+        self.journal = journal  # RequestJournal or None
+        self.faults = faults  # FaultPlan or None (chaos harness only)
 
         if pool == "paged" and speculative is not None \
                 and cfg.family != "transformer":
@@ -407,7 +449,17 @@ class ContinuousBatchingEngine:
         self.finished: Dict[int, np.ndarray] = {}
         self.retired: List[_Sequence] = []  # kept for latency accounting
         self.rejected: Dict[int, str] = {}  # uid -> why submit refused it
+        # uid -> terminal outcome: finished / expired / quarantined /
+        # shed / rejected (only "finished" rows are complete outputs)
+        self.outcomes: Dict[int, str] = {}
         self._seen_uids: set = set()
+        self._t_submit: Dict[int, float] = {}  # uid -> wall submit time
+        self._any_deadline = deadline is not None  # fast path when off
+        self._fault_step = 0  # dispatches seen (FaultPlan clock)
+        self._oom_waves = 0  # admission waves stalled by an oom fault
+        self._spec_fallback = False  # draft faulted: plain macro decode
+        self._arena_degraded = False  # paged arena faulted: no sharing
+        self._poison_jit = None  # lazy donated jit of faults.poison_pool
         self._evict_pending: List[int] = []
         # (block, valid, [(slot, uid)], stats) of dispatched-but-unread
         # macro steps
@@ -424,6 +476,12 @@ class ContinuousBatchingEngine:
         self.n_prefix_misses = 0  # prefix probes that found no full chain
         self.n_prefix_stalls = 0  # hits deferred on tail-page backpressure
         self.n_pages_allocated = 0  # fresh target-pool pages handed out
+        self.n_expired = 0  # deadline-evicted requests (active or queued)
+        self.n_quarantined = 0  # NaN/Inf-poisoned slots evicted
+        self.n_shed = 0  # queued requests dropped by queue-age shedding
+        self.n_spec_fallbacks = 0  # draft faults that tripped plain decode
+        self.n_faults_injected = 0  # FaultPlan records actually fired
+        self.n_degraded_admissions = 0  # full-reservation paged admissions
         # drained-window history (satellite: drain() snapshots + resets
         # the window counters; lifetime totals live here)
         self.lifetime: Dict[str, int] = {c: 0 for c in _WINDOW_COUNTERS}
@@ -431,7 +489,7 @@ class ContinuousBatchingEngine:
         spec_key = None if speculative is None \
             else (speculative.cfg, speculative.d)
         (self._loop, self._prefill, self._draft_prefill, self._admit,
-         self._evict, self._hit_admit) = _jitted_engine_fns(
+         self._evict, self._hit_admit, self._fb_loop) = _jitted_engine_fns(
             cfg, k, self.sampling, spec_key, self._metas)
 
     @property
@@ -471,38 +529,73 @@ class ContinuousBatchingEngine:
                 for c in _WINDOW_COUNTERS}
 
     # ------------------------------------------------------------- admission
-    def submit(self, req: Request):
-        if req.uid in self._seen_uids:
-            raise ValueError(f"request uid {req.uid} already submitted")
+    def _reject(self, uid: int, why: str):
+        """Graceful rejection: record, journal, keep serving.  The uid is
+        NOT marked seen — a corrected resubmission is fine."""
+        self.rejected[uid] = why
+        self.outcomes[uid] = "rejected"
+        if self.journal is not None:
+            self.journal.record_reject(uid, why)
+
+    def _invalid_reason(self, req: Request) -> Optional[str]:
+        """Every malformed-request class, in one place.  A mid-trace bad
+        request must never raise out of ``submit`` — a replayed trace (or
+        a hostile client) would otherwise kill every in-flight sequence
+        over one request that was never servable anyway."""
+        P, nc = len(req.prompt), req.n_committed
         if req.max_new_tokens < 1:
-            raise ValueError(
-                f"request {req.uid}: max_new_tokens must be >= 1 "
-                "(prefill always emits the first token)")
-        if len(req.prompt) < 1:
-            raise ValueError(f"request {req.uid}: empty prompt")
-        if len(req.prompt) + req.max_new_tokens > self.max_len:
-            # an oversize request in the middle of a trace must not kill
-            # the replay: record it and keep serving.  (It is NOT marked
-            # seen — a corrected resubmission under the same uid is fine.)
-            self.rejected[req.uid] = (
-                f"prompt {len(req.prompt)} + {req.max_new_tokens} new "
-                f"tokens exceeds max_len {self.max_len}")
-            return
+            return ("max_new_tokens must be >= 1 "
+                    "(prefill always emits the first token)")
+        if P < 1:
+            return "empty prompt"
+        if not (0 <= nc < req.max_new_tokens and nc < P):
+            return (f"n_committed {nc} must lie in [0, max_new_tokens) "
+                    "and leave at least one real prompt token")
+        if req.eos_id is not None and not (
+                0 <= req.eos_id < self.cfg.vocab_size):
+            return (f"eos_id {req.eos_id} outside the vocabulary "
+                    f"[0, {self.cfg.vocab_size})")
+        if req.deadline is not None and req.deadline <= 0:
+            return f"deadline must be > 0 (got {req.deadline})"
+        toks = np.asarray(req.prompt)
+        if toks.size and (int(toks.min()) < 0
+                          or int(toks.max()) >= self.cfg.vocab_size):
+            return (f"prompt tokens outside the vocabulary "
+                    f"[0, {self.cfg.vocab_size})")
+        # a resumed request's committed run sits in its prompt, so the
+        # cache needs P - nc original + max_new positions, not P + max_new
+        if P - nc + req.max_new_tokens > self.max_len:
+            return (f"prompt {P - nc} + {req.max_new_tokens} new tokens "
+                    f"exceeds max_len {self.max_len}")
         for meta in self._metas:
             if meta is None:
                 continue
-            need = paged_lib.pages_needed(
-                len(req.prompt), req.max_new_tokens, meta)
+            need = paged_lib.pages_needed(P, req.max_new_tokens - nc, meta)
             if need > meta.n_pages:
                 # a request no eviction wave can ever make room for must
                 # not enter the queue: _admit_batch would push it back to
                 # the front forever and livelock the whole server
-                self.rejected[req.uid] = (
-                    f"needs {need} pages but the arena holds only "
-                    f"{meta.n_pages} (raise --pages or shrink the "
-                    f"request)")
-                return
+                return (f"needs {need} pages but the arena holds only "
+                        f"{meta.n_pages} (raise --pages or shrink the "
+                        f"request)")
+        return None
+
+    def submit(self, req: Request):
+        if req.uid in self._seen_uids:
+            # a DUPLICATE uid is a caller bug, not a malformed request:
+            # silently rejecting it would orphan the caller's wait on
+            # the first submission's output
+            raise ValueError(f"request uid {req.uid} already submitted")
+        why = self._invalid_reason(req)
+        if why is not None:
+            self._reject(req.uid, f"request {req.uid}: {why}")
+            return
         self._seen_uids.add(req.uid)
+        self._t_submit[req.uid] = time.monotonic()
+        if req.deadline is not None:
+            self._any_deadline = True
+        if self.journal is not None:
+            self.journal.record_submit(req)
         self.waiting.append(req)
 
     def _bucketed(self, n: int) -> int:
@@ -560,9 +653,10 @@ class ContinuousBatchingEngine:
         no-prefill admission path.
         """
         P = len(req.prompt)
+        n_new = req.max_new_tokens - req.n_committed
         info = {"hit": False, "share": 0, "digests": None,
                 "pids": [None] * len(self._pools)}
-        if self._prefix_ok:
+        if self._prefix_ok and not self._arena_degraded:
             meta, alloc = self._metas[0], self._allocs[0]
             digests = paged_lib.prefix_digests(req.prompt, meta.page)
             info["digests"] = digests
@@ -576,7 +670,7 @@ class ContinuousBatchingEngine:
                 # both a shared prefix page and a private tail page of
                 # this slot, and tail writes would corrupt the prefix KV.
                 alloc.incref(resident)
-                total = paged_lib.pages_needed(P, req.max_new_tokens, meta)
+                total = paged_lib.pages_needed(P, n_new, meta)
                 tail = alloc.alloc(total - share)
                 if tail is None:
                     # Tail backpressure, NOT a registry miss: unpin and
@@ -597,8 +691,13 @@ class ContinuousBatchingEngine:
         for pi, (meta, alloc) in enumerate(zip(self._metas, self._allocs)):
             if meta is None:
                 continue
-            pids = alloc.alloc(
-                paged_lib.pages_needed(P, req.max_new_tokens, meta))
+            # degradation ladder: once the arena has seen a poisoned slot,
+            # sharing is off and every admission reserves its FULL block
+            # table (dense-pool semantics on paged storage) — worst-case
+            # isolation in exchange for capacity
+            need = meta.nblk if self._arena_degraded \
+                else paged_lib.pages_needed(P, n_new, meta)
+            pids = alloc.alloc(need)
             if pids is None:
                 # roll the earlier pools back; the zeroing rides the next
                 # eviction scatter (before any page can be re-handed out)
@@ -610,6 +709,8 @@ class ContinuousBatchingEngine:
             info["pids"][pi] = pids
             if pi == 0:
                 self.n_pages_allocated += len(pids)
+        if got and self._arena_degraded:
+            self.n_degraded_admissions += 1
         return info
 
     def _admit_batch(self, now: Optional[float]):
@@ -623,6 +724,12 @@ class ContinuousBatchingEngine:
         the FRONT of the queue, preserving order), and the prefix probe
         that diverts full-chain hits to the no-prefill admission path.
         """
+        if self._oom_waves > 0:
+            # injected allocator exhaustion: this wave admits nothing
+            # (requests stay queued — exactly the page-backpressure path)
+            if self.waiting:
+                self._oom_waves -= 1
+            return
         grabbed = self._select_admissions(now)
         if not grabbed:
             return
@@ -668,7 +775,9 @@ class ContinuousBatchingEngine:
             for j, (r, a) in enumerate(group):
                 plens[j] = len(r.prompt)
                 padded[j, :plens[j]] = r.prompt
-                rem0[j] = r.max_new_tokens - 1
+                # a resume's committed run is part of its prompt and
+                # already spent that much budget
+                rem0[j] = r.max_new_tokens - r.n_committed - 1
                 eos_new[j] = -1 if r.eos_id is None else r.eos_id
                 slots[j] = self.free.pop()
                 if a is not None:
@@ -687,12 +796,17 @@ class ContinuousBatchingEngine:
                 keys_dev = jnp.zeros((npad, 2), jnp.uint32)
             else:
                 # chain roots are derived from (seed, uid) ON DEVICE in
-                # the same prefill dispatch — no key round-trip/sync
+                # the same prefill dispatch — no key round-trip/sync;
+                # ``skips`` replays a resume's committed-run chain splits
+                # so its first fresh sample draws from the same chain
+                # position as the uninterrupted run
                 uids = np.zeros((npad,), np.int32)
                 uids[:n] = [r.uid for r, _ in group]
+                skips = np.zeros((npad,), np.int32)
+                skips[:n] = [r.n_committed for r, _ in group]
                 first, rows[0], keys_dev = self._prefill(
                     self.params, jnp.asarray(padded), jnp.asarray(plens),
-                    rows[0], jnp.asarray(uids))
+                    rows[0], jnp.asarray(uids), jnp.asarray(skips))
             if self.speculative is not None:
                 # the draft pool admits the SAME prompt rows: its per-row
                 # state after the real prompt, first token comes from the
@@ -714,11 +828,19 @@ class ContinuousBatchingEngine:
             self.n_host_syncs += 1
             t = time.monotonic()
             for j, (r, a) in enumerate(group):
+                # a resume re-enters holding its committed run: output
+                # continuity without replaying already-delivered tokens
+                prior = [int(x) for x in
+                         r.prompt[len(r.prompt) - r.n_committed:]] \
+                    if r.n_committed else []
                 seq = _Sequence(r, int(slots[j]), pos=int(plens[j]),
-                                tokens=[int(first_host[j])], t_first=t)
+                                tokens=prior + [int(first_host[j])],
+                                t_first=t)
                 self.active[seq.slot] = seq
                 self.n_tokens += 1
                 self.n_admitted += 1
+                if self.journal is not None:
+                    self.journal.record_tokens(r.uid, [int(first_host[j])])
                 if a is not None and self._prefix_ok and a["digests"]:
                     # pages fully covered by the prompt now hold its
                     # canonical prefill-built KV — make them shareable.
@@ -729,6 +851,9 @@ class ContinuousBatchingEngine:
                         self._allocs[0].register(a["digests"][:reg],
                                                  a["pids"][0][:reg])
                 self._finish_if_done(seq, seq.tokens[-1])
+            if self.journal is not None:
+                # ride the admission host sync that just happened
+                self.journal.flush()
 
     def _admit_hits(self, pairs):
         """No-prefill admission: point the slots' leading block-table
@@ -756,7 +881,7 @@ class ContinuousBatchingEngine:
             tail_len[j] = len(tail)
             tail_tokens[j, :len(tail)] = tail
             plens[j] = len(r.prompt)
-            rem0[j] = r.max_new_tokens - 1
+            rem0[j] = r.max_new_tokens - r.n_committed - 1
             eos_new[j] = -1 if r.eos_id is None else r.eos_id
         self._pools, self._state, first = self._hit_admit(
             self.params, self._pools, self._state, jnp.asarray(slots),
@@ -768,12 +893,20 @@ class ContinuousBatchingEngine:
         t = time.monotonic()
         for j, (r, a) in enumerate(pairs):
             slot = int(slots[j])
+            prior = [int(x) for x in
+                     r.prompt[len(r.prompt) - r.n_committed:]] \
+                if r.n_committed else []
             seq = _Sequence(r, slot, pos=int(plens[j]),
-                            tokens=[int(first_host[slot])], t_first=t)
+                            tokens=prior + [int(first_host[slot])],
+                            t_first=t)
             self.active[slot] = seq
             self.n_tokens += 1
             self.n_admitted += 1
+            if self.journal is not None:
+                self.journal.record_tokens(r.uid, [int(first_host[slot])])
             self._finish_if_done(seq, seq.tokens[-1])
+        if self.journal is not None:
+            self.journal.flush()
 
     # ------------------------------------------------------------- lifecycle
     def _finish_if_done(self, seq: _Sequence, last_token: int):
@@ -784,8 +917,18 @@ class ContinuousBatchingEngine:
                     and last_token == seq.req.eos_id))
         if not done:
             return
+        self._retire(seq, "finished")
+
+    def _retire(self, seq: _Sequence, outcome: str):
+        """Retire a sequence with a terminal ``outcome`` — the shared
+        tail of normal completion AND forced eviction (expiry,
+        quarantine).  Partial tokens are still delivered: a request the
+        watchdog killed keeps everything it committed."""
         seq.t_done = time.monotonic()
         self.finished[seq.req.uid] = np.asarray(seq.tokens, np.int32)
+        self.outcomes[seq.req.uid] = outcome
+        if self.journal is not None:
+            self.journal.record_finish(seq.req.uid, outcome)
         self.retired.append(seq)
         del self.active[seq.slot]
         # the slot re-enters ``free`` only once its eviction has been
@@ -793,6 +936,72 @@ class ContinuousBatchingEngine:
         # same-wave admission claim it and then be wiped by the pending
         # zero-evict
         self._evict_pending.append(seq.slot)
+
+    def _quarantine(self, seq: _Sequence):
+        """Evict a slot whose logits went non-finite.  The device row
+        already froze itself (the in-scan sentinel folds into the done
+        mask at the bad step, committing nothing from it), so quarantine
+        is an ordinary forced retirement — plus arena degradation: a
+        paged pool can no longer trust resident prefix pages, so the
+        registry is flushed and admissions fall back to full
+        reservation."""
+        self.n_quarantined += 1
+        self._retire(seq, "quarantined")
+        if self._metas[0] is not None and not self._arena_degraded:
+            self._arena_degraded = True
+            self._zero_pending[0].extend(self._allocs[0].flush_registry())
+            self._prefix_ok = False
+
+    def _deadline_of(self, req: Request) -> Optional[float]:
+        return req.deadline if req.deadline is not None else self.deadline
+
+    def _age(self, req: Request, now: Optional[float]) -> float:
+        """Seconds since the request entered the system: trace-clock when
+        replaying arrivals, wall-clock since ``submit`` otherwise."""
+        if now is not None:
+            return now - req.arrival
+        return time.monotonic() - self._t_submit.get(req.uid,
+                                                     time.monotonic())
+
+    def _expire(self, now: Optional[float]):
+        """Deadline watchdog + queue-age load shedding.  No-op (single
+        dict check) unless a TTL or shed threshold is configured, so the
+        fault-free path pays nothing."""
+        if not self._any_deadline and self.shed_age is None:
+            return
+        for seq in list(self.active.values()):
+            ddl = self._deadline_of(seq.req)
+            if ddl is not None and self._age(seq.req, now) > ddl:
+                self.n_expired += 1
+                self._retire(seq, "expired")
+        if not self.waiting:
+            return
+        keep = collections.deque()
+        for r in self.waiting:
+            age = self._age(r, now)
+            ddl = self._deadline_of(r)
+            if ddl is not None and age > ddl:
+                # expired before ever getting a slot: empty output, same
+                # terminal telemetry as an active expiry
+                self.n_expired += 1
+                self.finished[r.uid] = np.zeros((0,), np.int32)
+                self.outcomes[r.uid] = "expired"
+                if self.journal is not None:
+                    self.journal.record_finish(r.uid, "expired")
+            elif self.shed_age is not None and age > self.shed_age:
+                # sustained backpressure: drop the oldest queued work
+                # with an explicit outcome instead of serving everyone
+                # late; the uid may be resubmitted after the storm
+                self.n_shed += 1
+                self.outcomes[r.uid] = "shed"
+                self.rejected[r.uid] = (
+                    f"shed after {age:.3f}s queued (> {self.shed_age})")
+                self._seen_uids.discard(r.uid)
+                if self.journal is not None:
+                    self.journal.record_finish(r.uid, "shed")
+            else:
+                keep.append(r)
+        self.waiting = keep
 
     def _flush_evictions(self):
         """Zero-evict retired slots and reset their decode state, batched
@@ -855,41 +1064,98 @@ class ContinuousBatchingEngine:
         self.free.extend(self._evict_pending)
         self._evict_pending.clear()
 
+    # ---------------------------------------------------------------- faults
+    def _inject(self, f):
+        """Fire one FaultPlan record.  Called from ``_dispatch`` only
+        when a plan is attached — the default path never gets here."""
+        self.n_faults_injected += 1
+        if f.kind == "crash":
+            # kill -9 at a step boundary: journaled state survives,
+            # unread in-flight blocks do not
+            if self.journal is not None:
+                self.journal.flush()
+            raise faults_lib.EngineKilled(
+                f"injected crash at engine step {self._fault_step}")
+        if f.kind in ("slow", "hang"):
+            time.sleep(f.duration)
+            return
+        if f.kind == "oom":
+            self._oom_waves += max(int(f.duration), 1)
+            return
+        if f.kind == "malformed":
+            # a hostile request arriving mid-trace; the unified rejection
+            # path must absorb it without disturbing in-flight work
+            self.submit(Request(uid=-(1000 + self._fault_step),
+                                prompt=np.zeros((0,), np.int32),
+                                max_new_tokens=1))
+            return
+        # kind == "nan": corrupt a live slot's cache bytes on device —
+        # the NaN flows through real attention into real logits, where
+        # the in-scan sentinel must catch it
+        slot = f.slot if f.slot in self.active else (
+            min(self.active) if self.active else None)
+        if slot is None or f.pool >= len(self._pools):
+            return
+        if self._poison_jit is None:
+            self._poison_jit = jax.jit(faults_lib.poison_pool,
+                                       donate_argnums=(0,))
+        meta = self._metas[f.pool]
+        # paged pools poison the slot's first page (attention reads it
+        # every step); the page id also guards dense engines, where it
+        # is simply unused
+        pid = self._slot_pages[slot][f.pool][0] if meta is not None else 0
+        pools = list(self._pools)
+        pools[f.pool] = self._poison_jit(pools[f.pool], jnp.int32(slot),
+                                         jnp.int32(pid))
+        self._pools = tuple(pools)
+
     # ------------------------------------------------------------- step loop
     def _dispatch(self):
         """Launch one on-device macro step (K decode steps — or K whole
         speculative draft→verify→commit blocks — with no sync)."""
+        if self.faults is not None:
+            self._fault_step += 1
+            for f in self.faults.due(self._fault_step):
+                self._inject(f)
         tokens, positions, remaining, eos_ids, done, keys = self._state
         stats = None
-        if self.speculative is not None:
-            (block, valid, tokens, positions, remaining, done, pool_t,
-             pool_d, keys, n_prop, n_acc) = self._loop(
+        dbad = None
+        if self.speculative is not None and not self._spec_fallback:
+            (block, valid, poison, dbad, tokens, positions, remaining,
+             done, pool_t, pool_d, keys, n_prop, n_acc) = self._loop(
                 self.params, self.speculative.params, tokens, positions,
                 remaining, eos_ids, done, self._pools[0], self._pools[1],
                 keys)
             self._pools = (pool_t, pool_d)
             stats = (n_prop, n_acc)
-        elif self.sampling is not None:
-            (block, valid, tokens, positions, remaining, done, pool,
-             keys) = self._loop(self.params, tokens, positions, remaining,
-                                eos_ids, done, self._pools[0], keys)
-            self._pools = (pool,)
         else:
-            (block, valid, tokens, positions, remaining, done,
-             pool) = self._loop(self.params, tokens, positions, remaining,
-                                eos_ids, done, self._pools[0])
-            self._pools = (pool,)
+            # _fb_loop: a speculative engine whose draft misbehaved keeps
+            # serving through the plain macro loop on its TARGET pool
+            loop = self._fb_loop if self._spec_fallback else self._loop
+            if self.sampling is not None:
+                (block, valid, poison, tokens, positions, remaining, done,
+                 pool, keys) = loop(self.params, tokens, positions,
+                                    remaining, eos_ids, done,
+                                    self._pools[0], keys)
+            else:
+                (block, valid, poison, tokens, positions, remaining, done,
+                 pool) = loop(self.params, tokens, positions, remaining,
+                              eos_ids, done, self._pools[0])
+            self._pools = (pool,) + self._pools[1:]
         self._state = (tokens, positions, remaining, eos_ids, done, keys)
         self.n_decode_dispatches += 1
         self.n_decode_steps += self.k
         live = [(slot, seq.req.uid) for slot, seq in self.active.items()]
-        self._inflight.append((block, valid, live, stats))
+        self._inflight.append((block, valid, poison, dbad, live, stats))
 
     def _process(self, item):
         """Block on one macro step's token block (the single host sync per
-        dispatch) and advance the host-side sequence records."""
-        block, valid, live, stats = item
-        block, valid, stats = jax.device_get((block, valid, stats))
+        dispatch) and advance the host-side sequence records.  The
+        NaN/Inf sentinels and the journal's committed-token deltas ride
+        this same readback — fault tolerance adds no host sync."""
+        block, valid, poison, dbad, live, stats = item
+        block, valid, poison, dbad, stats = jax.device_get(
+            (block, valid, poison, dbad, stats))
         self.n_host_syncs += 1
         if stats is not None:
             # acceptance telemetry rides the same readback — no extra sync
@@ -904,16 +1170,30 @@ class ContinuousBatchingEngine:
                 continue
             vm = valid[:, slot]
             nv = int(vm.sum())
-            if nv == 0:
-                continue
-            seq.pos += nv
-            seq.tokens.extend(int(t) for t in block[:, slot][vm])
-            self.n_tokens += nv
-            self._finish_if_done(seq, seq.tokens[-1])
+            if nv:
+                new = [int(t) for t in block[:, slot][vm]]
+                seq.pos += nv
+                seq.tokens.extend(new)
+                self.n_tokens += nv
+                if self.journal is not None:
+                    self.journal.record_tokens(uid, new)
+                self._finish_if_done(seq, seq.tokens[-1])
+            if bool(poison[slot]) and self.active.get(slot) is seq:
+                # the row froze itself at the bad step (nothing from it
+                # was committed); evict it with an explicit outcome
+                self._quarantine(seq)
+        if dbad is not None and bool(dbad) and not self._spec_fallback:
+            # degradation ladder: draft logits went non-finite — keep
+            # serving every request through the plain target-only loop
+            self._spec_fallback = True
+            self.n_spec_fallbacks += 1
+        if self.journal is not None:
+            self.journal.flush()
 
     def step(self, now: Optional[float] = None):
-        """One synchronous engine iteration: evict, admit arrived requests
-        into free slots, run one macro step, and read it back."""
+        """One synchronous engine iteration: expire, evict, admit arrived
+        requests into free slots, run one macro step, and read it back."""
+        self._expire(now)
         self._flush_evictions()
         self._admit_batch(now)
         if not self.active and not self._inflight:
@@ -968,6 +1248,7 @@ class ContinuousBatchingEngine:
                     if nxt > now:
                         time.sleep(nxt - now)
                         now = wall_now()
+                self._expire(now)
                 self._flush_evictions()
                 self._admit_batch(now)
                 if self.active:
@@ -997,7 +1278,10 @@ class ContinuousBatchingEngine:
         self.finished = {}
         self.retired = []
         self.rejected = {}
+        self.outcomes = {}
         self._seen_uids.difference_update(out)
+        for uid in out:
+            self._t_submit.pop(uid, None)
         for c in _WINDOW_COUNTERS:
             self.lifetime[c] += getattr(self, c)
             setattr(self, c, 0)

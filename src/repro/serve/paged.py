@@ -333,6 +333,26 @@ class PageAllocator:
             self.registry[d] = pid
             self.page_key[pid] = d
 
+    def flush_registry(self) -> list[int]:
+        """Drop the entire prefix registry — the arena-fault degradation
+        path: once a poisoned slot may have flowed NaNs through shared
+        pages, no resident prefix can be trusted for reuse.
+
+        Zero-ref retained pages return to the free list; their ids are
+        returned so the engine can zero their bytes in the next eviction
+        scatter.  Pages still referenced by live slots are merely
+        unregistered: their current holders keep decoding, and when the
+        last reference drops, ``release`` now zeroes and frees them like
+        any private page.
+        """
+        zero = list(self.lru.keys())
+        for pid in zero:
+            self.free.append(pid)
+        self.lru.clear()
+        self.registry.clear()
+        self.page_key.clear()
+        return zero
+
     def lookup(self, digests) -> Optional[list[int]]:
         """Resolve a FULL chain of share digests to resident pages.
         Partial chains are misses: the tail-prefill contract needs every

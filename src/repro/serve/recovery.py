@@ -1,0 +1,287 @@
+"""Crash-safe request journal + engine snapshot/restore.
+
+The engine's slot-state protocol already makes every sequence a pure
+function of (params, prompt, committed tokens, per-request PRNG chain) —
+greedy decode is deterministic, and a sampled request's chain position
+always equals its generated-token count.  So fault tolerance does not
+need device-state checkpoints at all: journal WHAT was committed, and a
+restarted engine re-derives the rest by prefilling ``prompt ‖ committed``
+through the ordinary admission path.
+
+Journal format
+--------------
+Append-only JSONL, one record per line:
+
+    {"t": "submit", "uid", "prompt": [...], "max_new_tokens",
+     "eos_id", "n_committed", "deadline"}
+    {"t": "tok", "uid", "toks": [...]}     # committed-token delta
+    {"t": "fin", "uid", "outcome"}         # finished/expired/quarantined/…
+    {"t": "rej", "uid", "why"}             # submit() refused it
+
+Buffered records are flushed ONLY at block-readback granularity — the
+points where the engine already pays a host sync — so journaling adds
+zero syncs to the hot loop.  The reader tolerates a torn tail (a crash
+mid-write leaves at most one unparseable last line) and applies
+last-submit-wins per uid: a resumed request re-submits with its
+committed run folded into ``prompt`` and counted by ``n_committed``, so
+one journal file survives any number of crash/restart cycles.
+
+Token-exactness caveat: per-TOKEN chains make greedy and sampled macro
+decode resume token-exactly.  Speculative SAMPLED decode advances one
+chain split per speculative block (not per token), so its resume is
+distribution-preserving but not replay-exact; greedy speculative decode
+never consumes chain splits and stays token-exact.
+
+Snapshot/restore
+----------------
+``snapshot_engine`` persists the weights (target + draft) through
+``checkpoint/manager.py``'s atomic CRC-checked format, with the full
+engine geometry in the manifest's ``extra``; ``restore_engine`` rebuilds
+an equivalent engine from the snapshot alone.  Weights change rarely
+(hot-swap growth events), the journal changes every block — separating
+the two keeps the per-block fault-tolerance cost at one buffered write.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import (
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.serve.engine import ContinuousBatchingEngine, Request
+from repro.serve.sampling import SamplingParams
+from repro.serve.speculative import SpeculativeConfig
+
+
+class RequestJournal:
+    """Append-only journal of request lifecycle events.
+
+    Writes are buffered in memory; ``flush()`` is called by the engine
+    only where it already blocks on a device readback, so the journal
+    never adds a host sync.  ``fsync=True`` additionally fsyncs every
+    flush (true crash safety at ~ms cost per block; the default relies
+    on OS page-cache survival, which covers process kills).
+    """
+
+    def __init__(self, path: str, *, fsync: bool = False):
+        self.path = path
+        self.fsync = fsync
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8")
+        self._buf: List[str] = []
+
+    # ------------------------------------------------------------- records
+    def record_submit(self, req: Request) -> None:
+        self._buf.append(json.dumps({
+            "t": "submit", "uid": int(req.uid),
+            "prompt": [int(x) for x in req.prompt],
+            "max_new_tokens": int(req.max_new_tokens),
+            "eos_id": None if req.eos_id is None else int(req.eos_id),
+            "n_committed": int(getattr(req, "n_committed", 0)),
+            "deadline": getattr(req, "deadline", None),
+        }))
+
+    def record_tokens(self, uid: int, toks) -> None:
+        if len(toks):
+            self._buf.append(json.dumps(
+                {"t": "tok", "uid": int(uid),
+                 "toks": [int(t) for t in toks]}))
+
+    def record_finish(self, uid: int, outcome: str) -> None:
+        self._buf.append(json.dumps(
+            {"t": "fin", "uid": int(uid), "outcome": outcome}))
+
+    def record_reject(self, uid: int, why: str) -> None:
+        self._buf.append(json.dumps(
+            {"t": "rej", "uid": int(uid), "why": why}))
+
+    # ------------------------------------------------------------- plumbing
+    def flush(self) -> None:
+        if not self._buf:
+            return
+        self._f.write("\n".join(self._buf) + "\n")
+        self._buf.clear()
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        self.flush()
+        self._f.close()
+
+
+@dataclasses.dataclass
+class JournalState:
+    """Reconstructed view of a journal file."""
+    submits: Dict[int, dict]          # uid -> latest submit record
+    committed: Dict[int, List[int]]   # uid -> all committed tokens so far
+    finished: Dict[int, str]          # uid -> outcome (terminal records)
+    order: List[int]                  # uids in (first-)submission order
+
+
+def read_journal(path: str) -> JournalState:
+    """Replay a journal.  Torn tails (a crash mid-append) stop the replay
+    at the last complete record instead of failing; a ``submit`` record
+    RESETS the uid's committed run to the record's own ``n_committed``
+    suffix (last-submit-wins — the resumed submit already folds every
+    earlier run's tokens into its prompt)."""
+    st = JournalState({}, {}, {}, [])
+    if not os.path.exists(path):
+        return st
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                break  # torn tail: everything after it never committed
+            uid = rec.get("uid")
+            t = rec.get("t")
+            if t == "submit":
+                if uid not in st.submits:
+                    st.order.append(uid)
+                st.submits[uid] = rec
+                nc = int(rec.get("n_committed", 0))
+                st.committed[uid] = list(
+                    rec["prompt"][len(rec["prompt"]) - nc:]) if nc else []
+                st.finished.pop(uid, None)
+            elif t == "tok":
+                st.committed.setdefault(uid, []).extend(rec["toks"])
+            elif t == "fin":
+                st.finished[uid] = rec["outcome"]
+            elif t == "rej":
+                st.finished[uid] = "rejected"
+    return st
+
+
+def recovery_requests(st: JournalState
+                      ) -> Tuple[List[Request], Dict[int, np.ndarray]]:
+    """Turn a journal replay into (requests to re-admit, outputs already
+    complete).
+
+    A mid-flight uid becomes a resume Request: prompt = original prompt
+    ‖ committed tokens, ``n_committed`` marking the committed suffix —
+    the engine's ordinary prefill then reproduces the next token
+    exactly.  A uid whose committed run already satisfies its budget or
+    fired eos needs no slot at all and is returned as finished output
+    (its fin record died with the crash, the tokens did not).
+    """
+    resume: List[Request] = []
+    done: Dict[int, np.ndarray] = {}
+    for uid in st.order:
+        if uid in st.finished:
+            if st.finished[uid] == "finished" and st.committed.get(uid):
+                done[uid] = np.asarray(st.committed[uid], np.int32)
+            continue
+        rec = st.submits[uid]
+        toks = st.committed.get(uid, [])
+        budget = int(rec["max_new_tokens"])
+        eos = rec.get("eos_id")
+        fired = next((i for i, t in enumerate(toks) if t == eos),
+                     None) if eos is not None else None
+        if fired is not None:
+            done[uid] = np.asarray(toks[:fired + 1], np.int32)
+            continue
+        if len(toks) >= budget:
+            done[uid] = np.asarray(toks[:budget], np.int32)
+            continue
+        nc0 = int(rec.get("n_committed", 0))
+        orig = rec["prompt"][:len(rec["prompt"]) - nc0] if nc0 \
+            else rec["prompt"]
+        resume.append(Request(
+            uid=uid,
+            prompt=np.asarray(list(orig) + toks, np.int32),
+            max_new_tokens=budget,
+            eos_id=eos,
+            deadline=rec.get("deadline"),
+            n_committed=len(toks)))
+    return resume, done
+
+
+# ------------------------------------------------------------ snapshot/restore
+def snapshot_engine(engine: ContinuousBatchingEngine, ckpt_dir: str,
+                    step: int = 0) -> str:
+    """Persist everything needed to rebuild an equivalent engine: the
+    weights (target, plus draft in speculative mode) and the engine
+    geometry.  Uses the atomic CRC-checked checkpoint format, so a crash
+    mid-snapshot can never corrupt the previous snapshot."""
+    tree = {"params": engine.params}
+    if engine.speculative is not None:
+        tree["draft"] = engine.speculative.params
+    sp = engine.sampling
+    extra = {
+        "kind": "serve_engine",
+        "arch": engine.cfg.name,
+        "decode_kernel": engine.decode_kernel,
+        "capacity": engine.capacity,
+        "max_len": engine.max_len,
+        "prefill_bucket": engine.prefill_bucket,
+        "k": engine.k,
+        "policy": engine.policy,
+        "pool": "paged" if engine._metas[0] is not None else "dense",
+        "pages": (engine._metas[0].n_pages
+                  if engine._metas[0] is not None else None),
+        "sampling": None if sp is None else dataclasses.asdict(sp),
+        "draft_arch": (None if engine.speculative is None
+                       else engine.speculative.cfg.name),
+        "spec_d": (None if engine.speculative is None
+                   else engine.speculative.d),
+        "deadline": engine.deadline,
+    }
+    return save_checkpoint(ckpt_dir, step, tree, extra)
+
+
+def restore_engine(ckpt_dir: str, step: Optional[int] = None,
+                   **overrides) -> ContinuousBatchingEngine:
+    """Rebuild an engine from :func:`snapshot_engine` output.  Keyword
+    overrides (``journal=…``, ``faults=…``, ``deadline=…``) pass through
+    to the constructor — a restart typically reattaches the journal the
+    dead engine was writing."""
+    from repro.configs.base import get_config
+    from repro.models import get_family
+
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no engine snapshot in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        extra = json.load(f)["extra"]
+    if extra.get("kind") != "serve_engine":
+        raise ValueError(f"{d} is not an engine snapshot")
+    cfg = get_config(extra["arch"]).replace(
+        decode_kernel=extra["decode_kernel"])
+    template = {"params": jax.eval_shape(
+        lambda: get_family(cfg).init(jax.random.PRNGKey(0), cfg))}
+    cfg_d = None
+    if extra.get("draft_arch"):
+        cfg_d = get_config(extra["draft_arch"]).replace(
+            decode_kernel=extra["decode_kernel"])
+        template["draft"] = jax.eval_shape(
+            lambda: get_family(cfg_d).init(jax.random.PRNGKey(0), cfg_d))
+    tree, _, _ = load_checkpoint(ckpt_dir, template, step)
+    sampling = None
+    if extra.get("sampling"):
+        sampling = SamplingParams(**extra["sampling"])
+    speculative = None
+    if cfg_d is not None:
+        speculative = SpeculativeConfig(cfg_d, tree["draft"],
+                                        d=int(extra["spec_d"]))
+    kw = dict(capacity=extra["capacity"], max_len=extra["max_len"],
+              prefill_bucket=extra["prefill_bucket"], k=extra["k"],
+              policy=extra["policy"], pool=extra["pool"],
+              pages=extra.get("pages"), sampling=sampling,
+              speculative=speculative, deadline=extra.get("deadline"))
+    kw.update(overrides)
+    return ContinuousBatchingEngine(cfg, tree["params"], **kw)

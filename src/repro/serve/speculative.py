@@ -117,6 +117,7 @@ def make_speculative_loop(cfg_t, cfg_d, d: int, k: int, sampling=None):
     fn(params_t, params_d, tokens (B,), positions (B,), remaining (B,),
        eos_ids (B,), done (B,), pool_t, pool_d, keys (B,2)) ->
         (block (K*(d+1), B) int32, valid (K*(d+1), B) bool,
+         poison (B,) bool, draft_bad () bool,
          tokens, positions, remaining, done, pool_t, pool_d, keys,
          n_proposed (), n_accepted ())
 
@@ -126,6 +127,19 @@ def make_speculative_loop(cfg_t, cfg_d, d: int, k: int, sampling=None):
     count draft tokens offered/accepted across the whole dispatch — the
     acceptance-rate telemetry rides the block readback, costing no extra
     host sync.
+
+    NaN/Inf sentinels ride the same readback.  ``poison[b]`` flags a row
+    whose TARGET verify logits came back non-finite (the block commits
+    nothing for the row — ``n_feed`` forces 0, so both pools stay at the
+    row's pre-block state — and the row freezes via the done-mask; the
+    engine quarantine-evicts it).  With sampling, a row whose DRAFT
+    logits were non-finite is poisoned too: its rejection-sampling draw
+    would no longer follow the target distribution.  Under greedy decode
+    a broken draft cannot corrupt output (every emitted token is the
+    target's own argmax — bad proposals are merely rejected), so greedy
+    rows survive a draft fault; either way the scalar ``draft_bad``
+    reports any non-finite draft logits across the dispatch, and the
+    engine uses it to drop to plain macro decode (degradation ladder).
     """
     fam_t, fam_d = get_family(cfg_t), get_family(cfg_d)
     greedy = sampling_lib.is_greedy(sampling)
@@ -146,20 +160,28 @@ def make_speculative_loop(cfg_t, cfg_d, d: int, k: int, sampling=None):
 
         if greedy:
             def draft_body(carry, j):
-                tok, cache = carry
+                tok, cache, dbad = carry
                 logits, cache = fam_d.decode_step_slots(
                     params_d, tok, positions + j, cache, cfg_d, done=done)
+                dbad = dbad | (~done & ~jnp.all(
+                    jnp.isfinite(logits.astype(jnp.float32)), -1))
                 nxt = jnp.where(done, tok,
                                 jnp.argmax(logits, -1).astype(jnp.int32))
-                return (nxt, cache), nxt
+                return (nxt, cache, dbad), nxt
 
             # the scratch draft continuation: proposals advance a copy of
             # the draft pool; the real pool only moves at commit time
-            _, drafts = jax.lax.scan(draft_body, (tokens, pool_d),
-                                     jnp.arange(d))
+            (_, _, dbad), drafts = jax.lax.scan(
+                draft_body, (tokens, pool_d, jnp.zeros((B,), bool)),
+                jnp.arange(d))
             chunk = jnp.concatenate([tokens[None], drafts], 0).T  # (B, S)
             logits_t, pend_t = fam_t.verify_step_slots(
                 params_t, chunk, positions, pool_t, cfg_t, done=done)
+            tbad = ~jnp.all(jnp.isfinite(logits_t.astype(jnp.float32)),
+                            axis=(1, 2))
+            # greedy: a broken draft only wastes proposals, it cannot
+            # change the emitted tokens — poison on target faults alone
+            bad = live0 & tbad
             out_tokens = jnp.argmax(logits_t, -1).astype(jnp.int32)
             # greedy acceptance: proposal j survives iff it IS the
             # target's argmax after the (already accepted) prefix — so
@@ -174,20 +196,28 @@ def make_speculative_loop(cfg_t, cfg_d, d: int, k: int, sampling=None):
                 return jax.vmap(lambda kk: jax.random.fold_in(kk, c))(kblock)
 
             def draft_body(carry, j):
-                tok, cache = carry
+                tok, cache, dbad = carry
                 logits, cache = fam_d.decode_step_slots(
                     params_d, tok, positions + j, cache, cfg_d, done=done)
+                dbad = dbad | (~done & ~jnp.all(
+                    jnp.isfinite(logits.astype(jnp.float32)), -1))
                 qj = sampling_lib.filtered_probs(logits, sampling)
                 kj = jax.vmap(jax.random.fold_in)(kblock, jnp.full((B,), j))
                 nxt = jnp.where(done, tok,
                                 sampling_lib.sample_probs(qj, kj))
-                return (nxt, cache), (nxt, qj)
+                return (nxt, cache, dbad), (nxt, qj)
 
-            _, (drafts, qs) = jax.lax.scan(draft_body, (tokens, pool_d),
-                                           jnp.arange(d))
+            (_, _, dbad), (drafts, qs) = jax.lax.scan(
+                draft_body, (tokens, pool_d, jnp.zeros((B,), bool)),
+                jnp.arange(d))
             chunk = jnp.concatenate([tokens[None], drafts], 0).T
             logits_t, pend_t = fam_t.verify_step_slots(
                 params_t, chunk, positions, pool_t, cfg_t, done=done)
+            tbad = ~jnp.all(jnp.isfinite(logits_t.astype(jnp.float32)),
+                            axis=(1, 2))
+            # sampled: a non-finite draft distribution breaks rejection
+            # sampling's target-distribution guarantee — poison the row
+            bad = live0 & (tbad | dbad)
             V = logits_t.shape[-1]
             p = sampling_lib.filtered_probs(
                 logits_t.reshape(B * S, V), sampling).reshape(B, S, V)
@@ -224,20 +254,24 @@ def make_speculative_loop(cfg_t, cfg_d, d: int, k: int, sampling=None):
         budget_ok = steps[None] <= remaining[:, None]
         is_eos = out_tokens == eos_ids[:, None]
         no_eos_before = (jnp.cumsum(is_eos, 1) - is_eos) == 0
-        valid = live0[:, None] & acc_ok & budget_ok & no_eos_before
+        # a poisoned row commits NOTHING this block (n_out = 0, so its
+        # state and both pools stay at the pre-block snapshot) and
+        # freezes via the done-mask — the engine quarantine-evicts it
+        alive = live0 & ~bad
+        valid = alive[:, None] & acc_ok & budget_ok & no_eos_before
         n_out = valid.sum(1).astype(jnp.int32)
         last_idx = jnp.maximum(n_out - 1, 0)
         last_tok = jnp.take_along_axis(out_tokens, last_idx[:, None],
                                        1)[:, 0]
-        tokens = jnp.where(live0, last_tok, tokens)
-        remaining = jnp.where(live0, remaining - n_out, remaining)
+        tokens = jnp.where(alive, last_tok, tokens)
+        remaining = jnp.where(alive, remaining - n_out, remaining)
         fired_eos = jnp.take_along_axis(is_eos, last_idx[:, None], 1)[:, 0]
-        done_next = done | (live0 & (fired_eos | (remaining <= 0)))
+        done_next = done | bad | (alive & (fired_eos | (remaining <= 0)))
         # ---- commit the accepted prefix into BOTH pools --------------
         # feeds are chunk indices < n_out: the carried token plus the
         # accepted proposals; the last output is never fed (it is the
         # next block's carried token, or the row just finished)
-        n_feed = jnp.where(done, 0, n_out)
+        n_feed = jnp.where(done | bad, 0, n_out)
         pool_t = fam_t.commit_slots(params_t, chunk, positions, n_feed,
                                     pool_t, pend_t, cfg_t, done=done)
         # draft catch-up: the draft consumes the same committed chunk
@@ -252,7 +286,8 @@ def make_speculative_loop(cfg_t, cfg_d, d: int, k: int, sampling=None):
         n_prop = jnp.sum(n_prop_rows)
         n_acc = jnp.sum(jnp.maximum(n_out - 1, 0))
         return (tokens, positions, remaining, done_next, pool_t, pool_d,
-                keys), (out_tokens.T, valid.T, n_prop, n_acc)
+                keys), (out_tokens.T, valid.T, bad, dbad.any(), n_prop,
+                        n_acc)
 
     def loop_fn(params_t, params_d, tokens, positions, remaining, eos_ids,
                 done, pool_t, pool_d, keys):
@@ -262,14 +297,15 @@ def make_speculative_loop(cfg_t, cfg_d, d: int, k: int, sampling=None):
             return one_block(tokens, positions, remaining, eos_ids, done,
                              pool_t, pool_d, keys, params_t, params_d)
 
-        carry, (blocks, valids, props, accs) = jax.lax.scan(
+        carry, (blocks, valids, bads, dbads, props, accs) = jax.lax.scan(
             body, (tokens, positions, remaining, done, pool_t, pool_d,
                    keys), None, length=k)
         tokens, positions, remaining, done, pool_t, pool_d, keys = carry
         B = tokens.shape[0]
         block = blocks.reshape(k * S, B)
         valid = valids.reshape(k * S, B)
-        return (block, valid, tokens, positions, remaining, done, pool_t,
-                pool_d, keys, props.sum(), accs.sum())
+        return (block, valid, bads.any(0), dbads.any(), tokens, positions,
+                remaining, done, pool_t, pool_d, keys, props.sum(),
+                accs.sum())
 
     return loop_fn

@@ -169,11 +169,18 @@ def make_prefill_admit_step(cfg, sampling=None):
 
     With a non-greedy ``sampling`` (``serve.sampling.SamplingParams``)
     the signature gains per-row chain roots —
-    fn(params, tokens, plens, cache, uids (N,)) -> (first, cache, keys)
+    fn(params, tokens, plens, cache, uids (N,), skips (N,)) ->
+    (first, cache, keys)
     — each row's PRNG chain is seeded from (sampling.seed, uid) ON
     DEVICE, its first key samples the first token, and the advanced
     chains come back for the admission scatter (keys never round-trip
-    through the host).
+    through the host).  ``skips`` is the journal-resume hook: row ``i``'s
+    chain is advanced ``skips[i]`` splits before its first draw, exactly
+    as if it had already sampled that many tokens — a restarted engine
+    re-admitting a mid-flight sequence (prompt ‖ committed tokens) then
+    draws the SAME next token the uninterrupted run would have (chains
+    advance only on real samples, so chain position == committed-token
+    count).  Fresh admissions pass zeros.
     """
     from repro.serve import sampling as sampling_lib
 
@@ -195,10 +202,19 @@ def make_prefill_admit_step(cfg, sampling=None):
 
         return prefill_fn
 
-    def prefill_sampled(params, tokens, plens, cache, uids):
+    def prefill_sampled(params, tokens, plens, cache, uids, skips):
         logits, cache = last_logits(params, tokens, plens, cache)
         roots = jax.vmap(
             lambda u: sampling_lib.request_key(sampling.seed, u))(uids)
+
+        # a committed token consumed one split of its chain: replay those
+        # splits (bounded by the bucket length — a resume's committed run
+        # is part of its padded prompt, so skips < tokens.shape[1])
+        def advance(i, ks):
+            ks_new, _ = sampling_lib.next_keys(ks)
+            return jnp.where((i < skips)[:, None], ks_new, ks)
+
+        roots = jax.lax.fori_loop(0, tokens.shape[1], advance, roots)
         keys, subs = sampling_lib.next_keys(roots)
         first = sampling_lib.sample_logits(logits, subs, sampling)
         return first, cache, keys
@@ -211,7 +227,7 @@ def make_slot_decode_loop(cfg, k: int, sampling=None):
 
     fn(params, tokens (B,), positions (B,), remaining (B,), eos_ids (B,),
        done (B,), cache) ->
-        (block (K, B) int32, valid (K, B) bool,
+        (block (K, B) int32, valid (K, B) bool, poison (B,) bool,
          tokens, positions, remaining, done, cache)
 
     The host syncs once per K generated tokens instead of once per token:
@@ -225,6 +241,15 @@ def make_slot_decode_loop(cfg, k: int, sampling=None):
     cannot be re-stored.  ``valid[i, b]`` marks whether ``block[i, b]`` is
     a really generated token; rows emit their eos token as valid and then
     go quiet.
+
+    ``poison`` is the NaN/Inf sentinel: a live row whose logits come back
+    non-finite at any step of the block is frozen ON that step exactly
+    like an eos row (its garbage token is never committed — ``valid``
+    goes quiet, the done-mask turns the row into a no-op for the rest of
+    the scan, and a recurrent family's state stops before the poisoned
+    update can propagate) and its ``poison`` flag rides the block
+    readback, so detection costs zero extra host syncs.  The engine
+    quarantine-evicts flagged slots.
 
     ``eos_ids`` uses -1 for "no eos" (token ids are non-negative).
     ``remaining`` counts decode tokens still owed per row; it hits 0
@@ -248,12 +273,20 @@ def make_slot_decode_loop(cfg, k: int, sampling=None):
 
     def step(carry, params, eos_ids):
         if greedy:
-            tokens, positions, remaining, done, cache = carry
+            tokens, positions, remaining, done, poison, cache = carry
         else:
-            tokens, positions, remaining, done, cache, keys = carry
+            tokens, positions, remaining, done, poison, cache, keys = carry
         live = ~done
         logits, cache = fam.decode_step_slots(
             params, tokens, positions, cache, cfg, done=done)
+        # NaN/Inf sentinel: a poisoned live row freezes HERE — its token
+        # is never committed and (crucially, for recurrent state) no
+        # further update runs on the row.  The elementwise reduce fuses
+        # into the dispatch; nothing extra crosses to the host.
+        bad = live & ~jnp.all(jnp.isfinite(
+            logits.astype(jnp.float32)), axis=-1)
+        live = live & ~bad
+        poison = poison | bad
         if greedy:
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
@@ -262,32 +295,38 @@ def make_slot_decode_loop(cfg, k: int, sampling=None):
             nxt = sampling_lib.sample_logits(logits, subs, sampling)
         tokens = jnp.where(live, nxt, tokens)
         remaining = jnp.where(live, remaining - 1, remaining)
-        done = done | (live & ((tokens == eos_ids) | (remaining <= 0)))
+        done = done | bad | (live & ((tokens == eos_ids)
+                                     | (remaining <= 0)))
         positions = jnp.where(live, positions + 1, positions)
-        carry = (tokens, positions, remaining, done, cache) if greedy \
-            else (tokens, positions, remaining, done, cache, keys)
+        carry = (tokens, positions, remaining, done, poison, cache) \
+            if greedy \
+            else (tokens, positions, remaining, done, poison, cache, keys)
         return carry, (tokens, live)
 
     if greedy:
         def loop_fn(params, tokens, positions, remaining, eos_ids, done,
                     cache):
+            poison0 = jnp.zeros(tokens.shape, bool)
             carry, (block, valid) = jax.lax.scan(
                 lambda c, _: step(c, params, eos_ids),
-                (tokens, positions, remaining, done, cache), None, length=k)
-            tokens, positions, remaining, done, cache = carry
-            return block, valid, tokens, positions, remaining, done, cache
+                (tokens, positions, remaining, done, poison0, cache),
+                None, length=k)
+            tokens, positions, remaining, done, poison, cache = carry
+            return (block, valid, poison, tokens, positions, remaining,
+                    done, cache)
 
         return loop_fn
 
     def loop_sampled(params, tokens, positions, remaining, eos_ids, done,
                      cache, keys):
+        poison0 = jnp.zeros(tokens.shape, bool)
         carry, (block, valid) = jax.lax.scan(
             lambda c, _: step(c, params, eos_ids),
-            (tokens, positions, remaining, done, cache, keys), None,
-            length=k)
-        tokens, positions, remaining, done, cache, keys = carry
-        return (block, valid, tokens, positions, remaining, done, cache,
-                keys)
+            (tokens, positions, remaining, done, poison0, cache, keys),
+            None, length=k)
+        tokens, positions, remaining, done, poison, cache, keys = carry
+        return (block, valid, poison, tokens, positions, remaining, done,
+                cache, keys)
 
     return loop_sampled
 

@@ -1,0 +1,260 @@
+"""Runtime-guard invariants under injected faults.
+
+Every fault the engine claims to survive is injected here through the
+deterministic :class:`FaultPlan` harness and the blast radius is pinned:
+a NaN quarantines exactly the poisoned slot (survivors stay token-exact),
+a draft-pool NaN demotes speculation to plain decode without changing
+one token, a paged-arena fault degrades admissions to full reservation,
+deadlines evict hung requests with their partial output delivered, and
+queue-age shedding keeps an overloaded engine live.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import lm_batch
+from repro.launch.serve import generate
+from repro.serve import (
+    ContinuousBatchingEngine,
+    Fault,
+    FaultPlan,
+    Request,
+    SpeculativeConfig,
+)
+
+MAX_LEN = 32
+
+
+def _mixed_requests(cfg, specs, *, uid0=0, seed0=50):
+    reqs = []
+    for i, (plen, gen) in enumerate(specs):
+        prompt = lm_batch(cfg.vocab_size, 1, plen, seed=seed0 + i)[0]
+        reqs.append(Request(uid=uid0 + i, prompt=prompt,
+                            max_new_tokens=gen))
+    return reqs
+
+
+def _sequential_baseline(cfg, params, reqs):
+    out = {}
+    for r in reqs:
+        toks = generate(cfg, params, jnp.asarray(r.prompt)[None],
+                        max_new_tokens=r.max_new_tokens, max_len=MAX_LEN)
+        out[r.uid] = np.asarray(toks[0])
+    return out
+
+
+# ------------------------------------------------------------------- plans
+def test_fault_plan_parse_seeded_and_delivery():
+    plan = FaultPlan.parse("nan@3:1,oom@5:2,slow@7:0.1,crash@9")
+    assert [f.kind for f in plan.faults] == ["nan", "oom", "slow", "crash"]
+    assert plan.faults[0].slot == 1          # nan arg is a slot
+    assert plan.faults[1].duration == 2.0    # oom arg is waves
+    assert plan.faults[2].duration == 0.1
+    # defaults when the arg is omitted
+    assert FaultPlan.parse("slow@1").faults[0].duration == 0.05
+    assert FaultPlan.parse("hang@1").faults[0].duration == 0.25
+    with pytest.raises(ValueError, match="kind"):
+        FaultPlan.parse("meteor@3")
+    with pytest.raises(ValueError, match="not 'kind@step"):
+        FaultPlan.parse("nan3")
+    # seeded plans are a pure function of (seed, n_steps)
+    a = FaultPlan.seeded(11, 24)
+    b = FaultPlan.seeded(11, 24)
+    assert a.faults == b.faults and len(a) == 4
+    assert a.faults != FaultPlan.seeded(12, 24).faults
+    assert all(1 <= f.step < 24 for f in a.faults)
+    # at-most-once delivery: due() pops, a second call returns nothing
+    plan = FaultPlan([Fault("nan", 2), Fault("slow", 5, duration=0.01)])
+    assert [f.kind for f in plan.due(3)] == ["nan"]
+    assert plan.due(3) == [] and len(plan.injected) == 1
+    assert [f.kind for f in plan.due(99)] == ["slow"]
+
+
+# --------------------------------------------------------------- quarantine
+def test_nan_quarantines_only_poisoned_slot(qwen_smoke_cfg,
+                                            qwen_smoke_params):
+    """NaN scattered into slot 0's live cache bytes: the in-scan sentinel
+    catches it at the next block readback, that request alone retires as
+    ``quarantined`` with its pre-fault prefix delivered, and every other
+    request's tokens are bit-identical to the fault-free run."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    reqs = _mixed_requests(cfg, [(4, 9), (6, 7), (5, 8), (7, 6)],
+                           seed0=30)
+    want = _sequential_baseline(cfg, params, reqs)
+    engine = ContinuousBatchingEngine(
+        cfg, params, capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=4,
+        faults=FaultPlan([Fault("nan", 2, slot=0)]))
+    got = engine.run(reqs)
+    assert engine.n_quarantined == 1 and engine.n_faults_injected == 1
+    bad = [u for u, o in engine.outcomes.items() if o == "quarantined"]
+    assert len(bad) == 1
+    for uid in want:
+        if uid in bad:
+            # the poisoned row froze AT the bad step: its delivered
+            # prefix is still a prefix of the true sequence
+            n = len(got[uid])
+            assert n < len(want[uid])
+            np.testing.assert_array_equal(got[uid], want[uid][:n])
+        else:
+            np.testing.assert_array_equal(got[uid], want[uid],
+                                          err_msg=f"uid {uid}")
+
+
+def test_oom_slow_malformed_are_absorbed(qwen_smoke_cfg,
+                                         qwen_smoke_params):
+    """Allocator exhaustion stalls admission (requests wait, none lost),
+    a slow dispatch just costs wall clock, and a hostile mid-trace
+    request lands in rejection telemetry — every real request finishes
+    token-exact."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    reqs = _mixed_requests(cfg, [(4, 7), (6, 5), (5, 6), (7, 4), (3, 5),
+                                 (8, 6)], seed0=40)
+    want = _sequential_baseline(cfg, params, reqs)
+    engine = ContinuousBatchingEngine(
+        cfg, params, capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=4,
+        faults=FaultPlan.parse("oom@1:1,slow@2:0.01,malformed@3"))
+    got = engine.run(reqs)
+    assert engine.n_faults_injected == 3
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+    # the injected hostile request was rejected, not served and not fatal
+    assert any(uid < 0 for uid in engine.rejected)
+    assert all("empty prompt" in why for uid, why in
+               engine.rejected.items() if uid < 0)
+
+
+# ----------------------------------------------------------------- deadlines
+def test_deadline_evicts_hung_requests(qwen_smoke_cfg, qwen_smoke_params):
+    """A hang longer than the deadline: the watchdog expires every
+    over-deadline request at the next step boundary, delivering the
+    partial output instead of blocking forever."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    reqs = _mixed_requests(cfg, [(4, 20), (6, 20), (5, 20)], seed0=60)
+    engine = ContinuousBatchingEngine(
+        cfg, params, capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=2,
+        deadline=0.12, faults=FaultPlan([Fault("hang", 2, duration=0.4)]))
+    t0 = time.monotonic()
+    got = engine.run(reqs)
+    assert engine.n_expired == 3
+    assert all(o == "expired" for o in engine.outcomes.values())
+    assert set(got) == {0, 1, 2}  # partial outputs still delivered
+    assert time.monotonic() - t0 < 5.0  # bounded, not 20-token serving
+
+
+def test_per_request_deadline_overrides_engine_default(qwen_smoke_cfg,
+                                                       qwen_smoke_params):
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    reqs = _mixed_requests(cfg, [(4, 12), (6, 4)], seed0=70)
+    reqs[0].deadline = 0.05  # tighter than the engine's default
+    engine = ContinuousBatchingEngine(
+        cfg, params, capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=2,
+        deadline=60.0, faults=FaultPlan([Fault("slow", 2, duration=0.1)]))
+    engine.run(reqs)
+    assert engine.outcomes[0] == "expired"
+    assert engine.outcomes[1] == "finished"
+
+
+def test_shed_by_queue_age(qwen_smoke_cfg, qwen_smoke_params):
+    """Load shedding: with the engine stuck behind a slow dispatch,
+    waiting requests older than ``shed_age`` are shed (telemetered,
+    uid freed) instead of accumulating into an unbounded backlog."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    reqs = _mixed_requests(cfg, [(4, 6)] * 6, seed0=80)
+    engine = ContinuousBatchingEngine(
+        cfg, params, capacity=1, max_len=MAX_LEN, prefill_bucket=4, k=2,
+        shed_age=0.05, faults=FaultPlan([Fault("slow", 1, duration=0.2)]))
+    engine.run(reqs)
+    assert engine.n_shed > 0
+    shed = [u for u, o in engine.outcomes.items() if o == "shed"]
+    assert shed and all(u in engine.rejected for u in shed)
+    # shed uids are freed for resubmission (client may retry)
+    assert all(u not in engine._seen_uids for u in shed)
+
+
+# ----------------------------------------------------------- degradation
+def test_draft_nan_falls_back_to_plain_decode(qwen_smoke_cfg,
+                                              qwen_smoke_params):
+    """A draft-pool NaN must not cost one token of output: the engine
+    demotes to the plain target-only macro loop (greedy tokens are the
+    target's argmax either way) and stays demoted."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+
+    def perturbed(p, k):
+        return p + 3e-3 * jax.random.normal(k, p.shape, p.dtype)
+
+    keys = jax.random.split(jax.random.PRNGKey(1),
+                            len(jax.tree.leaves(params)))
+    flat, treedef = jax.tree.flatten(params)
+    params_d = jax.tree.unflatten(
+        treedef, [perturbed(p, k) for p, k in zip(flat, keys)])
+    reqs = _mixed_requests(cfg, [(4, 8), (6, 6), (5, 7), (7, 5)],
+                           seed0=90)
+    want = _sequential_baseline(cfg, params, reqs)
+    engine = ContinuousBatchingEngine(
+        cfg, params, capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=2,
+        speculative=SpeculativeConfig(cfg, params_d, d=2),
+        faults=FaultPlan([Fault("nan", 2, slot=0, pool=1)]))
+    got = engine.run(reqs)
+    assert engine.n_spec_fallbacks == 1 and engine._spec_fallback
+    assert engine.n_quarantined == 0  # the TARGET rows were never bad
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+
+
+def test_paged_arena_degrades_after_quarantine(qwen_smoke_cfg,
+                                               qwen_smoke_params):
+    """A NaN in a paged arena may sit in prefix pages other requests
+    would share, so quarantine also flushes the prefix registry and
+    degrades admissions to dense-style full reservation — correctness
+    over memory efficiency until a restart."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    reqs = _mixed_requests(cfg, [(4, 8), (6, 6), (5, 7), (7, 5), (4, 6),
+                                 (6, 5)], seed0=100)
+    want = _sequential_baseline(cfg, params, reqs)
+    engine = ContinuousBatchingEngine(
+        cfg, params, capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=4,
+        pool="paged", faults=FaultPlan([Fault("nan", 2, slot=0)]))
+    got = engine.run(reqs)
+    assert engine.n_quarantined == 1 and engine._arena_degraded
+    assert engine.n_degraded_admissions > 0
+    bad = [u for u, o in engine.outcomes.items() if o == "quarantined"]
+    for uid in want:
+        if uid not in bad:
+            np.testing.assert_array_equal(got[uid], want[uid],
+                                          err_msg=f"uid {uid}")
+
+
+@pytest.mark.slow
+def test_seeded_chaos_survivors_token_exact(qwen_smoke_cfg,
+                                            qwen_smoke_params):
+    """Chaos sweep: seeded random fault schedules (no crash — that mode
+    is the recovery suite's) against a mixed trace.  Whatever the plan
+    does, every request that finishes normally is token-exact and every
+    request is accounted for in outcomes."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    kinds = ("nan", "oom", "slow", "malformed")
+    reqs = _mixed_requests(cfg, [(4, 8), (6, 6), (5, 9), (7, 5), (3, 7),
+                                 (8, 6), (5, 5), (6, 8)], seed0=110)
+    want = _sequential_baseline(cfg, params, reqs)
+    for seed in range(4):
+        plan = FaultPlan.seeded(seed, 12, kinds=kinds, n_faults=3,
+                                slow_s=0.01)
+        engine = ContinuousBatchingEngine(
+            cfg, params, capacity=3, max_len=MAX_LEN, prefill_bucket=4,
+            k=4, faults=plan)
+        got = engine.run([Request(uid=r.uid, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens)
+                          for r in reqs])
+        assert engine.n_faults_injected == 3, seed
+        for r in reqs:
+            o = engine.outcomes.get(r.uid)
+            assert o in ("finished", "quarantined"), (seed, r.uid, o)
+            if o == "finished":
+                np.testing.assert_array_equal(
+                    got[r.uid], want[r.uid],
+                    err_msg=f"seed {seed} uid {r.uid}")

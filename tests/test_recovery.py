@@ -1,0 +1,295 @@
+"""Crash-safe journal + token-exact restart invariants.
+
+The fault-tolerance contract: kill the engine at ANY dispatch boundary,
+rebuild it from the journal alone, and every surviving request's final
+token sequence is bit-identical to the uninterrupted run — greedy,
+sampled (the per-request PRNG chain is advanced past the committed run),
+and greedy-speculative, including a paged-pool shared-prefix trace.
+The journal reader itself must shrug off a torn tail (a crash mid-append)
+and any number of crash/restart cycles in one file (last-submit-wins).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import lm_batch
+from repro.launch.serve import generate
+from repro.models import get_family
+from repro.serve import (
+    ContinuousBatchingEngine,
+    EngineKilled,
+    Fault,
+    FaultPlan,
+    Request,
+    RequestJournal,
+    SamplingParams,
+    SpeculativeConfig,
+    read_journal,
+    recovery_requests,
+    restore_engine,
+    snapshot_engine,
+)
+
+MAX_LEN = 32
+
+
+def _mixed_requests(cfg, specs, *, uid0=0, seed0=50):
+    reqs = []
+    for i, (plen, gen) in enumerate(specs):
+        prompt = lm_batch(cfg.vocab_size, 1, plen, seed=seed0 + i)[0]
+        reqs.append(Request(uid=uid0 + i, prompt=prompt,
+                            max_new_tokens=gen))
+    return reqs
+
+
+def _fresh(reqs):
+    return [Request(uid=r.uid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, eos_id=r.eos_id)
+            for r in reqs]
+
+
+def _crash_and_resume(cfg, params, reqs, crash_step, path, **kw):
+    """Run ``reqs`` on an engine wired to die at dispatch ``crash_step``,
+    then rebuild from the journal alone and finish the trace.  Returns
+    (merged outputs, the resume Requests, the resumed engine)."""
+    j = RequestJournal(str(path))
+    eng = ContinuousBatchingEngine(
+        cfg, params, journal=j,
+        faults=FaultPlan([Fault("crash", crash_step)]), **kw)
+    with pytest.raises(EngineKilled):
+        eng.run(_fresh(reqs))
+    j.close()
+    resumed, done = recovery_requests(read_journal(str(path)))
+    j2 = RequestJournal(str(path))
+    eng2 = ContinuousBatchingEngine(cfg, params, journal=j2, **kw)
+    out = eng2.run(resumed)
+    j2.close()
+    return {**done, **out}, resumed, eng2
+
+
+def _uninterrupted(cfg, params, reqs, **kw):
+    return ContinuousBatchingEngine(cfg, params, **kw).run(_fresh(reqs))
+
+
+@pytest.mark.parametrize("crash_step", [1, 3])
+def test_greedy_crash_resume_token_exact(crash_step, gpt_micro_cfg,
+                                         tmp_path):
+    """Kill-at-step-N + journal resume == the uninterrupted run, token
+    for token.  gpt-micro's learned positions make its greedy trace
+    position-dependent, so an off-by-one in the resume prefill (wrong
+    position for the first regenerated token) cannot pass silently."""
+    cfg = gpt_micro_cfg
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    reqs = _mixed_requests(cfg, [(4, 8), (7, 5), (5, 9), (9, 3), (3, 6)])
+    kw = dict(capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=4)
+    want = _uninterrupted(cfg, params, reqs, **kw)
+    got, resumed, _ = _crash_and_resume(
+        cfg, params, reqs, crash_step, tmp_path / "j.jsonl", **kw)
+    assert set(got) == set(want)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+    # the crash really interrupted mid-flight sequences: at least one
+    # resume carried committed tokens back into its prompt
+    assert any(r.n_committed > 0 for r in resumed)
+    # and the resumed run matches the sequential loop too (belt/braces)
+    for r in reqs:
+        seq = generate(cfg, params, jnp.asarray(r.prompt)[None],
+                       max_new_tokens=r.max_new_tokens, max_len=MAX_LEN)
+        np.testing.assert_array_equal(got[r.uid], np.asarray(seq[0]))
+
+
+def test_sampled_crash_resume_token_exact(qwen_smoke_cfg,
+                                          qwen_smoke_params, tmp_path):
+    """Sampled resume: a request's chain position always equals its
+    generated-token count, so the resume prefill advances the chain by
+    ``n_committed`` splits and the first regenerated draw lands on
+    exactly the key the dead engine would have used next."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    sp = SamplingParams(temperature=0.9, top_k=12, top_p=0.9, seed=7)
+    reqs = _mixed_requests(cfg, [(4, 9), (6, 6), (8, 8), (5, 7)],
+                           seed0=80)
+    kw = dict(capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=4,
+              sampling=sp)
+    want = _uninterrupted(cfg, params, reqs, **kw)
+    got, resumed, _ = _crash_and_resume(
+        cfg, params, reqs, 2, tmp_path / "j.jsonl", **kw)
+    assert any(r.n_committed > 0 for r in resumed)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+
+
+def _perturbed(params, scale=3e-3, seed=1):
+    keys = jax.random.split(jax.random.PRNGKey(seed),
+                            len(jax.tree.leaves(params)))
+    flat, treedef = jax.tree.flatten(params)
+    flat = [p + scale * jax.random.normal(k, p.shape, p.dtype)
+            for p, k in zip(flat, keys)]
+    return jax.tree.unflatten(treedef, flat)
+
+
+def test_speculative_greedy_crash_resume(qwen_smoke_cfg,
+                                         qwen_smoke_params, tmp_path):
+    """Greedy speculative decode consumes no PRNG splits, so its resume
+    is token-exact like plain greedy — every committed token is the
+    target's argmax regardless of what the draft proposed before or
+    after the crash."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    spec = SpeculativeConfig(cfg, _perturbed(params), d=2)
+    reqs = _mixed_requests(cfg, [(4, 8), (7, 5), (5, 7)], seed0=90)
+    kw = dict(capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=2,
+              speculative=spec)
+    want = _uninterrupted(cfg, params, reqs, **kw)
+    got, resumed, _ = _crash_and_resume(
+        cfg, params, reqs, 2, tmp_path / "j.jsonl", **kw)
+    assert any(r.n_committed > 0 for r in resumed)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+    # and speculative output == plain target decode (the base invariant)
+    plain = _uninterrupted(cfg, params, reqs, capacity=2, max_len=MAX_LEN,
+                           prefill_bucket=4, k=4)
+    for uid in plain:
+        np.testing.assert_array_equal(got[uid], plain[uid])
+
+
+def test_paged_prefix_hit_crash_resume(qwen_smoke_cfg, qwen_smoke_params,
+                                       tmp_path):
+    """A paged-pool shared-prefix trace through a crash: the restarted
+    engine rebuilds its prefix registry from scratch (device state died
+    with the process), re-prefills ``prompt ‖ committed`` for the
+    survivors, and later admissions in the SAME restart hit the rebuilt
+    resident pages — outputs stay token-identical to the dense
+    uninterrupted run throughout."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    prefix = lm_batch(cfg.vocab_size, 1, 8, seed=701)[0]
+    reqs = []
+    for uid in range(6):
+        tail = lm_batch(cfg.vocab_size, 1, 2 + uid % 3, seed=900 + uid)[0]
+        reqs.append(Request(uid=uid,
+                            prompt=np.concatenate([prefix, tail]),
+                            max_new_tokens=5 + uid % 3))
+    kw = dict(capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=4)
+    want = _uninterrupted(cfg, params, reqs, **kw)  # dense reference
+    got, resumed, eng2 = _crash_and_resume(
+        cfg, params, reqs, 2, tmp_path / "j.jsonl", pool="paged", **kw)
+    assert set(got) == set(want)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid],
+                                      err_msg=f"uid {uid}")
+    assert any(r.n_committed > 0 for r in resumed)
+    # the restarted engine really served some admissions from resident
+    # prefix pages (capacity 2 < len(resumed) forces multiple waves)
+    assert eng2.n_prefix_hits > 0
+
+
+def test_journal_torn_tail_and_multi_crash(tmp_path):
+    """The reader stops at a torn tail instead of failing, and one file
+    survives two crash cycles: a resumed submit RESETS the uid's
+    committed run to its own ``n_committed`` suffix, so earlier cycles'
+    tok records are never double-counted."""
+    path = tmp_path / "j.jsonl"
+    j = RequestJournal(str(path))
+    j.record_submit(Request(uid=1, prompt=np.array([5, 6, 7], np.int32),
+                            max_new_tokens=6))
+    j.record_tokens(1, [10, 11])
+    j.record_submit(Request(uid=2, prompt=np.array([8, 9], np.int32),
+                            max_new_tokens=4))
+    j.record_tokens(2, [20, 21, 22, 23])
+    j.close()
+    # crash cycle 2: uid 1 resumes with its run folded into the prompt
+    j = RequestJournal(str(path))
+    j.record_submit(Request(uid=1,
+                            prompt=np.array([5, 6, 7, 10, 11], np.int32),
+                            max_new_tokens=6, n_committed=2))
+    j.record_tokens(1, [12])
+    j.close()
+    # torn tail: a crash mid-append leaves half a record
+    with open(path, "a") as f:
+        f.write('{"t": "tok", "uid": 1, "toks": [99')
+    st = read_journal(str(path))
+    assert st.committed[1] == [10, 11, 12]  # reset + delta, no 99
+    resume, done = recovery_requests(st)
+    # uid 2's committed run already fills its budget: finished, no slot
+    np.testing.assert_array_equal(done[2], [20, 21, 22, 23])
+    (r1,) = resume
+    assert r1.uid == 1 and r1.n_committed == 3
+    np.testing.assert_array_equal(r1.prompt, [5, 6, 7, 10, 11, 12])
+
+
+def test_recovery_classifies_eos_and_finished(tmp_path):
+    """A committed run that already fired eos needs no slot — it returns
+    as finished output truncated at the eos; an explicitly finished uid
+    comes back verbatim; a rejected uid stays dead."""
+    path = tmp_path / "j.jsonl"
+    j = RequestJournal(str(path))
+    j.record_submit(Request(uid=1, prompt=np.array([3], np.int32),
+                            max_new_tokens=8, eos_id=42))
+    j.record_tokens(1, [7, 42, 9])  # eos fired mid-run, fin record lost
+    j.record_submit(Request(uid=2, prompt=np.array([4], np.int32),
+                            max_new_tokens=2))
+    j.record_tokens(2, [5, 6])
+    j.record_finish(2, "finished")
+    j.record_reject(3, "request 3: empty prompt")
+    j.close()
+    resume, done = recovery_requests(read_journal(str(path)))
+    assert resume == []
+    np.testing.assert_array_equal(done[1], [7, 42])
+    np.testing.assert_array_equal(done[2], [5, 6])
+    assert 3 not in done
+
+
+def test_snapshot_restore_roundtrip(qwen_smoke_cfg, qwen_smoke_params,
+                                    tmp_path):
+    """``restore_engine`` rebuilds an equivalent engine from the
+    snapshot alone: same geometry, same sampling policy, same tokens."""
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    sp = SamplingParams(temperature=0.8, top_k=8, seed=3)
+    eng = ContinuousBatchingEngine(cfg, params, capacity=3,
+                                   max_len=MAX_LEN, prefill_bucket=4,
+                                   k=4, sampling=sp, deadline=30.0)
+    snapshot_engine(eng, str(tmp_path / "snap"), step=5)
+    eng2 = restore_engine(str(tmp_path / "snap"))
+    assert eng2.capacity == 3 and eng2.k == 4
+    assert eng2.deadline == 30.0 and eng2.sampling == sp
+    reqs = _mixed_requests(cfg, [(4, 6), (7, 4)], seed0=60)
+    a = eng.run(_fresh(reqs))
+    b = eng2.run(_fresh(reqs))
+    for uid in a:
+        np.testing.assert_array_equal(a[uid], b[uid])
+    # constructor overrides pass through (a restart reattaches a journal)
+    j = RequestJournal(str(tmp_path / "j.jsonl"))
+    eng3 = restore_engine(str(tmp_path / "snap"), journal=j, deadline=None)
+    assert eng3.journal is j and eng3.deadline is None
+    with pytest.raises(FileNotFoundError):
+        restore_engine(str(tmp_path / "empty"))
+    # a non-engine checkpoint is refused, not misparsed
+    from repro.checkpoint.manager import save_checkpoint
+    save_checkpoint(str(tmp_path / "train"), 1, {"w": np.zeros(2)},
+                    extra={"kind": "train"})
+    with pytest.raises(ValueError, match="not an engine snapshot"):
+        restore_engine(str(tmp_path / "train"))
+
+
+@pytest.mark.slow
+def test_greedy_crash_resume_every_step(gpt_micro_cfg, tmp_path):
+    """Exhaustive kill-point sweep: the resume is token-exact no matter
+    WHICH dispatch boundary the crash lands on."""
+    cfg = gpt_micro_cfg
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    reqs = _mixed_requests(cfg, [(4, 8), (7, 5), (5, 9), (9, 3)])
+    kw = dict(capacity=2, max_len=MAX_LEN, prefill_bucket=4, k=4)
+    want = _uninterrupted(cfg, params, reqs, **kw)
+    for crash_step in range(1, 8):
+        got, _, _ = _crash_and_resume(
+            cfg, params, reqs, crash_step,
+            tmp_path / f"j{crash_step}.jsonl", **kw)
+        for uid in want:
+            np.testing.assert_array_equal(
+                got[uid], want[uid],
+                err_msg=f"crash@{crash_step} uid {uid}")

@@ -130,12 +130,31 @@ def test_rejects_oversized_and_wrong_family(qwen_smoke_cfg,
     cfg, params = qwen_smoke_cfg, qwen_smoke_params
     engine = ContinuousBatchingEngine(cfg, params, capacity=1,
                                       max_len=MAX_LEN)
-    # an oversize request is RECORDED, not raised — raising mid-trace used
-    # to kill the whole replay; the engine keeps serving around it
-    engine.submit(Request(uid=0, prompt=np.zeros(MAX_LEN, np.int32),
-                          max_new_tokens=4))
-    assert "exceeds max_len" in engine.rejected[0]
-    assert not engine.waiting and 0 not in engine._seen_uids
+    # EVERY malformed-request class is RECORDED, not raised — raising
+    # mid-trace used to kill the whole replay; the engine keeps serving
+    # around it and telemeters the reason
+    bads = [
+        (Request(uid=0, prompt=np.zeros(MAX_LEN, np.int32),
+                 max_new_tokens=4), "exceeds max_len"),
+        (Request(uid=1, prompt=np.zeros((0,), np.int32),
+                 max_new_tokens=4), "empty prompt"),
+        (Request(uid=2, prompt=np.zeros(4, np.int32),
+                 max_new_tokens=0), "max_new_tokens"),
+        (Request(uid=3, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                 eos_id=cfg.vocab_size), "eos_id"),
+        (Request(uid=4, prompt=np.full(4, cfg.vocab_size, np.int32),
+                 max_new_tokens=2), "outside the vocabulary"),
+        (Request(uid=5, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                 deadline=-1.0), "deadline"),
+        (Request(uid=6, prompt=np.zeros(4, np.int32), max_new_tokens=8,
+                 n_committed=9), "n_committed"),
+    ]
+    for req, why in bads:
+        engine.submit(req)
+        assert why in engine.rejected[req.uid], req.uid
+        assert engine.outcomes[req.uid] == "rejected"
+        # the uid is NOT burned: a corrected resubmission stays possible
+        assert not engine.waiting and req.uid not in engine._seen_uids
     engine.run([Request(uid=7, prompt=np.zeros(4, np.int32),
                         max_new_tokens=2)])
     assert set(engine.finished) == {7}  # rejection didn't stop serving

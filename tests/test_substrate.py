@@ -126,6 +126,29 @@ def test_async_save(tmp_path):
     assert latest_step(str(tmp_path)) == 3
 
 
+def test_async_save_failure_surfaces(tmp_path):
+    """Regression: a failing async save used to die silently on its
+    daemon thread — the train loop believed the checkpoint existed.  The
+    worker's exception must re-raise on ``wait()`` (or the next
+    ``maybe_save``), once, and the manager must stay usable after."""
+    blocker = tmp_path / "ckpt"
+    blocker.write_text("a file where the checkpoint dir should go")
+    mgr = CheckpointManager(str(blocker), keep=2, every=1, async_save=True)
+    mgr.maybe_save(1, _tree())
+    with pytest.raises(OSError):
+        mgr.wait()
+    mgr.wait()  # the error was consumed, not raised forever
+    # the NEXT maybe_save also surfaces a pending failure (a loop that
+    # never calls wait() between saves still finds out)
+    mgr.maybe_save(2, _tree())
+    with pytest.raises(OSError):
+        mgr.maybe_save(3, _tree())
+    blocker.unlink()
+    mgr.maybe_save(4, _tree())
+    mgr.wait()
+    assert latest_step(str(blocker)) == 4
+
+
 def test_atomicity_no_partial_dirs(tmp_path):
     save_checkpoint(str(tmp_path), 2, _tree())
     assert not any(n.startswith("tmp.") for n in os.listdir(tmp_path))
