@@ -48,13 +48,18 @@ ride existing readbacks), ``chaos_injected`` records survival rate
 under a seeded nan/oom/slow/malformed plan with every survivor
 token-checked against the fault-free run, and ``chaos_crash`` kills
 the engine mid-trace and records the journal-restart recovery latency.
-Partial runs (``--family``, ``--speculate``, ``--pool``, ``--chaos``)
-MERGE into ``BENCH_serve_engine.json`` — they never clobber the other
-sections' trajectory entries.
+A ``--mesh`` sweep benches sharded serving under a forced 4-device host
+mesh (2x2 data x model, dense and paged) against single-device on the
+same trace, asserting token-exactness and that ``host_syncs_per_token``
+does not regress; every JSON entry records ``mesh_shape``/``n_devices``
+(pre-sharding entries backfill as 1x1 so the schema stays uniform).
+Partial runs (``--family``, ``--speculate``, ``--pool``, ``--chaos``,
+``--mesh``) MERGE into ``BENCH_serve_engine.json`` — they never clobber
+the other sections' trajectory entries.
 
 Run:  PYTHONPATH=src:. python benchmarks/bench_serve_engine.py [--quick]
           [--family transformer|griffin|xlstm|all|none] [--speculate]
-          [--pool] [--chaos]
+          [--pool] [--chaos] [--mesh]
 """
 from __future__ import annotations
 
@@ -565,13 +570,114 @@ def _bench_chaos(quick: bool):
     return results
 
 
+def _bench_mesh(quick: bool):
+    """Sharded-vs-single-device serving on one deterministic trace.
+
+    The in-process jax sees 1 CPU device, so the sweep runs in a
+    subprocess with 4 forced host devices: the same gpt-micro trace
+    through the single-device engine, a 2x2 (data x model) dense engine,
+    and a 2x2 paged engine.  The subprocess ASSERTS the acceptance
+    criteria before reporting — sharded tokens must equal single-device
+    tokens exactly, and sharded ``host_syncs_per_token`` must not exceed
+    single-device on the same trace (the readback-locality contract:
+    sharding adds collectives on device, never host syncs) — so a
+    regression fails the bench rather than drifting into the trajectory.
+    Entries record ``mesh_shape``/``n_devices``; forced host devices
+    measure dispatch structure, not real multi-chip speed.
+    """
+    import json as _json
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    import textwrap
+
+    n = 8 if quick else 24
+    gen = 8 if quick else 16
+    child = textwrap.dedent(f"""
+        import json, time
+        import jax
+        import numpy as np
+        from repro.configs.base import get_config
+        from repro.models import get_family, slot_cache_layout
+        from repro.serve import ContinuousBatchingEngine, Request
+        from benchmarks.bench_serve_engine import poisson_trace
+
+        cfg = get_config("gpt-micro")
+        params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+        reqs = poisson_trace(cfg, {n}, rate_hz=2000.0, max_gen={gen})
+
+        def fresh():
+            return [Request(uid=r.uid, prompt=r.prompt,
+                            max_new_tokens=r.max_new_tokens,
+                            arrival=r.arrival) for r in reqs]
+
+        def bench(mesh, pool):
+            def build():
+                return ContinuousBatchingEngine(
+                    cfg, params, capacity=4, max_len=48, k=8, pool=pool,
+                    mesh=mesh)
+            build().run(fresh())          # warm the shared jit caches
+            eng = build()
+            t0 = time.monotonic()
+            out = eng.run(fresh())        # realtime=False: deterministic
+            dt = time.monotonic() - t0
+            n_tok = sum(len(v) for v in out.values())
+            m = {{
+                "tok_per_s": n_tok / dt, "p50_s": 0.0, "p99_s": 0.0,
+                "host_syncs_per_token": eng.n_host_syncs / max(n_tok, 1),
+                "decode_dispatches": eng.n_decode_dispatches,
+                "prefill_batches": eng.n_prefills, "k": 8,
+                "pool": eng.pool_kind, "mesh_shape": eng.mesh_shape,
+                "n_devices": eng.n_devices, "family": cfg.family,
+                "cache_layout": slot_cache_layout(cfg),
+                "params_bytes_per_device": eng.params_bytes_per_device,
+                "pool_bytes_per_device": eng.pool_bytes_per_device,
+            }}
+            if eng.pool_kind == "paged":
+                m["pages_highwater"] = eng.pages_highwater
+                m["prefix_hit_rate"] = eng.prefix_hit_rate
+                m["pages_per_request"] = (eng.n_pages_allocated
+                                          / max(len(reqs), 1))
+                m["dense_reservation_pages"] = eng._metas[0].nblk
+                m["rejected"] = len(eng.rejected)
+            return eng, out, m
+
+        results = {{}}
+        _, want, results["mesh_1x1_dense_k8"] = bench(None, "dense")
+        for tag, pool in (("mesh_2x2_dense_k8", "dense"),
+                          ("mesh_2x2_paged_k8", "paged")):
+            _, got, results[tag] = bench("2x2", pool)
+            for u in want:
+                assert np.array_equal(got[u], want[u]), \\
+                    (tag, u, got[u], want[u])
+            single = results["mesh_1x1_dense_k8"]["host_syncs_per_token"]
+            shard = results[tag]["host_syncs_per_token"]
+            assert shard <= single + 1e-9, (tag, shard, single)
+        print("BENCH_JSON:" + json.dumps(results))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = f"{root / 'src'}:{root}"
+    out = subprocess.run([sys.executable, "-c", child],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    if out.returncode != 0:
+        raise RuntimeError("mesh bench subprocess failed:\n"
+                           + out.stderr[-3000:])
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("BENCH_JSON:")][-1]
+    return _json.loads(line[len("BENCH_JSON:"):])
+
+
 def run(quick: bool = False, write_json: bool = True, families=None,
         speculate: bool = False, kernel: bool = False, pool: bool = False,
-        chaos: bool = False):
+        chaos: bool = False, mesh: bool = False):
     families = tuple(FAMILY_ARCHS) if families is None else tuple(families)
     results = {}
     partial = set(families) != set(FAMILY_ARCHS) or speculate or kernel \
-        or pool or chaos
+        or pool or chaos or mesh
     if write_json and partial:
         # a partial run (--family subset, --speculate) must MERGE into
         # BENCH_serve_engine.json, never erase the other sections'
@@ -603,6 +709,15 @@ def run(quick: bool = False, write_json: bool = True, families=None,
         for key in [k for k in results if k.startswith("chaos_")]:
             del results[key]
         results.update(_bench_chaos(quick))
+    if mesh:
+        for key in [k for k in results if k.startswith("mesh_")]:
+            del results[key]
+        results.update(_bench_mesh(quick))
+    for m in results.values():
+        # uniform schema across the whole trajectory: every entry says
+        # what mesh it ran on (pre-sharding entries backfill as 1x1)
+        m.setdefault("mesh_shape", "1x1")
+        m.setdefault("n_devices", 1)
 
     for name, m in results.items():
         print(f"serve_{name},tok_per_s,{m['tok_per_s']:.1f}")
@@ -653,9 +768,13 @@ if __name__ == "__main__":
                          "overhead, survival under a seeded fault plan "
                          "(survivors token-checked), and crash+journal "
                          "recovery latency")
+    ap.add_argument("--mesh", action="store_true",
+                    help="also bench sharded serving on a forced 4-device "
+                         "host mesh (2x2 dense + paged vs single-device; "
+                         "token-exactness and host-sync parity asserted)")
     a = ap.parse_args()
     fams = {"all": tuple(FAMILY_ARCHS), "none": ()}.get(
         a.family, (a.family,))
     run(quick=a.quick, write_json=not a.no_json, families=fams,
         speculate=a.speculate, kernel=a.kernel, pool=a.pool,
-        chaos=a.chaos)
+        chaos=a.chaos, mesh=a.mesh)

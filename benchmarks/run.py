@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig6,fig7,transfer,roofline,"
-                         "kernels,serve,spec,servek,servep,servec")
+                         "kernels,serve,spec,servek,servep,servec,servem")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -53,6 +53,11 @@ def main() -> None:
         # chaos/fault-tolerance sweep only (merges into the serve JSON)
         from benchmarks.bench_serve_engine import run as sv_chaos
         sv_chaos(quick=args.quick, families=(), chaos=True)
+    if section("servem"):
+        # sharded-vs-single-device mesh sweep only (subprocess with 4
+        # forced host devices; merges into the serve JSON)
+        from benchmarks.bench_serve_engine import run as sv_mesh
+        sv_mesh(quick=args.quick, families=(), mesh=True)
     if section("fig6"):
         from benchmarks.bench_fig6_rank_ablation import run as f6
         f6(quick=args.quick)

@@ -18,6 +18,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh_compat(shape, axes)
 
 
+def make_serve_mesh(shape):
+    """The serving engine's (data=replica, model=TP) mesh from a "DxM"
+    string or (data, model) tuple — the launch-layer face of
+    ``distributed/serve_sharding.py``."""
+    from repro.distributed.serve_sharding import parse_mesh_arg
+    return make_mesh_compat(parse_mesh_arg(shape), ("data", "model"))
+
+
 def make_host_mesh():
     """Whatever devices exist locally, as a (data, model) mesh with model=1.
 

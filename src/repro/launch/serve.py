@@ -226,6 +226,14 @@ def main():
     ap.add_argument("--pages", type=int, default=0,
                     help="paged: page-arena depth (0 = capacity * blocks "
                          "per slot, i.e. the dense pool's footprint)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="continuous: serve over a (data=replica, "
+                         "model=TP) device mesh — weights and slot pools "
+                         "shard, the engine protocol is unchanged.  "
+                         "Default: auto-chosen from the visible device "
+                         "count (1 device serves unsharded).  Validate "
+                         "on CPU with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--deadline", type=float, default=0.0,
                     help="continuous: per-request TTL in seconds — the "
                          "watchdog evicts a request this long after its "
@@ -281,6 +289,10 @@ def main():
     if args.engine == "naive" and (args.pool != "dense" or args.pages):
         raise SystemExit("error: --pool/--pages require --engine "
                          "continuous (the naive loop has no slot pool)")
+    if args.engine == "naive" and args.mesh:
+        raise SystemExit("error: --mesh requires --engine continuous "
+                         "(only the slot-pool engine shards across "
+                         "devices)")
     if args.engine == "naive" and (args.deadline or args.journal
                                    or args.resume or args.faults
                                    or args.snapshot):
@@ -361,6 +373,24 @@ def main():
               f"{len(resumed)} re-admitting mid-flight")
     journal = RequestJournal(args.journal) if args.journal else None
     faults = FaultPlan.parse(args.faults) if args.faults else None
+    from repro.distributed import serve_sharding
+    mesh_arg = None
+    if args.mesh:
+        try:
+            mesh_arg = serve_sharding.validate_serve_mesh(
+                args.mesh, cfg, args.capacity,
+                n_devices=len(jax.devices()))
+        except ValueError as e:
+            # the clear-error contract: a layout that cannot shard this
+            # engine dies HERE, naming the geometry, not as an XLA shape
+            # crash three layers down
+            raise SystemExit(f"error: {e}")
+    elif len(jax.devices()) > 1:
+        try:
+            mesh_arg = serve_sharding.choose_serve_mesh_shape(
+                len(jax.devices()), cfg, args.capacity)
+        except ValueError as e:
+            print(f"[serve] {e} — serving single-device")
     engine = ContinuousBatchingEngine(cfg, params, capacity=args.capacity,
                                       max_len=max_len, k=args.k,
                                       policy=args.policy, pool=args.pool,
@@ -368,7 +398,23 @@ def main():
                                       sampling=sampling,
                                       speculative=speculative,
                                       deadline=args.deadline or None,
-                                      journal=journal, faults=faults)
+                                      journal=journal, faults=faults,
+                                      mesh=mesh_arg)
+    mb = 1024 * 1024
+    print(f"[serve] mesh {engine.mesh_shape} "
+          f"({engine.n_devices} device(s)) — per-device reservation: "
+          f"params {engine.params_bytes_per_device / mb:.2f} MiB, "
+          f"slot pools {engine.pool_bytes_per_device / mb:.2f} MiB")
+    if engine.kernel_tp_fallback:
+        print(f"[serve] --kernel {args.kernel}: the Pallas slot kernels "
+              "read whole pool rows, so tensor-parallel serving falls "
+              "back to the jnp path (token-exact either way)")
+    if engine.pages_budget is not None and len(engine.pages_budget) == 2:
+        print(f"[serve] page budget: {engine.pages_budget[0]} target + "
+              f"{engine.pages_budget[1]} draft pages"
+              + (f" (one --pages {args.pages} arena budget, split by "
+                 "per-slot block count)" if args.pages else
+                 " (per-pool defaults)"))
     if args.pool == "paged" and engine.pool_kind == "dense":
         print(f"[serve] --pool paged: {cfg.family}/{engine.cache_layout} "
               "has no pageable KV group — serving dense")

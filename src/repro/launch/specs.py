@@ -82,6 +82,31 @@ def paged_slot_pool_specs(cfg: ModelConfig, capacity: int, max_len: int,
                                            pages)[0])
 
 
+def slot_pool_shardings(cfg: ModelConfig, capacity: int, max_len: int,
+                        mesh_shape, *, pool: str = "dense",
+                        pages: int | None = None):
+    """NamedSharding tree for a serve slot pool on a (data, model) mesh —
+    the launch-layer view of what ``--mesh`` commits to devices: slots
+    band over ``data``, head axes shard over ``model``, paged arenas keep
+    their page id space whole with replicated block tables.  Built from
+    abstract specs only (no device allocation), so dry-run tooling can
+    inspect a placement it never materializes."""
+    from repro.distributed.serve_sharding import get_serve_plan
+    from repro.serve import paged as paged_lib
+
+    fam = get_family(cfg)
+    plan = get_serve_plan(tuple(mesh_shape))
+    meta = None
+    specs = slot_pool_specs(cfg, capacity, max_len)
+    if pool == "paged":
+        paged_specs = paged_slot_pool_specs(cfg, capacity, max_len, pages)
+        if paged_specs is not None:
+            specs = paged_specs
+            meta = paged_lib.pool_meta(
+                cache_specs_abstract(cfg, capacity, max_len), pages)
+    return plan.pool_shardings(fam, cfg, specs, meta)
+
+
 def slot_decode_specs(cfg: ModelConfig, capacity: int, max_len: int):
     """Abstract inputs of one slot-decode macro-step dispatch
     (``make_slot_decode_loop`` / ``make_speculative_loop``): the engine's

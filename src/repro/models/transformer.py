@@ -166,6 +166,15 @@ def _kernel_mode(cfg):
     return None if cfg.decode_kernel == "jnp" else cfg.decode_kernel
 
 
+def _flash_block(s):
+    """Flash-attention block size for a prefill of length ``s``: the
+    largest power-of-two divisor, capped at the kernel's native 128.
+    None when the divisor is degenerate (< 8) — the tiny-grid launch
+    overhead then exceeds the masked-compute tax the kernel avoids."""
+    b = min(s & -s, 128)
+    return b if b >= 8 else None
+
+
 def _is_ring(cache_len, window):
     """A window cache whose length reaches the window is a wrapping ring
     (slot = pos % cache_len); a shorter one never wraps and uses the
@@ -412,6 +421,30 @@ def _attn_forward(x, p, cfg, positions, *, cache=None, q_offset=0,
         new_cache = {"k": ck, "v": cv}
         k, v = ck.astype(cdt), cv.astype(cdt)
         kv_len = q_offset + S
+        kmode = _kernel_mode(cfg)
+        if (S > 1 and kmode is not None and cfg.causal and window is None
+                and isinstance(q_offset, int) and q_offset == 0):
+            # Batched prefill admission on the kernel backend: causal
+            # flash attention over exactly the S in-flight positions.
+            # At q_offset 0, kv_len == S, so the jnp path below masks
+            # nothing beyond the causal band — the flash kernel computes
+            # the identical softmax.  K/V come back out of the cache
+            # slice (not the raw in-flight tensors) so cache-dtype
+            # rounding matches the jnp path bit-for-bit.  Tail-padded
+            # rows still compute, but stay unread: admission gathers each
+            # row's first token at plens-1, inside its true prompt.
+            blk = _flash_block(S)
+            if blk is not None:
+                from repro.kernels import ops
+                of = ops.flash_attention(
+                    q.transpose(0, 2, 1, 3),
+                    k[:, :S].transpose(0, 2, 1, 3),
+                    v[:, :S].transpose(0, 2, 1, 3),
+                    causal=True, mode=kmode,
+                    **({} if kmode == "reference"
+                       else {"bq": blk, "bk": blk}))
+                return (_attn_out(of.transpose(0, 2, 1, 3), p, cfg, cdt),
+                        new_cache)
 
     out = attn_lib.attention(
         q, k, v, causal=cfg.causal, window=window, q_offset=q_offset,

@@ -124,13 +124,20 @@ def _pow2(n: int) -> int:
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key):
+def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key, mesh_plan):
     """Shared jitted (loop, prefill, draft_prefill, admit, evict,
     hit_admit) per (config, K, sampling, speculative pair, paging
-    geometry): every engine instance over the same frozen configs reuses
-    one compile cache.  Pool and state buffers are donated throughout —
-    the engine always rebinds the returned handles, so every update is in
-    place instead of a pool copy.
+    geometry, mesh plan): every engine instance over the same frozen
+    configs reuses one compile cache.  Pool and state buffers are donated
+    throughout — the engine always rebinds the returned handles, so every
+    update is in place instead of a pool copy.
+
+    ``mesh_plan`` (a :class:`repro.distributed.serve_sharding
+    .ServeMeshPlan`, or None for the single-device engine) wraps every
+    returned function so it traces under the plan's mesh + logical rules:
+    the model-internal ``annotate`` calls then pin activations to the
+    (data=slots, model=heads) layout, and the committed shardings of the
+    params/pool/state arguments do the rest through GSPMD.
 
     ``pools`` is a TUPLE of slot pools — ``(target,)`` normally,
     ``(target, draft)`` in speculative mode — so admission and eviction
@@ -269,7 +276,10 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key):
                     (tokens, positions, remaining, eos, done, keys), first)
 
         hit_admit = jax.jit(hit_fn, donate_argnums=(1, 2))
-    return loop, prefill, draft_prefill, admit, evict, hit_admit, fb_loop
+    fns = (loop, prefill, draft_prefill, admit, evict, hit_admit, fb_loop)
+    if mesh_plan is not None:
+        fns = tuple(mesh_plan.wrap(f) for f in fns)
+    return fns
 
 
 @dataclasses.dataclass
@@ -343,7 +353,7 @@ class ContinuousBatchingEngine:
                  speculative: Optional[SpeculativeConfig] = None,
                  deadline: Optional[float] = None,
                  shed_age: Optional[float] = None,
-                 journal=None, faults=None):
+                 journal=None, faults=None, mesh=None):
         if pool not in ("dense", "paged"):
             raise ValueError(f"unknown pool kind {pool!r} "
                              "(choose 'dense' or 'paged')")
@@ -356,6 +366,32 @@ class ContinuousBatchingEngine:
         if policy not in POLICIES:
             raise ValueError(f"unknown admission policy {policy!r} "
                              f"(choose from {POLICIES})")
+        # ``mesh``: None (single-device), "DxM", or a (data, model) tuple.
+        # A 1x1 mesh is inert — the same engine serves 1..N devices.
+        self.mesh_plan = None
+        self.kernel_tp_fallback = False
+        if mesh is not None:
+            from repro.distributed import serve_sharding
+            shape = serve_sharding.validate_serve_mesh(
+                mesh, cfg, capacity, n_devices=None)
+            if shape[0] * shape[1] > 1:
+                if shape[0] * shape[1] != len(jax.devices()):
+                    raise ValueError(
+                        f"mesh {shape[0]}x{shape[1]} needs "
+                        f"{shape[0] * shape[1]} devices but "
+                        f"{len(jax.devices())} are visible")
+                self.mesh_plan = serve_sharding.get_serve_plan(shape)
+                if cfg.decode_kernel != "jnp":
+                    # the Pallas slot kernels read whole pool rows per
+                    # block — under TP each device only holds its head
+                    # shard, so sharded engines fall back to the jnp
+                    # path (token-exact either way)
+                    cfg = cfg.replace(decode_kernel="jnp")
+                    self.kernel_tp_fallback = True
+        self.mesh_shape = (self.mesh_plan.describe()
+                           if self.mesh_plan is not None else "1x1")
+        self.n_devices = (self.mesh_plan.n_devices
+                          if self.mesh_plan is not None else 1)
         limit = cfg.max_seq_len
         if cfg.learned_pos:
             limit = min(limit, cfg.learned_pos)
@@ -409,15 +445,34 @@ class ContinuousBatchingEngine:
         if speculative is not None:
             fams.append(get_family(speculative.cfg))
             cfgs.append(speculative.cfg)
+        self.pages_arg = pages  # requested --pages budget (snapshot field)
+        budgets = [pages] * len(fams)
+        if pool == "paged" and pages and len(fams) == 2:
+            # an EXPLICIT --pages budget is the whole engine's arena
+            # budget: split it between target and draft by their per-slot
+            # block counts, so the reservation report and backpressure
+            # reflect real memory instead of double-counting the budget
+            # once per pool
+            probe = [paged_lib.pool_meta(
+                jax.eval_shape(lambda f=f, c=c: f.init_cache(
+                    c, capacity, max_len))) for f, c in zip(fams, cfgs)]
+            if all(m is not None for m in probe):
+                nt, nd = probe[0].nblk, probe[1].nblk
+                tgt = max(1, min(int(pages) - 1,
+                                 int(pages) * nt // (nt + nd)))
+                budgets = [tgt, int(pages) - tgt]
+        self.pages_budget = None
         pools, metas = [], []
-        for f, c in zip(fams, cfgs):
+        for f, c, b in zip(fams, cfgs, budgets):
             if pool == "paged":
                 p, m = paged_lib.build_paged_pool(f, c, capacity, max_len,
-                                                  pages)
+                                                  b)
             else:
                 p, m = f.init_cache(c, capacity, max_len), None
             pools.append(p)
             metas.append(m)
+        if pool == "paged" and all(m is not None for m in metas):
+            self.pages_budget = tuple(m.n_pages for m in metas)
         self._pools = tuple(pools)
         self._metas = tuple(metas)
         self._paged = any(m is not None for m in metas)
@@ -443,7 +498,47 @@ class ContinuousBatchingEngine:
                        jnp.full((capacity,), -1, jnp.int32),
                        jnp.ones((capacity,), bool),
                        jnp.zeros((capacity, 2), jnp.uint32))
-        self.free: List[int] = list(range(capacity))[::-1]  # pop -> slot 0..
+        if self.mesh_plan is not None:
+            # Commit every long-lived buffer to the mesh ONCE, here.
+            # After this, each macro step's cross-device traffic is only
+            # the per-layer TP collectives GSPMD inserts in the forward
+            # pass — the host never moves pool bytes again (readback is
+            # the per-slot token/done scalars only).
+            from repro.distributed import serve_sharding
+            plan = self.mesh_plan
+            self.params = jax.device_put(
+                self.params, plan.params_shardings_for(self.fam, cfg,
+                                                       self.params))
+            if self.speculative is not None:
+                self.speculative = SpeculativeConfig(
+                    self.speculative.cfg,
+                    jax.device_put(
+                        self.speculative.params,
+                        plan.params_shardings_for(
+                            get_family(self.speculative.cfg),
+                            self.speculative.cfg,
+                            self.speculative.params)),
+                    self.speculative.d)
+            self._pools = tuple(
+                jax.device_put(p, plan.pool_shardings(f, c, p, m))
+                for f, c, p, m in zip(fams, cfgs, self._pools,
+                                      self._metas))
+            self._state = jax.device_put(self._state,
+                                         plan.state_shardings())
+            self.params_bytes_per_device = serve_sharding.per_device_bytes(
+                self.params)
+            self.pool_bytes_per_device = serve_sharding.per_device_bytes(
+                self._pools)
+        else:
+            from repro.distributed.serve_sharding import per_device_bytes
+            self.params_bytes_per_device = per_device_bytes(self.params)
+            self.pool_bytes_per_device = per_device_bytes(self._pools)
+        if self.mesh_plan is not None and self.mesh_plan.data > 1:
+            # admission round-robins consecutive requests across the data
+            # replicas' slot bands (pop from the end)
+            self.free = self.mesh_plan.free_slot_order(capacity)[::-1]
+        else:
+            self.free = list(range(capacity))[::-1]  # pop -> slot 0..
         self.waiting: collections.deque[Request] = collections.deque()
         self.active: Dict[int, _Sequence] = {}
         self.finished: Dict[int, np.ndarray] = {}
@@ -490,7 +585,7 @@ class ContinuousBatchingEngine:
             else (speculative.cfg, speculative.d)
         (self._loop, self._prefill, self._draft_prefill, self._admit,
          self._evict, self._hit_admit, self._fb_loop) = _jitted_engine_fns(
-            cfg, k, self.sampling, spec_key, self._metas)
+            cfg, k, self.sampling, spec_key, self._metas, self.mesh_plan)
 
     @property
     def pool(self):

@@ -230,8 +230,8 @@ def snapshot_engine(engine: ContinuousBatchingEngine, ckpt_dir: str,
         "k": engine.k,
         "policy": engine.policy,
         "pool": "paged" if engine._metas[0] is not None else "dense",
-        "pages": (engine._metas[0].n_pages
-                  if engine._metas[0] is not None else None),
+        "pages": engine.pages_arg,
+        "mesh_shape": engine.mesh_shape,
         "sampling": None if sp is None else dataclasses.asdict(sp),
         "draft_arch": (None if engine.speculative is None
                        else engine.speculative.cfg.name),
@@ -283,5 +283,16 @@ def restore_engine(ckpt_dir: str, step: Optional[int] = None,
               policy=extra["policy"], pool=extra["pool"],
               pages=extra.get("pages"), sampling=sampling,
               speculative=speculative, deadline=extra.get("deadline"))
+    # Elastic restart is a placement-only problem: the snapshot carries no
+    # device state, so the saved mesh shape is a *preference*, not a
+    # requirement.  Reuse it only when it still fits the visible device
+    # count; otherwise restore single-device (pass ``mesh=…`` explicitly
+    # to re-shard onto a different layout).
+    saved_mesh = extra.get("mesh_shape")
+    if saved_mesh and saved_mesh != "1x1":
+        from repro.distributed.serve_sharding import parse_mesh_arg
+        shape = parse_mesh_arg(saved_mesh)
+        if shape[0] * shape[1] == len(jax.devices()):
+            kw["mesh"] = shape
     kw.update(overrides)
     return ContinuousBatchingEngine(cfg, tree["params"], **kw)

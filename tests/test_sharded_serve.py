@@ -1,0 +1,349 @@
+"""Sharded serving: mesh selection/validation units, token-exactness of
+the (data=replica, model=TP) engine vs single-device, the speculative
+paged-arena budget split, and the flash-attention prefill backend.
+
+The in-process jax sees 1 CPU device, so anything needing a real mesh
+runs in a subprocess with ``--xla_force_host_platform_device_count``
+(the ``tests/test_sharding.py`` pattern).  Single-process tests cover
+everything that is pure geometry (parse/choose/validate, the 1x1 inert
+path, budget split + refcount, flash parity).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.distributed.serve_sharding import (
+    choose_serve_mesh_shape,
+    parse_mesh_arg,
+    serve_sharding_rules,
+    validate_serve_mesh,
+)
+from repro.distributed.sharding import logical_to_spec
+from repro.models import get_family
+from repro.serve import ContinuousBatchingEngine, Request, SamplingParams
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_subprocess(code, devices=4):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# --------------------------------------------------------------- geometry
+def test_parse_mesh_arg():
+    assert parse_mesh_arg("2x2") == (2, 2)
+    assert parse_mesh_arg("1X4") == (1, 4)
+    assert parse_mesh_arg((4, 1)) == (4, 1)
+    for bad in ("2", "2x2x2", "ax2", "0x4", (2,)):
+        with pytest.raises(ValueError):
+            parse_mesh_arg(bad)
+
+
+def test_validate_serve_mesh_names_the_offender():
+    cfg = get_config("gpt-micro")  # 4 heads
+    assert validate_serve_mesh("2x2", cfg, capacity=4) == (2, 2)
+    with pytest.raises(ValueError, match="devices"):
+        validate_serve_mesh("2x2", cfg, capacity=4, n_devices=8)
+    with pytest.raises(ValueError, match="n_heads"):
+        validate_serve_mesh("1x3", cfg, capacity=4)
+    with pytest.raises(ValueError, match="capacity"):
+        validate_serve_mesh("4x1", cfg, capacity=6)
+
+
+def test_choose_serve_mesh_shape_prefers_tp():
+    cfg = get_config("gpt-micro")  # 4 heads
+    assert choose_serve_mesh_shape(4, cfg, capacity=4) == (1, 4)
+    assert choose_serve_mesh_shape(2, cfg, capacity=4) == (1, 2)
+    # model=8 does not divide 4 heads -> fall to 8 = 2 data x 4 model
+    assert choose_serve_mesh_shape(8, cfg, capacity=4) == (2, 4)
+    # 8 devices, 4 heads, capacity 3: every layout fails one divisor
+    with pytest.raises(ValueError, match="no \\(data, model\\) layout"):
+        choose_serve_mesh_shape(8, cfg, capacity=3)
+
+
+def test_serve_rules_keep_cache_seq_local():
+    class _FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (2, 2)
+
+    rules = serve_sharding_rules()
+    # slot pool: slots band over data, kv heads over model, seq LOCAL
+    spec = logical_to_spec(("layers", "batch", "cache_seq", "kv_heads",
+                            "head_dim"), (4, 8, 64, 4, 16),
+                           _FakeMesh, rules)
+    assert spec == P(None, "data", None, "model", None)
+    # griffin kv_heads=1: divisibility guard replicates the head axis
+    spec = logical_to_spec(("layers", "batch", "cache_seq", "kv_heads",
+                            "head_dim"), (3, 8, 16, 1, 16),
+                           _FakeMesh, rules)
+    assert spec == P(None, "data", None, None, None)
+
+
+def test_mesh_1x1_is_inert():
+    cfg = get_config("gpt-micro")
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    reqs = lambda: [Request(uid=u, prompt=np.arange(1, 5 + u, dtype=np.int32),
+                            max_new_tokens=4) for u in range(3)]
+    base = ContinuousBatchingEngine(cfg, params, capacity=2, max_len=32,
+                                    k=2)
+    inert = ContinuousBatchingEngine(cfg, params, capacity=2, max_len=32,
+                                     k=2, mesh="1x1")
+    assert inert.mesh_plan is None and inert.mesh_shape == "1x1"
+    assert inert.n_devices == 1
+    got, want = inert.run(reqs()), base.run(reqs())
+    for u in want:
+        np.testing.assert_array_equal(got[u], want[u])
+
+
+# ------------------------------------------------- speculative page budget
+def test_spec_paged_budget_split_and_cross_pool_release():
+    """An explicit --pages budget is the ENGINE's arena budget: target and
+    draft split it by per-slot block count (no double-counting), and a
+    finished run releases every page of both pools back to its own
+    allocator (the cross-pool refcount contract)."""
+    from repro.serve import SpeculativeConfig
+
+    cfg = get_config("gpt-micro-big")
+    cfg_d = get_config("gpt-micro")
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    params_d = get_family(cfg_d).init(jax.random.PRNGKey(1), cfg_d)
+    eng = ContinuousBatchingEngine(
+        cfg, params, capacity=2, max_len=32, k=2, pool="paged", pages=20,
+        speculative=SpeculativeConfig(cfg_d, params_d, d=2))
+    assert eng.pages_arg == 20
+    assert eng.pages_budget is not None
+    assert sum(eng.pages_budget) == 20
+    assert all(b >= 1 for b in eng.pages_budget)
+    assert tuple(m.n_pages for m in eng._metas) == eng.pages_budget
+    reqs = [Request(uid=u, prompt=np.arange(1, 7 + u, dtype=np.int32),
+                    max_new_tokens=6) for u in range(4)]
+    out = eng.run(reqs)
+    assert set(out) == set(range(4))
+    for alloc, meta in zip(eng._allocs, eng._metas):
+        # retained prefix pages sit in the LRU but stay allocatable
+        assert alloc.available() == meta.n_pages
+
+
+def test_spec_paged_default_pages_unsplit():
+    """Without an explicit budget each pool keeps its dense-equivalent
+    footprint (capacity * blocks-per-slot) — nothing to split."""
+    from repro.serve import SpeculativeConfig
+
+    cfg = get_config("gpt-micro-big")
+    cfg_d = get_config("gpt-micro")
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    params_d = get_family(cfg_d).init(jax.random.PRNGKey(1), cfg_d)
+    eng = ContinuousBatchingEngine(
+        cfg, params, capacity=2, max_len=32, k=2, pool="paged",
+        speculative=SpeculativeConfig(cfg_d, params_d, d=2))
+    assert eng.pages_arg is None
+    assert all(m.n_pages == 2 * m.nblk for m in eng._metas)
+
+
+# ------------------------------------------------------ flash prefill path
+def test_flash_attention_matches_reference_gqa():
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((2, 4, 32, 16), np.float32)
+    k = rng.standard_normal((2, 2, 32, 16), np.float32)
+    v = rng.standard_normal((2, 2, 32, 16), np.float32)
+    out = ops.flash_attention(q, k, v, causal=True, mode="interpret",
+                              bq=8, bk=8)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_flash_block_sizing():
+    from repro.models.transformer import _flash_block
+
+    assert _flash_block(48) == 16
+    assert _flash_block(128) == 128
+    assert _flash_block(384) == 128
+    assert _flash_block(8) == 8
+    assert _flash_block(20) is None  # pow2 divisor 4 < 8: jnp fallback
+
+
+@pytest.mark.parametrize("arch", ["gpt-micro", "qwen1.5-0.5b-smoke"])
+def test_flash_prefill_engine_token_exact(arch):
+    """The kernel-backed engine prefills admissions through the flash
+    kernel (interpret mode on CPU) and must emit the same tokens as the
+    pure-jnp oracle path — including GQA + tail-padded prompt rows."""
+    cfg = get_config(arch)
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    reqs = lambda: [Request(uid=u,
+                            prompt=np.arange(1, 4 + 3 * u, dtype=np.int32)
+                            % cfg.vocab_size,
+                            max_new_tokens=4) for u in range(3)]
+    want = ContinuousBatchingEngine(cfg, params, capacity=2, max_len=48,
+                                    k=2).run(reqs())
+    cfg_k = cfg.replace(decode_kernel="interpret")
+    got = ContinuousBatchingEngine(cfg_k, params, capacity=2, max_len=48,
+                                   k=2).run(reqs())
+    for u in want:
+        np.testing.assert_array_equal(got[u], want[u])
+
+
+# ------------------------------------------------- multi-device subprocess
+_CHILD_PRELUDE = """
+    import json
+    import jax
+    import numpy as np
+    from repro.configs.base import get_config
+    from repro.models import get_family
+    from repro.serve import (ContinuousBatchingEngine, Request,
+                             SamplingParams)
+
+    def reqs(cfg, n=6, gen=8):
+        return [Request(uid=u,
+                        prompt=(np.arange(1, 4 + 2 * u, dtype=np.int32)
+                                % cfg.vocab_size),
+                        max_new_tokens=gen) for u in range(n)]
+
+    def serve(cfg, params, mesh, **kw):
+        eng = ContinuousBatchingEngine(cfg, params, capacity=4,
+                                       max_len=48, mesh=mesh, **kw)
+        out = eng.run(reqs(cfg))
+        return eng, {u: np.asarray(t).tolist() for u, t in out.items()}
+"""
+
+
+def test_sharded_engine_token_exact_dense_and_paged():
+    """2x2 mesh over 4 forced host devices: dense and paged slot pools
+    emit the single-device engine's exact tokens, the round-robin free
+    list bands admissions across replicas, and the committed pool
+    shardings match the contract (slots over data, heads over model,
+    block tables replicated)."""
+    out = _run_subprocess(_CHILD_PRELUDE + """
+    cfg = get_config("gpt-micro")
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    eng1, single = serve(cfg, params, None, k=4)
+    eng2, dense = serve(cfg, params, "2x2", k=4)
+    assert dense == single, (dense, single)
+    _, paged = serve(cfg, params, (2, 2), k=4, pool="paged")
+    assert paged == single, (paged, single)
+    # round-robin admission order across the two replica bands
+    assert eng2.mesh_plan.free_slot_order(4) == [0, 2, 1, 3]
+    # committed placement: slots band over data, heads over model,
+    # cache seq local
+    ksh = eng2.pool["dense"]["k"].sharding
+    assert ksh.spec == jax.sharding.PartitionSpec(
+        None, "data", None, "model"), ksh.spec
+    from repro.launch.specs import slot_pool_shardings
+    psh = slot_pool_shardings(cfg, 4, 48, (2, 2), pool="paged")
+    assert psh["dense"]["bt"].spec == jax.sharding.PartitionSpec(), \\
+        psh["dense"]["bt"].spec
+    assert psh["dense"]["k"].spec == jax.sharding.PartitionSpec(
+        None, None, None, "model", None), psh["dense"]["k"].spec
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("k", [1, 8])
+def test_sharded_sweep_ring_and_griffin(k):
+    """Token-exactness across cache families and decode modes: a
+    ring-window transformer and griffin (recurrent + local-attention
+    rings), greedy and sampled, sharded 2x2 vs single-device."""
+    out = _run_subprocess(_CHILD_PRELUDE + f"""
+    ring = get_config("qwen1.5-0.5b-smoke").replace(
+        name="ring-smoke", window=8)
+    grif = get_config("griffin-micro")
+    for cfg in (ring, grif):
+        params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+        for sampling in (None, SamplingParams(temperature=0.8, top_k=20,
+                                              seed=7)):
+            _, single = serve(cfg, params, None, k={k}, sampling=sampling)
+            _, shard = serve(cfg, params, "2x2", k={k}, sampling=sampling)
+            assert shard == single, (cfg.name, sampling, shard, single)
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_paged_prefix_hit_trace():
+    """The copy-on-write prefix cache behaves identically under the mesh:
+    a shared-prefix wave hits the page registry on both engines, and the
+    tokens (prefix-hit fast path included) stay exact."""
+    out = _run_subprocess(_CHILD_PRELUDE + """
+    cfg = get_config("gpt-micro")
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    shared = np.arange(1, 17, dtype=np.int32)  # 2 full pages of prefix
+    def prefix_reqs():
+        return [Request(uid=u,
+                        prompt=np.concatenate([shared,
+                                               np.int32([u + 1])]),
+                        max_new_tokens=6) for u in range(6)]
+    def run(mesh):
+        eng = ContinuousBatchingEngine(cfg, params, capacity=4,
+                                       max_len=48, k=4, pool="paged",
+                                       mesh=mesh)
+        out = eng.run(prefix_reqs())
+        return (eng.prefix_hit_rate,
+                {u: np.asarray(t).tolist() for u, t in out.items()})
+    hit1, single = run(None)
+    hit2, shard = run("2x2")
+    assert shard == single, (shard, single)
+    assert hit1 > 0 and hit2 == hit1, (hit1, hit2)
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_journal_resume_onto_different_mesh(tmp_path):
+    """Elastic restart as a placement-only problem: kill a 2x2-sharded
+    engine mid-run (injected crash), resume its journal on a 2-device
+    mesh, and the union of committed + resumed tokens equals the
+    uninterrupted single-device run."""
+    journal = str(tmp_path / "mesh_kill.jsonl")
+    _run_subprocess(_CHILD_PRELUDE + f"""
+    from repro.serve import EngineKilled, FaultPlan, RequestJournal
+    cfg = get_config("gpt-micro")
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatchingEngine(
+        cfg, params, capacity=4, max_len=48, k=2, mesh="2x2",
+        journal=RequestJournal({journal!r}),
+        faults=FaultPlan.parse("crash@3"))
+    try:
+        eng.run(reqs(cfg))
+        raise SystemExit("crash fault did not fire")
+    except EngineKilled:
+        eng.journal.close()
+    print("KILLED")
+    """, devices=4)
+    out = _run_subprocess(_CHILD_PRELUDE + f"""
+    from repro.serve import (RequestJournal, read_journal,
+                             recovery_requests)
+    cfg = get_config("gpt-micro")
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    _, want = serve(cfg, params, None, k=2)
+    resumed, done = recovery_requests(read_journal({journal!r}))
+    eng = ContinuousBatchingEngine(cfg, params, capacity=4, max_len=48,
+                                   k=2, mesh="1x2")
+    got = {{u: np.asarray(t).tolist() for u, t in eng.run(resumed).items()}}
+    got.update({{u: np.asarray(t).tolist() for u, t in done.items()}})
+    assert got == want, (got, want)
+    print("OK")
+    """, devices=2)
+    assert "OK" in out
