@@ -15,7 +15,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig6,fig7,transfer,roofline,"
-                         "kernels,serve,spec,servek,servep,servec,servem")
+                         "kernels,serve,spec,servek,servep,servec,servem,"
+                         "serveg")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -58,6 +59,12 @@ def main() -> None:
         # forced host devices; merges into the serve JSON)
         from benchmarks.bench_serve_engine import run as sv_mesh
         sv_mesh(quick=args.quick, families=(), mesh=True)
+    if section("serveg"):
+        # scenario sweep: families x pool x kernel x trace-shape matrix
+        # in per-cell subprocesses, incl. mid-trace live-upgrade cells
+        # (merges into the serve JSON)
+        from benchmarks.scenarios import run as sv_scen
+        sv_scen(quick=args.quick)
     if section("fig6"):
         from benchmarks.bench_fig6_rank_ablation import run as f6
         f6(quick=args.quick)

@@ -33,6 +33,18 @@ from repro.utils.pytree import path_str
 
 _MANIFEST = "manifest.json"
 
+
+class CheckpointShapeError(ValueError):
+    """The restore template's geometry does not match the checkpoint on
+    disk (e.g. a pre-growth snapshot loaded into a post-growth model).
+    Carries the offending leaf in ``.leaf`` and names it in the message,
+    so the caller sees WHICH arrays disagree instead of an XLA shape
+    crash deep inside the first jitted forward pass."""
+
+    def __init__(self, msg: str, leaf: Optional[str] = None):
+        super().__init__(msg)
+        self.leaf = leaf
+
 # numpy round-trips exotic dtypes (bfloat16, fp8) as raw void bytes; map
 # the manifest's logical dtype string back to the ml_dtypes view on load.
 _EXOTIC = {"bfloat16": ml_dtypes.bfloat16,
@@ -111,7 +123,13 @@ def load_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None,
         shard_flat = [s for _, s in _flatten(shardings)[0]]
     leaves = []
     for i, (name, tmpl) in enumerate(flat):
-        meta = manifest["leaves"][name]
+        meta = manifest["leaves"].get(name)
+        if meta is None:
+            raise CheckpointShapeError(
+                f"checkpoint step {step} in {ckpt_dir} has no leaf "
+                f"{name!r}: the restore template describes a different "
+                f"geometry ({len(flat)} template leaves vs "
+                f"{len(manifest['leaves'])} on disk)", leaf=name)
         arr = np.load(os.path.join(d, meta["file"]))
         if meta["dtype"] in _EXOTIC and arr.dtype.kind == "V":
             arr = arr.view(_EXOTIC[meta["dtype"]])
@@ -120,8 +138,11 @@ def load_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None,
             if crc != meta["crc32"]:
                 raise IOError(
                     f"checksum mismatch for {name} in step {step}")
-        assert list(arr.shape) == list(tmpl.shape), (name, arr.shape,
-                                                     tmpl.shape)
+        if list(arr.shape) != list(tmpl.shape):
+            raise CheckpointShapeError(
+                f"leaf {name!r} in checkpoint step {step} has shape "
+                f"{tuple(arr.shape)} but the restore template expects "
+                f"{tuple(tmpl.shape)}", leaf=name)
         if shard_flat is not None:
             leaves.append(jax.device_put(arr.astype(tmpl.dtype),
                                          shard_flat[i]))

@@ -29,16 +29,27 @@ class GrowthOperator:
     trainable: bool
 
 
-def build(method: str, cfg_src, cfg_tgt, rank=1, rng=None):
-    """-> (GrowthOperator, op_params)."""
+def build(method: str, cfg_src, cfg_tgt, rank=1, rng=None, noise=None):
+    """-> (GrowthOperator, op_params).
+
+    ``noise`` scales the random component of the trainable methods'
+    structured init (default 0.01).  ``noise=0`` makes an UNTRAINED
+    mango operator coincide with the Net2Net expansion (width
+    duplication + depth stacking) — the most function-preserving init
+    available, which is what a live hot-swap wants.  Preservation is
+    approximate, not exact: depth growth re-applies copied blocks, so
+    grown logits drift from the source (measure with
+    ``serve/upgrade.py: probe_token_agreement``)."""
     assert method in METHODS, method
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     op = mango.build_operator(cfg_src, cfg_tgt, rank=rank)
     if method == "mango":
-        params = mango.init_operator_params(rng, op)
+        params = mango.init_operator_params(
+            rng, op, **({} if noise is None else {"noise": noise}))
         return GrowthOperator(method, op, True), params
     if method == "ligo":
-        params = baselines.init_ligo_params(rng, op)
+        params = baselines.init_ligo_params(
+            rng, op, **({} if noise is None else {"noise": noise}))
         return GrowthOperator(method, op, True), params
     if method == "bert2bert":
         return GrowthOperator(method, op, False), \
@@ -71,20 +82,22 @@ def operator_param_count(gop: GrowthOperator, op_params) -> int:
 
 def grow_from_source(cfg_src, cfg_tgt, *, method="mango", rank=1, steps=0,
                      data_iter=None, params_src=None, rng=None,
-                     log_fn=print):
+                     noise=None, log_fn=print):
     """Full grow bootstrap: source init -> operator -> (optional Eq. 7
     operator training on ``data_iter``) -> grown target params.
 
     Shared by the train and serve launchers; pass ``params_src`` to grow
     from pretrained (e.g. checkpoint-restored) weights instead of a fresh
-    init.
+    init.  ``noise=0`` (with ``steps=0``) keeps the untrained operator
+    maximally function-preserving — see :func:`build`.
     """
     from repro.train.loss import loss_for
 
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     if params_src is None:
         params_src = get_family(cfg_src).init(rng, cfg_src)
-    gop, op_params = build(method, cfg_src, cfg_tgt, rank=rank, rng=rng)
+    gop, op_params = build(method, cfg_src, cfg_tgt, rank=rank, rng=rng,
+                           noise=noise)
     if steps:
         if data_iter is None:
             raise ValueError("operator training (steps > 0) needs data_iter")

@@ -193,6 +193,24 @@ def main():
                              "net2net"])
     ap.add_argument("--grow-rank", type=int, default=1)
     ap.add_argument("--grow-steps", type=int, default=0)
+    ap.add_argument("--grow-cfg", default=None, metavar="TGT_ARCH",
+                    help="continuous: LIVE upgrade — Mango-grow --arch "
+                         "into this target while serving, then hot-swap "
+                         "the grown weights into the running engine with "
+                         "zero dropped requests (mid-flight sequences "
+                         "continue token-exactly; the old source becomes "
+                         "the speculative draft when the pair probe "
+                         "passes).  Growth method/rank/steps follow "
+                         "--grow-method/--grow-rank/--grow-steps")
+    ap.add_argument("--upgrade-at", type=int, default=0,
+                    help="with --grow-cfg: minimum decode dispatches "
+                         "before the hot-swap may land (0 = first block "
+                         "boundary after growth is ready)")
+    ap.add_argument("--upgrade-sync", action="store_true",
+                    help="with --grow-cfg: grow BEFORE serving starts "
+                         "instead of on a background thread — the swap "
+                         "then lands deterministically at --upgrade-at "
+                         "(CI smoke / reproducible traces)")
     ap.add_argument("--speculate", action="store_true",
                     help="speculative decode: a draft model proposes, the "
                          "target verifies (needs --draft, or --grow whose "
@@ -302,6 +320,14 @@ def main():
     if args.resume and not args.journal:
         raise SystemExit("error: --resume needs --journal PATH (the "
                          "journal IS the recovery record)")
+    if args.grow_cfg and args.engine != "continuous":
+        raise SystemExit("error: --grow-cfg requires --engine continuous "
+                         "(a live upgrade hot-swaps the slot-pool "
+                         "engine)")
+    if (args.upgrade_at or args.upgrade_sync) and not args.grow_cfg:
+        raise SystemExit("error: --upgrade-at/--upgrade-sync need "
+                         "--grow-cfg TGT_ARCH (they schedule the live "
+                         "upgrade)")
     speculative = None
     max_len = args.max_len or (args.prompt_len + args.gen)
     if args.speculate:
@@ -421,6 +447,22 @@ def main():
     if args.snapshot:
         path = snapshot_engine(engine, args.snapshot)
         print(f"[serve] engine snapshot -> {path}")
+    upgrade_mgr = None
+    if args.grow_cfg:
+        from repro.serve.upgrade import UpgradeError, UpgradeManager
+        try:
+            upgrade_mgr = UpgradeManager(
+                engine, get_config(args.grow_cfg),
+                method=args.grow_method, rank=args.grow_rank,
+                grow_steps=args.grow_steps, spec_d=args.spec_d,
+                upgrade_at=args.upgrade_at, probe_fp=True)
+        except UpgradeError as e:
+            raise SystemExit(f"error: --grow-cfg: {e}")
+        upgrade_mgr.start(background=not args.upgrade_sync)
+        mode = "pre-grown" if args.upgrade_sync else "growing in background"
+        print(f"[serve] live upgrade armed: {cfg.name} -> "
+              f"{upgrade_mgr.cfg_tgt.name} ({mode}, swap at dispatch "
+              f">= {args.upgrade_at})")
     rng = np.random.default_rng(0)
     reqs = list(resumed)
     known = {r.uid for r in resumed} | set(recovered)
@@ -444,6 +486,32 @@ def main():
               "holds the committed state; rerun with --resume")
         return
     dt = time.time() - t0
+    if upgrade_mgr is not None:
+        if upgrade_mgr.state in ("growing", "ready"):
+            # the trace finished before the background growth was ready:
+            # land the swap now so the NEXT trace serves the target
+            upgrade_mgr.wait()
+            upgrade_mgr.poll(engine)
+            print("[serve] upgrade: growth outlived the trace — swap "
+                  "landed at trace end")
+        if upgrade_mgr.state == "swapped":
+            spec_note = (f"draft={upgrade_mgr.cfg_src.name} "
+                         f"d={upgrade_mgr.spec_d}"
+                         if engine.speculative is not None else
+                         f"off ({upgrade_mgr.spec_reason})")
+            fp = upgrade_mgr.fp_token_agreement
+            print(f"[serve] upgrade SWAPPED: {upgrade_mgr.cfg_src.name} "
+                  f"-> {upgrade_mgr.cfg_tgt.name} in "
+                  f"{upgrade_mgr.grow_seconds:.1f}s growth, pause "
+                  f"{upgrade_mgr.pause_ms:.0f} ms, "
+                  f"{upgrade_mgr.resumed} mid-flight resumed, "
+                  f"{engine.n_held_for_upgrade} held submits, "
+                  f"{len(engine.rejected)} dropped; greedy agreement "
+                  f"{'n/a' if fp is None else f'{fp:.3f}'}; "
+                  f"post-swap speculation {spec_note}")
+        elif upgrade_mgr.state == "failed":
+            print(f"[serve] upgrade FAILED (engine kept serving "
+                  f"{cfg.name}): {upgrade_mgr.error}")
     out = {**recovered, **out}
     n_tok = sum(len(v) for v in out.values())
     mode = "speculative" if speculative is not None else "continuous"

@@ -13,8 +13,10 @@ from repro.serve.recovery import (
 )
 from repro.serve.sampling import SamplingParams
 from repro.serve.speculative import SpeculativeConfig, spec_pair_supported
+from repro.serve.upgrade import UpgradeError, UpgradeManager
 
 __all__ = ["ContinuousBatchingEngine", "Request", "SamplingParams",
            "SpeculativeConfig", "spec_pair_supported", "EngineKilled",
            "Fault", "FaultPlan", "RequestJournal", "read_journal",
-           "recovery_requests", "restore_engine", "snapshot_engine"]
+           "recovery_requests", "restore_engine", "snapshot_engine",
+           "UpgradeManager", "UpgradeError"]

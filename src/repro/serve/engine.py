@@ -113,6 +113,7 @@ _WINDOW_COUNTERS = (
     "n_prefix_hits", "n_prefix_misses", "n_prefix_stalls",
     "n_pages_allocated", "n_expired", "n_quarantined", "n_shed",
     "n_spec_fallbacks", "n_faults_injected", "n_degraded_admissions",
+    "n_held_for_upgrade",
 )
 
 
@@ -357,23 +358,104 @@ class ContinuousBatchingEngine:
         if pool not in ("dense", "paged"):
             raise ValueError(f"unknown pool kind {pool!r} "
                              "(choose 'dense' or 'paged')")
-        ok, why = serve_supported(cfg)
-        if not ok:
-            raise NotImplementedError(
-                f"continuous batching cannot serve {cfg.name!r}: {why}")
         if k < 1:
             raise ValueError(f"macro-step length k must be >= 1 (got {k})")
         if policy not in POLICIES:
             raise ValueError(f"unknown admission policy {policy!r} "
                              f"(choose from {POLICIES})")
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be > 0 (got {deadline})")
+        if shed_age is not None and shed_age <= 0:
+            raise ValueError(f"shed_age must be > 0 (got {shed_age})")
+        self.capacity = capacity
+        self.max_len = max_len
+        self.prefill_bucket = prefill_bucket
+        self.k = k
+        self.policy = policy
+        self.sampling = None if sampling_lib.is_greedy(sampling) \
+            else sampling
+        self.deadline = deadline  # engine-wide TTL (seconds); None = off
+        self.shed_age = shed_age  # queue-age load-shed threshold
+        self.journal = journal  # RequestJournal or None
+        self.faults = faults  # FaultPlan or None (chaos harness only)
+        self._pool_arg = pool  # requested pool kind (re-applied on swap)
+        self.pages_arg = pages  # requested --pages budget (snapshot field)
+        self._mesh_arg = mesh  # requested mesh (re-validated on swap)
+        # host-side request bookkeeping.  Owned by __init__ and NEVER
+        # rebuilt by _configure: a live upgrade replaces the model under
+        # the traffic, not the traffic under the model.
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.active: Dict[int, _Sequence] = {}
+        self.finished: Dict[int, np.ndarray] = {}
+        self.retired: List[_Sequence] = []  # kept for latency accounting
+        self.rejected: Dict[int, str] = {}  # uid -> why submit refused it
+        # uid -> terminal outcome: finished / expired / quarantined /
+        # shed / rejected (only "finished" rows are complete outputs)
+        self.outcomes: Dict[int, str] = {}
+        self._seen_uids: set = set()
+        self._t_submit: Dict[int, float] = {}  # uid -> wall submit time
+        self._any_deadline = deadline is not None  # fast path when off
+        self._fault_step = 0  # dispatches seen (FaultPlan clock)
+        self._oom_waves = 0  # admission waves stalled by an oom fault
+        self._poison_jit = None  # lazy donated jit of faults.poison_pool
+        self._evict_pending: List[int] = []
+        # (block, valid, [(slot, uid)], stats) of dispatched-but-unread
+        # macro steps
+        self._inflight: collections.deque = collections.deque()
+        # live-upgrade machinery: serve/upgrade.py attaches an
+        # UpgradeManager here and drives upgrade_state through
+        # serving -> relayout -> swapped at a block-readback boundary
+        self.upgrade = None
+        self.upgrade_state = "serving"
+        self._held_for_upgrade: List[Request] = []
+        self.n_upgrades = 0  # completed hot-swaps since boot
+        self.last_upgrade_pause_ms: Optional[float] = None
+        self.n_decode_dispatches = 0
+        self.n_decode_steps = 0  # dispatches * k (scan steps executed)
+        self.n_prefills = 0  # admission-batch prefill dispatches
+        self.n_host_syncs = 0  # blocking device->host reads
+        self.n_tokens = 0  # generated tokens (incl. prefill first tokens)
+        self.n_spec_proposed = 0  # draft tokens offered to the target
+        self.n_spec_accepted = 0  # draft tokens the target kept
+        self.n_admitted = 0  # requests that got a slot (+pages if paged)
+        self.n_prefix_hits = 0  # admissions served from resident pages
+        self.n_prefix_misses = 0  # prefix probes that found no full chain
+        self.n_prefix_stalls = 0  # hits deferred on tail-page backpressure
+        self.n_pages_allocated = 0  # fresh target-pool pages handed out
+        self.n_expired = 0  # deadline-evicted requests (active or queued)
+        self.n_quarantined = 0  # NaN/Inf-poisoned slots evicted
+        self.n_shed = 0  # queued requests dropped by queue-age shedding
+        self.n_spec_fallbacks = 0  # draft faults that tripped plain decode
+        self.n_faults_injected = 0  # FaultPlan records actually fired
+        self.n_degraded_admissions = 0  # full-reservation paged admissions
+        self.n_held_for_upgrade = 0  # submits held across a swap window
+        # drained-window history (satellite: drain() snapshots + resets
+        # the window counters; lifetime totals live here)
+        self.lifetime: Dict[str, int] = {c: 0 for c in _WINDOW_COUNTERS}
+        self._configure(cfg, params, speculative)
+
+    def _configure(self, cfg, params, speculative):
+        """Build — or, on a live upgrade, REBUILD — everything derived
+        from the model configuration: mesh plan, slot pools + paging
+        metadata, decode state, committed shardings, and the jitted fn
+        set.  ``_apply_upgrade`` calls this again with the grown config
+        after quiescing, which is exactly the "pool re-layout" step of
+        the swap; every host-side queue/telemetry structure lives in
+        ``__init__`` and survives."""
+        capacity, max_len = self.capacity, self.max_len
+        pool, pages = self._pool_arg, self.pages_arg
+        ok, why = serve_supported(cfg)
+        if not ok:
+            raise NotImplementedError(
+                f"continuous batching cannot serve {cfg.name!r}: {why}")
         # ``mesh``: None (single-device), "DxM", or a (data, model) tuple.
         # A 1x1 mesh is inert — the same engine serves 1..N devices.
         self.mesh_plan = None
         self.kernel_tp_fallback = False
-        if mesh is not None:
+        if self._mesh_arg is not None:
             from repro.distributed import serve_sharding
             shape = serve_sharding.validate_serve_mesh(
-                mesh, cfg, capacity, n_devices=None)
+                self._mesh_arg, cfg, capacity, n_devices=None)
             if shape[0] * shape[1] > 1:
                 if shape[0] * shape[1] != len(jax.devices()):
                     raise ValueError(
@@ -417,22 +499,7 @@ class ContinuousBatchingEngine:
         self.fam = get_family(cfg)
         self.cache_layout = slot_cache_layout(cfg)
         self.decode_kernel = cfg.decode_kernel  # telemetry / bench tag
-        self.capacity = capacity
-        self.max_len = max_len
-        self.prefill_bucket = prefill_bucket
-        self.k = k
-        self.policy = policy
-        self.sampling = None if sampling_lib.is_greedy(sampling) \
-            else sampling
         self.speculative = speculative
-        if deadline is not None and deadline <= 0:
-            raise ValueError(f"deadline must be > 0 (got {deadline})")
-        if shed_age is not None and shed_age <= 0:
-            raise ValueError(f"shed_age must be > 0 (got {shed_age})")
-        self.deadline = deadline  # engine-wide TTL (seconds); None = off
-        self.shed_age = shed_age  # queue-age load-shed threshold
-        self.journal = journal  # RequestJournal or None
-        self.faults = faults  # FaultPlan or None (chaos harness only)
 
         if pool == "paged" and speculative is not None \
                 and cfg.family != "transformer":
@@ -445,7 +512,6 @@ class ContinuousBatchingEngine:
         if speculative is not None:
             fams.append(get_family(speculative.cfg))
             cfgs.append(speculative.cfg)
-        self.pages_arg = pages  # requested --pages budget (snapshot field)
         budgets = [pages] * len(fams)
         if pool == "paged" and pages and len(fams) == 2:
             # an EXPLICIT --pages budget is the whole engine's arena
@@ -487,9 +553,11 @@ class ContinuousBatchingEngine:
         # shared-prefix admission: only meaningful where the block table
         # is absolute-position-addressed and decode is deterministic
         self._prefix_ok = (metas[0] is not None and speculative is None
-                           and sampling_lib.is_greedy(sampling)
+                           and self.sampling is None
                            and cfg.family == "transformer"
                            and not getattr(cfg, "window", None))
+        self._spec_fallback = False  # draft faulted: plain macro decode
+        self._arena_degraded = False  # paged arena faulted: no sharing
         # persistent device-resident decode state: (tokens, positions,
         # remaining, eos_ids, done, sampling keys) — idle slots are done
         self._state = (jnp.zeros((capacity,), jnp.int32),
@@ -539,53 +607,13 @@ class ContinuousBatchingEngine:
             self.free = self.mesh_plan.free_slot_order(capacity)[::-1]
         else:
             self.free = list(range(capacity))[::-1]  # pop -> slot 0..
-        self.waiting: collections.deque[Request] = collections.deque()
-        self.active: Dict[int, _Sequence] = {}
-        self.finished: Dict[int, np.ndarray] = {}
-        self.retired: List[_Sequence] = []  # kept for latency accounting
-        self.rejected: Dict[int, str] = {}  # uid -> why submit refused it
-        # uid -> terminal outcome: finished / expired / quarantined /
-        # shed / rejected (only "finished" rows are complete outputs)
-        self.outcomes: Dict[int, str] = {}
-        self._seen_uids: set = set()
-        self._t_submit: Dict[int, float] = {}  # uid -> wall submit time
-        self._any_deadline = deadline is not None  # fast path when off
-        self._fault_step = 0  # dispatches seen (FaultPlan clock)
-        self._oom_waves = 0  # admission waves stalled by an oom fault
-        self._spec_fallback = False  # draft faulted: plain macro decode
-        self._arena_degraded = False  # paged arena faulted: no sharing
-        self._poison_jit = None  # lazy donated jit of faults.poison_pool
-        self._evict_pending: List[int] = []
-        # (block, valid, [(slot, uid)], stats) of dispatched-but-unread
-        # macro steps
-        self._inflight: collections.deque = collections.deque()
-        self.n_decode_dispatches = 0
-        self.n_decode_steps = 0  # dispatches * k (scan steps executed)
-        self.n_prefills = 0  # admission-batch prefill dispatches
-        self.n_host_syncs = 0  # blocking device->host reads
-        self.n_tokens = 0  # generated tokens (incl. prefill first tokens)
-        self.n_spec_proposed = 0  # draft tokens offered to the target
-        self.n_spec_accepted = 0  # draft tokens the target kept
-        self.n_admitted = 0  # requests that got a slot (+pages if paged)
-        self.n_prefix_hits = 0  # admissions served from resident pages
-        self.n_prefix_misses = 0  # prefix probes that found no full chain
-        self.n_prefix_stalls = 0  # hits deferred on tail-page backpressure
-        self.n_pages_allocated = 0  # fresh target-pool pages handed out
-        self.n_expired = 0  # deadline-evicted requests (active or queued)
-        self.n_quarantined = 0  # NaN/Inf-poisoned slots evicted
-        self.n_shed = 0  # queued requests dropped by queue-age shedding
-        self.n_spec_fallbacks = 0  # draft faults that tripped plain decode
-        self.n_faults_injected = 0  # FaultPlan records actually fired
-        self.n_degraded_admissions = 0  # full-reservation paged admissions
-        # drained-window history (satellite: drain() snapshots + resets
-        # the window counters; lifetime totals live here)
-        self.lifetime: Dict[str, int] = {c: 0 for c in _WINDOW_COUNTERS}
 
         spec_key = None if speculative is None \
             else (speculative.cfg, speculative.d)
         (self._loop, self._prefill, self._draft_prefill, self._admit,
          self._evict, self._hit_admit, self._fb_loop) = _jitted_engine_fns(
-            cfg, k, self.sampling, spec_key, self._metas, self.mesh_plan)
+            cfg, self.k, self.sampling, spec_key, self._metas,
+            self.mesh_plan)
 
     @property
     def pool(self):
@@ -676,17 +704,35 @@ class ContinuousBatchingEngine:
         return None
 
     def submit(self, req: Request):
-        if req.uid in self._seen_uids:
+        if req.uid in self._seen_uids or any(
+                r.uid == req.uid for r in self._held_for_upgrade):
             # a DUPLICATE uid is a caller bug, not a malformed request:
             # silently rejecting it would orphan the caller's wait on
             # the first submission's output
             raise ValueError(f"request uid {req.uid} already submitted")
+        if self.upgrade_state == "relayout":
+            # mid-swap the geometry (and therefore validity — max_len,
+            # vocab, page need) is changing underneath us: hold the
+            # request and run it through the ordinary submit path once
+            # the flip lands, instead of racing the pool re-layout
+            self._held_for_upgrade.append(req)
+            self.n_held_for_upgrade += 1
+            self._t_submit.setdefault(req.uid, time.monotonic())
+            return
+        self._submit_checked(req)
+
+    def _submit_checked(self, req: Request):
+        """Validate + enqueue (the body of ``submit`` past the dup-uid
+        and upgrade gates; also the release path for held submissions)."""
         why = self._invalid_reason(req)
         if why is not None:
+            self._t_submit.pop(req.uid, None)
             self._reject(req.uid, f"request {req.uid}: {why}")
             return
         self._seen_uids.add(req.uid)
-        self._t_submit[req.uid] = time.monotonic()
+        # setdefault: a request held across a swap keeps its original
+        # submit time, so deadlines/shedding count the held window too
+        self._t_submit.setdefault(req.uid, time.monotonic())
         if req.deadline is not None:
             self._any_deadline = True
         if self.journal is not None:
@@ -1159,6 +1205,82 @@ class ContinuousBatchingEngine:
         self.free.extend(self._evict_pending)
         self._evict_pending.clear()
 
+    # ----------------------------------------------------------- live upgrade
+    def _apply_upgrade(self, mgr) -> None:
+        """Hot-swap the grown model under live traffic.  Driven by an
+        attached :class:`repro.serve.upgrade.UpgradeManager` at a
+        block-readback boundary (``poll`` from :meth:`step`/:meth:`run`).
+
+        The pause is ONE quiesce, not a compile (the manager pre-warmed
+        the grown fn set): every in-flight macro block is read back and
+        its tokens committed, each mid-flight sequence becomes a
+        journal-style resume request (original prompt ‖ committed run,
+        ``n_committed`` marking the suffix), the pools / decode state /
+        shardings / jitted fns are rebuilt for the grown geometry, and
+        the resumes re-enter through the ordinary admission path at the
+        FRONT of the queue — ahead of everything that was still waiting.
+        Zero requests are dropped: a resume's position and page need
+        equal its original request's, so it is admissible by
+        construction."""
+        t0 = time.perf_counter()
+        self.upgrade_state = "relayout"
+        while self._inflight:
+            self._process(self._inflight.popleft())
+        self._flush_evictions()
+        resumes: List[Request] = []
+        for seq in sorted(self.active.values(),
+                          key=lambda s: (s.t_first, s.req.uid)):
+            r = seq.req
+            orig = (r.prompt[:len(r.prompt) - r.n_committed]
+                    if r.n_committed else r.prompt)
+            resumes.append(Request(
+                uid=r.uid,
+                prompt=np.asarray(list(orig) + seq.tokens, np.int32),
+                max_new_tokens=r.max_new_tokens, eos_id=r.eos_id,
+                arrival=r.arrival, deadline=r.deadline,
+                n_committed=len(seq.tokens)))
+        self.active.clear()
+        self._evict_pending.clear()
+        spec = mgr.spec_config()
+        self._configure(mgr.cfg_tgt, mgr.grown_params, spec)
+        if spec is not None and any(self._invalid_reason(r) is not None
+                                    for r in resumes):
+            # enabling the post-swap draft split an explicit --pages
+            # arena under an in-flight request's page need; zero-drop
+            # beats free speculation, so swap without the draft
+            mgr.disable_spec("draft arena split would evict an "
+                             "in-flight request")
+            self._configure(mgr.cfg_tgt, mgr.grown_params, None)
+        # queued (never-admitted) requests were validated under the OLD
+        # geometry; re-validate so one that became unservable cannot
+        # livelock admission.  Mid-flight resumes skip this by design.
+        keep: collections.deque = collections.deque()
+        for r in self.waiting:
+            why = self._invalid_reason(r)
+            if why is None:
+                keep.append(r)
+            else:
+                self._seen_uids.discard(r.uid)
+                self._reject(r.uid,
+                             f"request {r.uid}: {why} "
+                             "(post-upgrade geometry)")
+        keep.extendleft(reversed(resumes))
+        self.waiting = keep
+        self.n_upgrades += 1
+        self.upgrade_state = "swapped"
+        held, self._held_for_upgrade = self._held_for_upgrade, []
+        for r in held:
+            self._submit_checked(r)
+        if self.journal is not None:
+            # last-submit-wins resume records: a crash right after the
+            # swap replays exactly these prompt‖committed requests
+            for r in resumes:
+                self.journal.record_submit(r)
+            self.journal.flush()
+        pause_ms = (time.perf_counter() - t0) * 1e3
+        self.last_upgrade_pause_ms = pause_ms
+        mgr._swapped(self, pause_ms, resumes)
+
     # ---------------------------------------------------------------- faults
     def _inject(self, f):
         """Fire one FaultPlan record.  Called from ``_dispatch`` only
@@ -1288,6 +1410,8 @@ class ContinuousBatchingEngine:
     def step(self, now: Optional[float] = None):
         """One synchronous engine iteration: expire, evict, admit arrived
         requests into free slots, run one macro step, and read it back."""
+        if self.upgrade is not None:
+            self.upgrade.poll(self)
         self._expire(now)
         self._flush_evictions()
         self._admit_batch(now)
@@ -1343,6 +1467,8 @@ class ContinuousBatchingEngine:
                     if nxt > now:
                         time.sleep(nxt - now)
                         now = wall_now()
+                if self.upgrade is not None:
+                    self.upgrade.poll(self)
                 self._expire(now)
                 self._flush_evictions()
                 self._admit_batch(now)

@@ -52,6 +52,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import (
+    CheckpointShapeError,
     latest_step,
     load_checkpoint,
     save_checkpoint,
@@ -243,11 +244,20 @@ def snapshot_engine(engine: ContinuousBatchingEngine, ckpt_dir: str,
 
 
 def restore_engine(ckpt_dir: str, step: Optional[int] = None,
+                   arch: Optional[str] = None,
+                   draft_arch: Optional[str] = None,
                    **overrides) -> ContinuousBatchingEngine:
     """Rebuild an engine from :func:`snapshot_engine` output.  Keyword
     overrides (``journal=…``, ``faults=…``, ``deadline=…``) pass through
     to the constructor — a restart typically reattaches the journal the
-    dead engine was writing."""
+    dead engine was writing.
+
+    ``arch`` / ``draft_arch`` override the snapshot's recorded
+    architectures (restoring into an engine whose geometry changed — a
+    hot-swap happened after the snapshot).  A mismatch between the
+    requested geometry and the weights on disk fails with a named
+    :class:`repro.checkpoint.manager.CheckpointShapeError` identifying
+    the offending group and leaf — never an XLA shape crash mid-serve."""
     from repro.configs.base import get_config
     from repro.models import get_family
 
@@ -260,17 +270,32 @@ def restore_engine(ckpt_dir: str, step: Optional[int] = None,
         extra = json.load(f)["extra"]
     if extra.get("kind") != "serve_engine":
         raise ValueError(f"{d} is not an engine snapshot")
-    cfg = get_config(extra["arch"]).replace(
+    arch_name = arch or extra["arch"]
+    cfg = get_config(arch_name).replace(
         decode_kernel=extra["decode_kernel"])
     template = {"params": jax.eval_shape(
         lambda: get_family(cfg).init(jax.random.PRNGKey(0), cfg))}
     cfg_d = None
-    if extra.get("draft_arch"):
-        cfg_d = get_config(extra["draft_arch"]).replace(
+    d_arch = draft_arch if draft_arch is not None else \
+        extra.get("draft_arch")
+    if d_arch:
+        cfg_d = get_config(d_arch).replace(
             decode_kernel=extra["decode_kernel"])
         template["draft"] = jax.eval_shape(
             lambda: get_family(cfg_d).init(jax.random.PRNGKey(0), cfg_d))
-    tree, _, _ = load_checkpoint(ckpt_dir, template, step)
+    try:
+        tree, _, _ = load_checkpoint(ckpt_dir, template, step)
+    except CheckpointShapeError as e:
+        group = (e.leaf or "?").split(".", 1)[0]
+        want = arch_name if group == "params" else d_arch
+        have = extra["arch"] if group == "params" \
+            else extra.get("draft_arch")
+        raise CheckpointShapeError(
+            f"engine snapshot step {step} in {ckpt_dir} holds "
+            f"{have!r} weights in group {group!r} but the restore "
+            f"requests {want!r} — a pre-growth snapshot cannot restore "
+            f"into a post-growth engine (snapshot again after the swap, "
+            f"or pass the matching arch=): {e}", leaf=e.leaf) from e
     sampling = None
     if extra.get("sampling"):
         sampling = SamplingParams(**extra["sampling"])

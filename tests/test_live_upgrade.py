@@ -1,0 +1,280 @@
+"""Live-growth hot swap: grow Mango weights behind a serving engine and
+flip them in with zero dropped requests.
+
+The contract under test (ISSUE 9 acceptance):
+
+  * every request that is mid-flight at the swap continues
+    TOKEN-EXACTLY — its committed prefix is exactly what a source-only
+    run produces, and its post-swap suffix is exactly what the grown
+    target produces on (original prompt ‖ committed prefix);
+  * nothing is dropped or rejected by the swap, for dense AND paged
+    pools, and for a non-transformer (recurrent-state) family;
+  * submits that arrive during the quiesce window are held, then
+    admitted — never refused;
+  * a doomed upgrade fails with a named ``UpgradeError`` before any
+    growth FLOP, and a growth failure leaves the engine serving the
+    source model;
+  * a pre-swap ``snapshot_engine`` cannot silently restore into a
+    post-swap geometry — ``restore_engine`` names the offending group.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointShapeError
+from repro.configs.base import get_config
+from repro.core.grow import grow_from_source
+from repro.data.synthetic import lm_batch
+from repro.launch.serve import generate
+from repro.models import get_family
+from repro.serve import (
+    ContinuousBatchingEngine,
+    Request,
+    UpgradeError,
+    UpgradeManager,
+    restore_engine,
+    snapshot_engine,
+)
+
+MAX_LEN = 32
+
+
+def _requests(cfg, specs, *, uid0=0, seed0=70):
+    reqs = []
+    for i, (plen, gen) in enumerate(specs):
+        prompt = lm_batch(cfg.vocab_size, 1, plen, seed=seed0 + i)[0]
+        reqs.append(Request(uid=uid0 + i, prompt=prompt,
+                            max_new_tokens=gen))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def gpt_pair(gpt_micro_cfg, gpt_micro_big_cfg):
+    """(cfg_src, params_src, cfg_tgt, grown_params) — growth precomputed
+    once so every swap test pays zero grow time."""
+    params_src = get_family(gpt_micro_cfg).init(
+        jax.random.PRNGKey(0), gpt_micro_cfg)
+    grown = grow_from_source(gpt_micro_cfg, gpt_micro_big_cfg,
+                             params_src=params_src, noise=0.0,
+                             log_fn=lambda *a, **k: None)
+    return gpt_micro_cfg, params_src, gpt_micro_big_cfg, grown
+
+
+@pytest.fixture(scope="module")
+def griffin_pair():
+    cfg_src = get_config("griffin-micro")
+    cfg_tgt = get_config("griffin-micro-big")
+    params_src = get_family(cfg_src).init(jax.random.PRNGKey(0), cfg_src)
+    grown = grow_from_source(cfg_src, cfg_tgt, params_src=params_src,
+                             noise=0.0, log_fn=lambda *a, **k: None)
+    return cfg_src, params_src, cfg_tgt, grown
+
+
+def _swap_run(pair, reqs, *, upgrade_at=2, pool="dense", k=2, capacity=3,
+              speculate_after="auto", prewarm=False, **eng_kw):
+    """Serve ``reqs`` through a mid-trace hot swap (growth pre-done so the
+    swap point is deterministic).  Returns (engine, manager, outputs)."""
+    cfg_src, params_src, cfg_tgt, grown = pair
+    eng = ContinuousBatchingEngine(cfg_src, params_src, capacity=capacity,
+                                   max_len=MAX_LEN, k=k, pool=pool,
+                                   **eng_kw)
+    mgr = UpgradeManager(eng, cfg_tgt, grown_params=grown,
+                         upgrade_at=upgrade_at, prewarm=prewarm,
+                         speculate_after=speculate_after)
+    mgr.start(background=False)
+    assert mgr.state == "ready"
+    got = eng.run(reqs)
+    return eng, mgr, got
+
+
+def _assert_token_exact(pair, mgr, got, reqs):
+    """Every mid-flight request split exactly at the swap: committed
+    prefix == source-only run, post-swap suffix == grown-target run on
+    (prompt ‖ committed)."""
+    cfg_src, params_src, cfg_tgt, grown = pair
+    by_uid = {r.uid: r for r in mgr.resumed_requests}
+    assert set(by_uid) == {r.uid for r in reqs}, \
+        "every request should have been mid-flight at the swap"
+    for r in reqs:
+        res = by_uid[r.uid]
+        nc = res.n_committed
+        assert 0 < nc < r.max_new_tokens
+        orig = np.asarray(res.prompt[:len(res.prompt) - nc])
+        committed = np.asarray(res.prompt[len(res.prompt) - nc:])
+        np.testing.assert_array_equal(orig, np.asarray(r.prompt))
+        out = np.asarray(got[r.uid])
+        assert out.shape == (r.max_new_tokens,)
+        want_pre = np.asarray(generate(
+            cfg_src, params_src, orig[None], max_new_tokens=nc,
+            max_len=MAX_LEN))[0]
+        np.testing.assert_array_equal(
+            out[:nc], want_pre, err_msg=f"uid {r.uid}: pre-swap prefix "
+            f"diverged from the source-only run")
+        np.testing.assert_array_equal(out[:nc], committed)
+        want_post = np.asarray(generate(
+            cfg_tgt, grown, np.asarray(res.prompt)[None],
+            max_new_tokens=r.max_new_tokens - nc, max_len=MAX_LEN))[0]
+        np.testing.assert_array_equal(
+            out[nc:], want_post, err_msg=f"uid {r.uid}: post-swap suffix "
+            f"diverged from the grown-target run")
+
+
+@pytest.mark.parametrize("pool", ["dense", "paged"])
+def test_hot_swap_token_exact(pool, gpt_pair):
+    reqs = _requests(gpt_pair[0], [(5, 12), (8, 12), (11, 12)])
+    eng, mgr, got = _swap_run(gpt_pair, reqs, pool=pool)
+    assert mgr.state == "swapped"
+    assert eng.cfg.name == gpt_pair[2].name
+    assert eng.n_upgrades == 1
+    assert mgr.pause_ms is not None and mgr.pause_ms >= 0
+    assert eng.rejected == {}
+    assert all(eng.outcomes[r.uid] == "finished" for r in reqs)
+    _assert_token_exact(gpt_pair, mgr, got, reqs)
+
+
+def test_hot_swap_token_exact_griffin(griffin_pair):
+    """Non-transformer acceptance case: griffin's recurrent + local-attn
+    ring state is rebuilt through the resume path, not migrated."""
+    reqs = _requests(griffin_pair[0], [(5, 10), (9, 10), (7, 10)],
+                     seed0=80)
+    eng, mgr, got = _swap_run(griffin_pair, reqs)
+    assert mgr.state == "swapped"
+    assert eng.rejected == {}
+    assert all(eng.outcomes[r.uid] == "finished" for r in reqs)
+    _assert_token_exact(griffin_pair, mgr, got, reqs)
+
+
+def test_draft_after_swap_speculation(gpt_pair):
+    """Post-swap the old source serves as the speculative draft — spec
+    genuinely runs AND outputs stay token-exact (spec decoding is
+    lossless)."""
+    reqs = _requests(gpt_pair[0], [(6, 14), (9, 14)], seed0=75)
+    eng, mgr, got = _swap_run(gpt_pair, reqs, capacity=2,
+                              speculate_after=True)
+    assert mgr.state == "swapped"
+    assert eng.speculative is not None
+    assert eng.speculative.cfg.name == gpt_pair[0].name
+    assert eng.lifetime_totals()["n_spec_proposed"] > 0
+    _assert_token_exact(gpt_pair, mgr, got, reqs)
+
+
+def test_submit_during_swap_is_held_not_dropped(gpt_pair):
+    """A submit that lands inside the quiesce window parks in the hold
+    queue and is admitted right after the flip — zero refusals."""
+    cfg_src, params_src, cfg_tgt, grown = gpt_pair
+    eng = ContinuousBatchingEngine(cfg_src, params_src, capacity=3,
+                                   max_len=MAX_LEN, k=2)
+    mgr = UpgradeManager(eng, cfg_tgt, grown_params=grown, upgrade_at=2,
+                         prewarm=False, speculate_after=False)
+    mgr.start(background=False)
+    late = _requests(cfg_src, [(6, 8)], uid0=100, seed0=95)[0]
+    orig_configure = eng._configure
+
+    def inject_then_configure(cfg, params, speculative):
+        assert eng.upgrade_state == "relayout"
+        eng.submit(late)  # mid-swap arrival
+        assert late.uid not in eng.rejected
+        return orig_configure(cfg, params, speculative)
+
+    eng._configure = inject_then_configure
+    reqs = _requests(cfg_src, [(5, 10), (8, 10)], seed0=85)
+    got = eng.run(reqs)
+    eng._configure = orig_configure
+    assert mgr.state == "swapped"
+    assert eng.n_held_for_upgrade + eng.lifetime["n_held_for_upgrade"] == 1
+    assert eng.rejected == {}
+    assert eng.outcomes[late.uid] == "finished"
+    # the held request ran entirely on the grown target
+    want = np.asarray(generate(cfg_tgt, grown,
+                               np.asarray(late.prompt)[None],
+                               max_new_tokens=late.max_new_tokens,
+                               max_len=MAX_LEN))[0]
+    np.testing.assert_array_equal(np.asarray(got[late.uid]), want)
+    _assert_token_exact(gpt_pair, mgr, got, reqs)
+
+
+def test_prewarm_covers_swap_shapes(gpt_pair):
+    """With prewarm on, the post-swap fn set is already compiled: the
+    swap itself must not add cache entries (the pause contains no
+    compile)."""
+    from repro.serve.engine import _jitted_engine_fns
+    reqs = _requests(gpt_pair[0], [(5, 8), (7, 8)], seed0=88)
+    cfg_src, params_src, cfg_tgt, grown = gpt_pair
+    eng = ContinuousBatchingEngine(cfg_src, params_src, capacity=2,
+                                   max_len=16, k=2)
+    mgr = UpgradeManager(eng, cfg_tgt, grown_params=grown, upgrade_at=2,
+                         prewarm=True, speculate_after=False)
+    mgr.start(background=False)
+    misses_before = _jitted_engine_fns.cache_info().misses
+    got = eng.run(reqs)
+    assert mgr.state == "swapped"
+    assert _jitted_engine_fns.cache_info().misses == misses_before
+    assert all(eng.outcomes[r.uid] == "finished" for r in reqs)
+    _assert_token_exact(gpt_pair, mgr, got, reqs)
+
+
+def test_upgrade_errors_are_named_and_eager(gpt_pair, gpt_micro_cfg):
+    cfg_src, params_src, cfg_tgt, grown = gpt_pair
+    eng = ContinuousBatchingEngine(cfg_src, params_src, capacity=2,
+                                   max_len=MAX_LEN)
+    with pytest.raises(UpgradeError, match="family"):
+        UpgradeManager(eng, get_config("griffin-micro"))
+    with pytest.raises(UpgradeError, match="vocabulary"):
+        UpgradeManager(eng, cfg_tgt.replace(vocab_size=996))
+    with pytest.raises(UpgradeError, match="position range"):
+        UpgradeManager(eng, cfg_tgt.replace(learned_pos=8,
+                                            max_seq_len=MAX_LEN))
+    mgr = UpgradeManager(eng, cfg_tgt, grown_params=grown, prewarm=False)
+    with pytest.raises(UpgradeError, match="in flight"):
+        UpgradeManager(eng, cfg_tgt, grown_params=grown, prewarm=False)
+    eng2 = ContinuousBatchingEngine(cfg_src, params_src, capacity=2,
+                                    max_len=MAX_LEN)
+    with pytest.raises(UpgradeError, match="speculate_after"):
+        UpgradeManager(eng2, cfg_tgt, speculate_after="yes")
+    assert mgr.state == "serving"  # eager checks never start growth
+
+
+def test_failed_growth_keeps_engine_serving(gpt_micro_cfg,
+                                            gpt_micro_big_cfg):
+    """A growth that blows up moves the manager to 'failed' and the
+    engine simply keeps serving the source — live traffic survives."""
+    params = get_family(gpt_micro_cfg).init(jax.random.PRNGKey(0),
+                                            gpt_micro_cfg)
+    eng = ContinuousBatchingEngine(gpt_micro_cfg, params, capacity=2,
+                                   max_len=MAX_LEN)
+    mgr = UpgradeManager(eng, gpt_micro_big_cfg, prewarm=False,
+                         speculate_after=False,
+                         method="no-such-method")  # dies inside _grow()
+    mgr.start(background=True)
+    with pytest.raises(AssertionError):
+        mgr.wait()
+    assert mgr.state == "failed"
+    assert mgr.error is not None
+    reqs = _requests(gpt_micro_cfg, [(5, 6), (7, 6)], seed0=92)
+    got = eng.run(reqs)  # poll() is a no-op in 'failed'
+    assert eng.cfg.name == gpt_micro_cfg.name
+    assert all(eng.outcomes[r.uid] == "finished" for r in reqs)
+    for r in reqs:
+        want = np.asarray(generate(gpt_micro_cfg, params,
+                                   np.asarray(r.prompt)[None],
+                                   max_new_tokens=r.max_new_tokens,
+                                   max_len=MAX_LEN))[0]
+        np.testing.assert_array_equal(np.asarray(got[r.uid]), want)
+
+
+def test_restore_geometry_mismatch_names_group(gpt_pair, tmp_path):
+    """A snapshot taken BEFORE the swap must not silently restore into
+    the post-swap architecture: restore_engine(arch=target) fails with a
+    named error identifying the offending parameter group."""
+    cfg_src, params_src, cfg_tgt, _ = gpt_pair
+    eng = ContinuousBatchingEngine(cfg_src, params_src, capacity=2,
+                                   max_len=MAX_LEN)
+    snapshot_engine(eng, str(tmp_path), step=0)
+    with pytest.raises(CheckpointShapeError) as ei:
+        restore_engine(str(tmp_path), arch=cfg_tgt.name)
+    msg = str(ei.value)
+    assert cfg_tgt.name in msg and cfg_src.name in msg
+    assert "pre-growth snapshot" in msg
+    # round trip with the matching arch still works
+    eng2 = restore_engine(str(tmp_path))
+    assert eng2.cfg.name == cfg_src.name

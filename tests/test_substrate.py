@@ -154,6 +154,44 @@ def test_atomicity_no_partial_dirs(tmp_path):
     assert not any(n.startswith("tmp.") for n in os.listdir(tmp_path))
 
 
+def test_back_to_back_maybe_save_joins_inflight(tmp_path, monkeypatch):
+    """Two ``maybe_save`` calls with the first still on the wire: the
+    second must JOIN the in-flight save (one at a time — no overlapping
+    writers racing on the same step dir), and both checkpoints land."""
+    import threading
+    import time
+
+    import repro.checkpoint.manager as M
+
+    release = threading.Event()
+    started = threading.Event()
+    real, calls = M.save_checkpoint, []
+
+    def slow_save(ckpt_dir, step, tree, extra=None):
+        calls.append(step)
+        started.set()
+        assert release.wait(30), "test deadlock: save never released"
+        return real(ckpt_dir, step, tree, extra)
+
+    monkeypatch.setattr(M, "save_checkpoint", slow_save)
+    mgr = CheckpointManager(str(tmp_path), keep=3, every=1,
+                            async_save=True)
+    assert mgr.maybe_save(1, _tree())
+    assert started.wait(30)
+    t = threading.Thread(
+        target=lambda: mgr.maybe_save(2, _tree()), daemon=True)
+    t.start()
+    time.sleep(0.2)
+    assert t.is_alive(), "second maybe_save should block on the join"
+    assert calls == [1], "saves must never overlap"
+    release.set()
+    t.join(30)
+    assert not t.is_alive()
+    mgr.wait()
+    assert calls == [1, 2]
+    assert latest_step(str(tmp_path)) == 2
+
+
 # ------------------------------------------------------------------ data
 def test_lm_data_deterministic_and_learnable():
     a = lm_batch(997, 4, 64, seed=1, step=5)
