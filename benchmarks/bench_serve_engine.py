@@ -36,12 +36,15 @@ task, the target (gpt-micro-big) is grown from it with a Mango operator
 trained for a few steps (Eq. 7), and the source then drafts for its
 grown target.  Entries record ``acceptance_rate`` plus the draft/target
 config names next to tok/s, so the perf trajectory ties speedup to
-draft quality.  A ``--pool`` sweep benches the dense slot pool against
-the paged pool (``pool="paged"``) on a mixed trace and a shared-prefix
-trace, recording pages-in-use high-water, prefix-cache hit rate, and
-pages-per-request next to tok/s — the dense-vs-paged pair per trace is
-the direct measure of the paged pool's reservation and re-prefill
-savings.  A ``--chaos`` sweep benches the fault-tolerance layer: the
+draft quality.  A ``--pool`` sweep benches dense-vs-paged pairs per
+family (transformer mixed + shared-prefix traces, griffin ring pages,
+xlstm slot-tail pages) plus two prefix-sharing traces that used to be
+gated off — a window-9 ring (tail-restore hits) and a seeded sampled
+trace (chain-replay hits) — recording pages-in-use high-water,
+prefix-cache hit rate, and pages-per-request next to tok/s: each
+dense-vs-paged pair is the direct measure of the paged pool's
+reservation and re-prefill savings.  A ``--chaos`` sweep benches the
+fault-tolerance layer: the
 ``chaos_faultfree`` entry pins the journaling overhead (its
 ``host_syncs_per_token`` must match the plain macro entry — flushes
 ride existing readbacks), ``chaos_injected`` records survival rate
@@ -144,7 +147,7 @@ def warm_naive(cfg, params, reqs, batch):
 
 
 def warm_engine(cfg, params, reqs, *, capacity, max_len, k,
-                speculative=None, pool="dense"):
+                speculative=None, pool="dense", pages=None, sampling=None):
     """Compile every shape a (cfg, k) engine can hit on this trace: the
     macro (or speculative) loop, and each (pow2 admission-group size,
     prefill bucket) prefill/scatter pair.  With ``pool='paged'`` the
@@ -152,7 +155,8 @@ def warm_engine(cfg, params, reqs, *, capacity, max_len, k,
     compiling the hit-admission scan."""
     warm = ContinuousBatchingEngine(cfg, params, capacity=capacity,
                                     max_len=max_len, k=k,
-                                    speculative=speculative, pool=pool)
+                                    speculative=speculative, pool=pool,
+                                    pages=pages, sampling=sampling)
     buckets = sorted({warm._bucketed(len(r.prompt)) for r in reqs})
     uid = -1
     n = 1
@@ -208,10 +212,11 @@ def bench_naive(cfg, params, reqs, batch):
 
 
 def bench_engine(cfg, params, reqs, *, capacity, max_len, k, pipeline,
-                 speculative=None, pool="dense"):
+                 speculative=None, pool="dense", pages=None, sampling=None):
     engine = ContinuousBatchingEngine(cfg, params, capacity=capacity,
                                       max_len=max_len, k=k,
-                                      speculative=speculative, pool=pool)
+                                      speculative=speculative, pool=pool,
+                                      pages=pages, sampling=sampling)
     t0 = time.monotonic()
     engine.run(reqs, realtime=True, pipeline=pipeline)
     dt = time.monotonic() - t0
@@ -403,47 +408,96 @@ def _bench_kernel_modes(quick: bool):
 
 
 def _bench_pool_modes(quick: bool):
-    """Dense vs paged slot pool, side by side, on two traces:
+    """Dense vs paged slot pool, side by side:
 
-      * mixed  — the usual Poisson trace of unrelated prompts: measures
-        the paged indirection overhead and pages-per-request vs the dense
-        pool's full per-slot reservation;
-      * prefix — every request shares one prompt prefix: measures the
-        copy-on-write prefix cache (hit rate, fewer prefill batches,
-        fewer fresh pages per request).
+      * mixed / prefix — the transformer trajectory pairs: a Poisson
+        trace of unrelated prompts (paged indirection overhead,
+        pages-per-request vs the dense full reservation) and a trace
+        sharing one prompt prefix (copy-on-write hit rate, fewer
+        prefill batches);
+      * griffin / xlstm — per-family pairs on the mixed trace: these
+        families no longer silently fall back to dense (griffin pages
+        its attention rings, xlstm its conv tails), so the pairs price
+        the indirection where only part of the pool pages;
+      * ring_prefix — a window-9 transformer (its padded ring holds one
+        page of slack over the window, the tail-restore gate) on the
+        shared-prefix trace with explicit arena headroom — registration
+        copies need free pages — so ``prefix_hit_rate`` measures ring
+        tail-restore sharing;
+      * sampled_prefix — seeded non-greedy sampling on the shared-prefix
+        trace: a hit replays the request's per-uid PRNG chain on device,
+        so sharing survives sampled serving (``prefix_hit_rate`` > 0
+        without ``sampling is None``).
 
     Same trace, same K, only ``pool=`` differs per pair — the paged
     engine is token-exact vs dense (tested in test_paged_pool.py), so the
     pairs compare cost, not quality.
     """
+    from repro.serve import SamplingParams
+
     cfg = get_config(FAMILY_ARCHS["transformer"])
     fam = get_family(cfg)
     params = fam.init(jax.random.PRNGKey(0), cfg)
     n = 8 if quick else 24
     capacity, max_len, k = 4, 48, 8
-    traces = {
-        "mixed": poisson_trace(cfg, n, rate_hz=2000.0,
-                               max_gen=8 if quick else 16),
-        "prefix": prefix_trace(cfg, n, rate_hz=2000.0,
-                               max_gen=8 if quick else 12),
-    }
 
     results = {}
-    layout = slot_cache_layout(cfg)
-    for tag, reqs in traces.items():
+
+    def _pair(tag, pcfg, pparams, reqs, *, pages=None, sampling=None):
+        layout = slot_cache_layout(pcfg)
+
         def fresh():
             return [Request(uid=r.uid, prompt=r.prompt,
                             max_new_tokens=r.max_new_tokens,
                             arrival=r.arrival) for r in reqs]
 
         for pool in ("dense", "paged"):
-            warm_engine(cfg, params, reqs, capacity=capacity,
-                        max_len=max_len, k=k, pool=pool)
-            m = bench_engine(cfg, params, fresh(), capacity=capacity,
-                             max_len=max_len, k=k, pipeline=True, pool=pool)
-            m["family"] = cfg.family
+            warm_engine(pcfg, pparams, reqs, capacity=capacity,
+                        max_len=max_len, k=k, pool=pool, pages=pages,
+                        sampling=sampling)
+            # dry-run the exact trace untimed, in BOTH admission shapes
+            # (batch and realtime trickle): hit-admission replay scans
+            # compile per (group size, tail length), which the synthetic
+            # warm prompts cannot cover
+            for realtime in (False, True):
+                ContinuousBatchingEngine(
+                    pcfg, pparams, capacity=capacity, max_len=max_len,
+                    k=k, pool=pool, pages=pages, sampling=sampling,
+                ).run(fresh(), realtime=realtime, pipeline=realtime)
+            m = bench_engine(pcfg, pparams, fresh(), capacity=capacity,
+                             max_len=max_len, k=k, pipeline=True,
+                             pool=pool, pages=pages, sampling=sampling)
+            m["family"] = pcfg.family
             m["cache_layout"] = layout
             results[f"pool_{pool}_{tag}_k{k}"] = m
+
+    _pair("mixed", cfg, params,
+          poisson_trace(cfg, n, rate_hz=2000.0, max_gen=8 if quick else 16))
+    _pair("prefix", cfg, params,
+          prefix_trace(cfg, n, rate_hz=2000.0, max_gen=8 if quick else 12))
+
+    # per-family pairs on a mixed trace (smaller: recurrent compiles are
+    # the cost here, not tokens)
+    nf = 6 if quick else 16
+    for family in ("griffin", "xlstm"):
+        fcfg = get_config(FAMILY_ARCHS[family])
+        fparams = get_family(fcfg).init(jax.random.PRNGKey(0), fcfg)
+        _pair(family, fcfg, fparams,
+              poisson_trace(fcfg, nf, rate_hz=2000.0, max_gen=6))
+
+    # ring tail-restore sharing: window 9 pads its ring to 16 (page 8,
+    # nblk 2), satisfying the slack gate; --pages headroom lets the
+    # best-effort registration copies actually land
+    wcfg = cfg.replace(name=cfg.name + "-win9", window=9)
+    _pair("ring_prefix", wcfg, params,
+          prefix_trace(wcfg, n, rate_hz=2000.0, max_gen=8 if quick else 12),
+          pages=16)
+
+    # sampled replay sharing: hits must emit the same chain-sampled
+    # tokens a miss admission would
+    _pair("sampled_prefix", cfg, params,
+          prefix_trace(cfg, n, rate_hz=2000.0, max_gen=8 if quick else 12),
+          sampling=SamplingParams(temperature=0.9, top_k=12, seed=11))
     return results
 
 
@@ -760,9 +814,10 @@ if __name__ == "__main__":
                     help="also bench kernel-vs-jnp slot decode side by "
                          "side (Pallas interpreter off-TPU — small trace)")
     ap.add_argument("--pool", action="store_true",
-                    help="also bench dense-vs-paged slot pool pairs on a "
-                         "mixed and a shared-prefix trace (pages "
-                         "high-water, prefix hit rate recorded)")
+                    help="also bench dense-vs-paged slot pool pairs per "
+                         "family (transformer/griffin/xlstm) plus ring "
+                         "tail-restore and sampled-replay prefix traces "
+                         "(pages high-water, prefix hit rate recorded)")
     ap.add_argument("--chaos", action="store_true",
                     help="also bench fault tolerance: journaling "
                          "overhead, survival under a seeded fault plan "

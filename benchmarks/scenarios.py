@@ -177,6 +177,12 @@ if mgr is not None:
         "post_swap_tok_per_s": (totals["n_tokens"] - pre_tok)
                                / max(t0 + dt - mgr.t_swap, 1e-9),
         "source": spec["arch"], "target": spec["grow"],
+        # page-residency delta: pages live at quiesce (all invalidated by
+        # the grown params), pages carried (structurally 0), and the
+        # re-prefill page bill the resume wave pays for zero drops
+        "pages_resident_at_swap": mgr.pages_resident_at_swap,
+        "pages_carried": mgr.pages_carried,
+        "pages_reprefilled": mgr.pages_reprefilled,
     })
     if eng.speculative is not None:
         m["acceptance_rate"] = eng.acceptance_rate
@@ -227,6 +233,10 @@ def run(quick: bool = False, write_json: bool = True):
             print(f"serve_{name},upgrade_pause_ms,"
                   f"{m['upgrade_pause_ms']:.1f}")
             print(f"serve_{name},dropped,{m['dropped']}")
+            if m.get("pages_resident_at_swap"):
+                print(f"serve_{name},pages_carried,{m['pages_carried']}")
+                print(f"serve_{name},pages_reprefilled,"
+                      f"{m['pages_reprefilled']}")
             print(f"serve_{name},pre_swap_tok_per_s,"
                   f"{m['pre_swap_tok_per_s']:.1f}")
             print(f"serve_{name},post_swap_tok_per_s,"

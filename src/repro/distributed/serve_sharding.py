@@ -160,31 +160,44 @@ class ServeMeshPlan:
         Dense pools resolve ``fam.cache_specs(cfg)`` directly (the
         "batch" axis is the slot axis -> data; kv_heads/lru -> model,
         with the divisibility guard replicating non-dividing head
-        counts).  Paged pools re-map per group: arena payloads keep only
-        the layer + trailing (head) axes of the dense spec — the page and
-        in-page axes must NOT shard (pages are a shared id space) — and
-        the block table is replicated everywhere.
+        counts).  Paged pools re-map each DECLARED group: arena payloads
+        keep only the layer + trailing (head) axes of the dense spec —
+        the page axis (and, for seq groups, the in-page axis) must NOT
+        shard, since pages are one shared id space any slot may hold —
+        and the block table is replicated everywhere.  Leaves a group
+        does not name (dense per-slot carries) shard like the dense
+        pool.
         """
         specs = fam.cache_specs(cfg)
         if meta is None:
             return params_shardings(specs, self.mesh, self.rules,
                                     shapes=pool)
+        paged = {g.path[0]: g for g in meta.groups}
 
-        def walk(sp, pl):
-            if isinstance(pl, dict) and "bt" in pl:
+        def leaf_sh(logical, leaf):
+            return NamedSharding(
+                self.mesh, logical_to_spec(tuple(logical), leaf.shape,
+                                           self.mesh, self.rules))
+
+        def walk(sp, pl, g=None):
+            if isinstance(pl, dict) and "bt" in pl and g is not None:
                 out = {}
-                for key in ("k", "v"):
-                    arena = (sp[key][0], None, None) + tuple(sp[key][3:])
-                    out[key] = NamedSharding(
-                        self.mesh, logical_to_spec(arena, pl[key].shape,
-                                                   self.mesh, self.rules))
-                out["bt"] = NamedSharding(self.mesh, P())
+                for lk, leaf in pl.items():
+                    if lk == "bt":
+                        out[lk] = NamedSharding(self.mesh, P())
+                    elif lk in g.leaves:
+                        # seq: (L, B, S, ...) -> (L, pages, page, ...);
+                        # slot: (L, B, tail...) -> (L, pages, tail...)
+                        arena = ((sp[lk][0], None, None)
+                                 + tuple(sp[lk][3:]) if g.kind == "seq"
+                                 else (sp[lk][0], None) + tuple(sp[lk][2:]))
+                        out[lk] = leaf_sh(arena, leaf)
+                    else:
+                        out[lk] = leaf_sh(sp[lk], leaf)
                 return out
             if isinstance(pl, dict):
-                return {k: walk(sp[k], pl[k]) for k in pl}
-            return NamedSharding(
-                self.mesh, logical_to_spec(tuple(sp), pl.shape, self.mesh,
-                                           self.rules))
+                return {k: walk(sp[k], pl[k], paged.get(k)) for k in pl}
+            return leaf_sh(sp, pl)
 
         return walk(specs, pool)
 

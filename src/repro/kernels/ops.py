@@ -148,6 +148,22 @@ def paged_chunk_verify_attention(q, ck, cv, bt, k, v, offsets, *, ring,
                                window=window, interpret=_interp(mode), **kw)
 
 
+def paged_latent_gather(arena, bt, *, mode="auto"):
+    """Dense (B, S, r) view of a paged MLA latent arena.
+
+    Not a Pallas kernel: the absorbed-MLA decode consumes the latent
+    cache as ordinary matmul operands, so the paged layout only needs a
+    layout gather (XLA fuses it into the consuming einsum).  The entry
+    lives here so paged MLA dispatches through the same mode switch as
+    every other paged cache group and the oracle suite covers it."""
+    if mode == "reference":
+        return ref.paged_latent_gather_ref(arena, bt)
+    _interp(mode)  # validate the mode string
+    n_pages = arena.shape[0]
+    g = arena[jnp.minimum(jnp.asarray(bt, jnp.int32), n_pages - 1)]
+    return g.reshape((bt.shape[0], -1) + arena.shape[2:])
+
+
 def rglru_scan(a, b, h0=None, *, mode="auto", **kw):
     if mode == "reference":
         return ref.rglru_scan_ref(a, b, h0)

@@ -141,6 +141,15 @@ def _paged_gather_ref(arena, bt):
     return g.reshape((bt.shape[0], -1) + arena.shape[2:])
 
 
+def paged_latent_gather_ref(arena, bt):
+    """Dense view of a paged MLA latent arena: (n_pages, page, r) +
+    (B, nblk) -> (B, nblk * page, r).  The absorbed-MLA decode consumes
+    the latent cache as plain matmul operands, so paging it needs only
+    this gather (garbage behind the sentinel clamp is masked by kv_len
+    downstream), not a bespoke attention kernel."""
+    return _paged_gather_ref(arena, bt)
+
+
 def paged_slot_decode_attention_ref(q, k, v, bt, kv_len):
     """Paged oracle: materialize the dense view, defer to the dense ref."""
     return slot_decode_attention_ref(

@@ -435,15 +435,18 @@ def main():
         print(f"[serve] --kernel {args.kernel}: the Pallas slot kernels "
               "read whole pool rows, so tensor-parallel serving falls "
               "back to the jnp path (token-exact either way)")
-    if engine.pages_budget is not None and len(engine.pages_budget) == 2:
-        print(f"[serve] page budget: {engine.pages_budget[0]} target + "
-              f"{engine.pages_budget[1]} draft pages"
-              + (f" (one --pages {args.pages} arena budget, split by "
-                 "per-slot block count)" if args.pages else
-                 " (per-pool defaults)"))
-    if args.pool == "paged" and engine.pool_kind == "dense":
-        print(f"[serve] --pool paged: {cfg.family}/{engine.cache_layout} "
-              "has no pageable KV group — serving dense")
+    if engine.pages_budget is not None:
+        arena = ("ONE physical arena shared by target and draft "
+                 "(per-engine refcount namespaces; pages trade freely)"
+                 if engine.speculative is not None else "target arena")
+        note = (f"--pages {args.pages}" if args.pages
+                else "default: dense pool footprint")
+        print(f"[serve] page budget: {engine.pages_budget} pages — "
+              f"{arena} ({note})")
+    if args.pool == "paged" and engine.pool_fallback_reason is not None:
+        print(f"[serve] --pool paged fallback: "
+              f"{engine.pool_fallback_reason} — affected pool(s) serve "
+              "dense")
     if args.snapshot:
         path = snapshot_engine(engine, args.snapshot)
         print(f"[serve] engine snapshot -> {path}")
@@ -500,14 +503,21 @@ def main():
                          if engine.speculative is not None else
                          f"off ({upgrade_mgr.spec_reason})")
             fp = upgrade_mgr.fp_token_agreement
+            page_note = ""
+            if upgrade_mgr.pages_resident_at_swap:
+                page_note = (
+                    f", pages {upgrade_mgr.pages_carried} carried / "
+                    f"{upgrade_mgr.pages_reprefilled} re-prefilled "
+                    f"({upgrade_mgr.pages_resident_at_swap} resident at "
+                    "swap)")
             print(f"[serve] upgrade SWAPPED: {upgrade_mgr.cfg_src.name} "
                   f"-> {upgrade_mgr.cfg_tgt.name} in "
                   f"{upgrade_mgr.grow_seconds:.1f}s growth, pause "
                   f"{upgrade_mgr.pause_ms:.0f} ms, "
                   f"{upgrade_mgr.resumed} mid-flight resumed, "
                   f"{engine.n_held_for_upgrade} held submits, "
-                  f"{len(engine.rejected)} dropped; greedy agreement "
-                  f"{'n/a' if fp is None else f'{fp:.3f}'}; "
+                  f"{len(engine.rejected)} dropped{page_note}; greedy "
+                  f"agreement {'n/a' if fp is None else f'{fp:.3f}'}; "
                   f"post-swap speculation {spec_note}")
         elif upgrade_mgr.state == "failed":
             print(f"[serve] upgrade FAILED (engine kept serving "
@@ -520,7 +530,8 @@ def main():
         f"acceptance={engine.acceptance_rate:.2f}")
     paged_note = "" if engine.pool_kind != "paged" else (
         f", {engine.pages_highwater} pages peak"
-        f" ({engine._metas[0].page} tok/page)"
+        f" ({next(m for m in engine._metas if m is not None).page}"
+        " tok/page)"
         f", prefix hit rate {engine.prefix_hit_rate:.2f}")
     print(f"[{mode}] {cfg.family}/{engine.cache_layout} "
           f"({engine.pool_kind} pool) served "

@@ -65,16 +65,18 @@ def slot_pool_specs(cfg: ModelConfig, capacity: int, max_len: int):
 
 def paged_slot_pool_specs(cfg: ModelConfig, capacity: int, max_len: int,
                           pages: int | None = None):
-    """Abstract PAGED slot pool (``--pool paged``): sequence-indexed cache
-    groups are re-laid as shared page arenas ``(L, n_pages, page, KV, hd)``
-    plus per-slot block tables ``(L, capacity, nblk)``; groups with no
-    pageable seq axis (recurrent state, MLA latents) stay dense.  Returns
-    None when no group is pageable — the engine serves dense in that case."""
+    """Abstract PAGED slot pool (``--pool paged``): every cache group the
+    family declares in ``paged_groups`` is re-laid over the shared arena —
+    seq groups as ``(L, n_pages, page, *tail)`` pages plus per-slot block
+    tables ``(L, capacity, nblk)``, slot groups (xlstm conv tails) as
+    one-row-per-slot arenas ``(L, n_pages, *tail)`` with ``nblk = 1``.
+    Undeclared leaves (O(1) recurrent state) stay dense.  Returns None when
+    the family declares no groups — the engine serves dense in that case."""
     from repro.serve import paged as paged_lib
 
     fam = get_family(cfg)
-    meta = paged_lib.pool_meta(cache_specs_abstract(cfg, capacity, max_len),
-                               pages)
+    meta = paged_lib.pool_meta(
+        cfg, cache_specs_abstract(cfg, capacity, max_len), pages)
     if meta is None:
         return None
     return jax.eval_shape(
@@ -103,7 +105,7 @@ def slot_pool_shardings(cfg: ModelConfig, capacity: int, max_len: int,
         if paged_specs is not None:
             specs = paged_specs
             meta = paged_lib.pool_meta(
-                cache_specs_abstract(cfg, capacity, max_len), pages)
+                cfg, cache_specs_abstract(cfg, capacity, max_len), pages)
     return plan.pool_shardings(fam, cfg, specs, meta)
 
 

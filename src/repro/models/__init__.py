@@ -33,6 +33,15 @@ the chunk-verify extension of the protocol:
       realize exactly each row's first ``n_feed`` chunk feeds (accepted
       prefix) — deferred scatter for KV layouts, stacked-state gather for
       recurrent layouts; ``n_feed == 0`` / ``done`` rows are untouched.
+
+Paging is part of the protocol too: ``paged_groups(cfg)`` declares which
+top-level slot-cache groups re-lay as page arenas under ``--pool paged``
+(see ``serve/paged.py``).  Every slot hook above must then accept groups
+carrying a ``"bt"`` block table — writes resolve their page through the
+table, ``done``/unallocated rows redirect to the page sentinel and drop.
+A family with no declaration (or an empty one) serves dense, and the
+engine reports the named ``pool_fallback_reason`` instead of silently
+flipping the pool kind.
 """
 from __future__ import annotations
 
@@ -80,6 +89,29 @@ def spec_decode_supported(cfg):
         return False, (f"family {cfg.family!r} does not implement the "
                        "chunk-verify (speculative) slot hooks")
     return True, detail
+
+
+def paged_groups(cfg):
+    """Slot-state protocol: which slot-cache groups page under ``--pool
+    paged``.
+
+    Returns ``{top_level_cache_key: (kind, leaf_names)}`` where ``kind``
+    is:
+      * ``"seq"``  — the named leaves are (L, B, S, ...) sequence caches
+        sharing one S axis; S splits into fixed pages and every slot
+        holds a block table of page ids (transformer K/V, MLA latents,
+        griffin local-attention rings).
+      * ``"slot"`` — the named leaves are per-slot state with no sequence
+        axis (xlstm conv shift tails); the whole per-slot tail is one
+        page and the block table has a single entry.
+    Leaves of a declared group NOT named stay dense-per-slot (xlstm's
+    mLSTM C/n/m carries ride in the same group dict as its paged conv
+    tail).  An empty dict means nothing pages — the engine serves dense
+    and surfaces the family's ``pool_fallback_reason``.
+    """
+    fam = get_family(cfg)
+    probe = getattr(fam, "paged_groups", None)
+    return probe(cfg) if probe else {}
 
 
 def slot_cache_layout(cfg):

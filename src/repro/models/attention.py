@@ -354,6 +354,31 @@ def paged_ring_slot_update_attend(q, cache, k, v, slot_positions, *,
     return out, new_cache
 
 
+def paged_ring_restore_sites(bt, positions, n_feed, chunk_len, page,
+                             n_pages):
+    """Scatter sites for the paged speculative ring ROLLBACK.
+
+    The verify scan already wrote the whole chunk into the paged ring
+    through the block table; commit must re-store the PRE-chunk bytes at
+    every rejected write site (``j >= n_feed[b]``).  Returns
+    (pid_restore, pid_read, off), each (B, chunk): ``pid_read`` is the
+    clamped physical page to gather old bytes from, ``pid_restore``
+    redirects accepted sites (and never-allocated blocks) to the page
+    sentinel ``n_pages`` so their scatter drops, ``off`` is the in-page
+    offset.  Requires ``chunk_len <= ring`` (the speculative pair probe
+    enforces ``d + 1 <= window``) so no ring slot is written twice within
+    one chunk.
+    """
+    ring = bt.shape[1] * page
+    j = jnp.arange(chunk_len, dtype=positions.dtype)
+    sidx = (positions[:, None] + j[None]) % ring  # (B, chunk)
+    pid = jnp.take_along_axis(bt, sidx // page, axis=1)
+    rejected = j[None] >= n_feed[:, None]
+    pid_restore = jnp.where(rejected, pid, n_pages)
+    pid_read = jnp.minimum(pid, n_pages - 1)
+    return pid_restore, pid_read, sidx % page
+
+
 def chunk_verify_kpos(offsets, cache_len, S, *, ring: bool):
     """Absolute key positions of [cache ‖ chunk] for the speculative
     verify: (B, cache_len + S) int32, -1 for unattendable cache entries.

@@ -173,6 +173,37 @@ def spec_commit_gather(cache, stacked, n_feed, done=None):
     return jax.tree.map(per_leaf, cache, stacked)
 
 
+def paged_spec_ring_restore(old, new, positions, n_feed, chunk_len):
+    """``spec_ring_restore`` over a PAGED ring cache group.
+
+    ``old``/``new`` are the same group dict before/after the verify scan:
+    {"k"/"v": (layers, n_pages, page, ...) arenas, "bt": (layers, B,
+    nblk)} — the scan wrote the whole chunk through the block table, so
+    commit re-stores the pre-chunk arena bytes at every rejected write
+    site (``j >= n_feed[b]``), resolved through the same table.  Sound
+    because ring pages are slot-private (the prefix cache never aliases
+    ring block tables) and ``chunk_len <= ring`` means no in-chunk
+    double-write.  Accepted sites — and rows whose blocks were never
+    allocated — redirect to the page sentinel and drop.
+    """
+    from repro.models.attention import paged_ring_restore_sites
+
+    bt = old["bt"][0]  # layers share one table
+    leaves = [k for k in old if k != "bt"]
+    n_pages, page = old[leaves[0]].shape[1:3]
+    pid_restore, pid_read, off = paged_ring_restore_sites(
+        bt, positions, n_feed, chunk_len, page, n_pages)
+
+    out = {"bt": old["bt"]}
+    for key in leaves:
+        def per_layer(o, n):
+            src = o[pid_read, off]  # (B, chunk, ...) pre-chunk bytes
+            return n.at[pid_restore, off].set(src, mode="drop")
+
+        out[key] = jax.vmap(per_layer)(old[key], new[key])
+    return out
+
+
 def spec_ring_restore(old, new, positions, n_feed, chunk_len):
     """Commit ring-buffer leaves after a verify scan WITHOUT per-step
     stacking: keep the post-chunk bytes where the chunk write was

@@ -509,14 +509,20 @@ def commit_slots(params, tokens, positions, n_feed, cache, pending, cfg,
     re-stored); local-attention rings keep the scan's accepted writes and
     restore pre-chunk bytes at rejected slots.  Rows with ``n_feed == 0``
     or flagged ``done`` keep their pre-chunk state wholesale."""
-    from repro.models.common import spec_commit_gather, spec_ring_restore
+    from repro.models.common import (
+        paged_spec_ring_restore,
+        spec_commit_gather,
+        spec_ring_restore,
+    )
     del params
     if done is not None:
         n_feed = jnp.where(done, 0, n_feed)
     out = {"rec": spec_commit_gather(cache["rec"], pending["rec"], n_feed)}
     if "attn" in cache:
-        out["attn"] = spec_ring_restore(cache["attn"], pending["attn_new"],
-                                        positions, n_feed, tokens.shape[1])
+        restore = (paged_spec_ring_restore if "bt" in cache["attn"]
+                   else spec_ring_restore)
+        out["attn"] = restore(cache["attn"], pending["attn_new"],
+                              positions, n_feed, tokens.shape[1])
     return out
 
 
@@ -539,6 +545,15 @@ def slot_cache_layout(cfg):
     if cfg.decode_kernel != "jnp":
         return "recurrent+ring+kernel"
     return "recurrent+ring"
+
+
+def paged_groups(cfg):
+    """Slot-state protocol: the local-attention ring K/V pages; the
+    recurrent group (rglru h + conv tail, O(1)/slot) stays dense — there
+    is no sequence axis to page and the state is already minimal."""
+    if any(t == "attn" for t in block_pattern(cfg)):
+        return {"attn": ("seq", ("k", "v"))}
+    return {}
 
 
 def cache_specs(cfg):

@@ -511,13 +511,41 @@ def _mla_forward(x, p, cfg, positions, *, cache=None, q_offset=0, kv_len=None,
         # speculative verify in the latent space: absorbed-weight
         # attention over [cached latents ‖ chunk latents] at per-row
         # offsets, cache read-only; the raw chunk latents are the pending
-        # entry for ``commit_slots``
-        out = _mla_chunk_verify(q_nope, q_rope, cache, ckv, kr, p, cfg,
+        # entry for ``commit_slots`` (never carrying a block table —
+        # commit resolves pages through the live cache's own "bt")
+        cache_view = cache
+        if "bt" in cache:
+            cc, cr = _mla_paged_gather(cache, cfg)
+            cache_view = {"ckv": cc, "kr": cr}
+        out = _mla_chunk_verify(q_nope, q_rope, cache_view, ckv, kr, p, cfg,
                                 chunk_offsets, slot_done)
         y = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
         return y, {"ckv": ckv, "kr": kr}
     new_cache = None
     if slot_positions is not None:
+        if "bt" in cache:
+            # paged latent cache: the write resolves its page through the
+            # block table (done rows redirect to the sentinel and drop —
+            # the paged freeze), the absorbed-weight attention reads a
+            # gathered dense view
+            bt = cache["bt"]
+            n_pages, page = cache["ckv"].shape[:2]
+            blk = slot_positions // page
+            pid = jnp.take_along_axis(bt, blk[:, None], axis=1)[:, 0]
+            if slot_done is not None:
+                pid = jnp.where(slot_done, n_pages, pid)
+            off = slot_positions % page
+            cc = cache["ckv"].at[pid, off].set(
+                ckv[:, 0].astype(cache["ckv"].dtype), mode="drop")
+            cr = cache["kr"].at[pid, off].set(
+                kr[:, 0].astype(cache["kr"].dtype), mode="drop")
+            new_cache = {"ckv": cc, "kr": cr, "bt": bt}
+            gc, gr = _mla_paged_gather(new_cache, cfg)
+            out = _mla_absorbed_decode(
+                q_nope, q_rope, gc.astype(cdt), gr.astype(cdt), p, cfg,
+                kv_len=_slot_kv_len(slot_positions, slot_done))
+            y = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
+            return y, new_cache
         # continuous-batching decode: per-row latent-cache scatter + the
         # absorbed-weight attention with per-row valid lengths
         b_idx = jnp.arange(B)
@@ -573,6 +601,22 @@ def _mla_forward(x, p, cfg, positions, *, cache=None, q_offset=0, kv_len=None,
     out = out.reshape(B, S, H * dv)
     y = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
     return y, new_cache
+
+
+def _mla_paged_gather(cache, cfg):
+    """Dense (B, S, ·) views of a paged MLA latent group.  A kernel-mode
+    config routes through ``kernels.ops.paged_latent_gather`` so the
+    independently-derived reference gather oracles the arena layout (MLA
+    has no Pallas decode kernel — the absorbed-weight path is jnp)."""
+    kmode = _kernel_mode(cfg)
+    if kmode is not None:
+        from repro.kernels import ops
+        return (ops.paged_latent_gather(cache["ckv"], cache["bt"],
+                                        mode=kmode),
+                ops.paged_latent_gather(cache["kr"], cache["bt"],
+                                       mode=kmode))
+    return (attn_lib.paged_gather(cache["ckv"], cache["bt"]),
+            attn_lib.paged_gather(cache["kr"], cache["bt"]))
 
 
 def _mla_absorbed_decode(q_nope, q_rope, ckv, kr, p, cfg, *, kv_len):
@@ -992,13 +1036,15 @@ def commit_slots(params, tokens, positions, n_feed, cache, pending, cfg,
             lambda c, ch: c.at[b_idx, idx].set(ch.astype(c.dtype)))(cl, pl)
 
     def per_paged_group(cg, pg):
-        # cg: {"k"/"v": (L, n_pages, page, ...), "bt": (L, B, nblk)};
-        # pg: {"k"/"v": (L, B, S, ...)} — pending never carries a table.
+        # cg: {leaf arenas (L, n_pages, page, ...), "bt": (L, B, nblk)};
+        # pg: matching (L, B, S, ...) leaves — pending never carries a
+        # table.  Leaves are k/v for KV layouts, ckv/kr for MLA latents.
         # Chunk position ``pos`` resolves to page ``bt[b, (pos % ring) //
         # page]`` (ring == the logical length, so the mod is the identity
         # for full layouts); rejected positions — and rows whose block
         # was never allocated — redirect to the page sentinel and drop.
-        n_pages, page = cg["k"].shape[1:3]
+        leaves = [key for key in cg if key != "bt"]
+        n_pages, page = cg[leaves[0]].shape[1:3]
         bt = cg["bt"][0]  # layers share one table
         ring = bt.shape[1] * page
         sidx = pos % ring
@@ -1006,7 +1052,7 @@ def commit_slots(params, tokens, positions, n_feed, cache, pending, cfg,
         pid = jnp.where(committed, pid, n_pages)
         off = sidx % page
         out = {"bt": cg["bt"]}
-        for key in ("k", "v"):
+        for key in leaves:
             out[key] = jax.vmap(
                 lambda c, ch: c.at[pid, off].set(ch.astype(c.dtype),
                                                  mode="drop"))(
@@ -1040,6 +1086,20 @@ def serve_supported(cfg):
     if cfg.window:
         return True, "ring-buffer window KV cache (O(window) per slot)"
     return True, "full KV cache (O(max_len) per slot)"
+
+
+def paged_groups(cfg):
+    """Slot-state protocol: every transformer cache group pages on its
+    sequence axis — K/V for standard attention, the compressed ckv/kr
+    latents for MLA (both share one S axis and one block table)."""
+    leaves = ("ckv", "kr") if cfg.mla else ("k", "v")
+    n_dense = cfg.moe_layer_start if cfg.moe else cfg.n_layers
+    out = {}
+    if n_dense:
+        out["dense"] = ("seq", leaves)
+    if cfg.n_layers - n_dense:
+        out["moe"] = ("seq", leaves)
+    return out
 
 
 def slot_cache_layout(cfg):

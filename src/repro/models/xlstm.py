@@ -95,6 +95,29 @@ def init(rng, cfg) -> dict:
     return params
 
 
+# ---------------------------------------------------- paged conv tails
+def _conv_tail_gather(arena, bt):
+    """Dense per-slot view of a paged conv tail (per layer).
+
+    arena: (n_pages, K-1, d); bt: (B, 1) single-block table (the whole
+    shift tail is one page).  Sentinel ids clamp to the last page — the
+    garbage tail that produces belongs to rows whose state writes are
+    dropped and whose logits the engine masks.
+    """
+    n_pages = arena.shape[0]
+    return arena[jnp.minimum(bt[:, 0], n_pages - 1)]
+
+
+def _conv_tail_scatter(arena, bt, tail, done=None):
+    """Write each live row's new conv tail back to its page; ``done``
+    rows (and never-allocated sentinel blocks) drop — the paged freeze."""
+    n_pages = arena.shape[0]
+    pid = bt[:, 0]
+    if done is not None:
+        pid = jnp.where(done, n_pages, pid)
+    return arena.at[pid].set(tail.astype(arena.dtype), mode="drop")
+
+
 # ============================================================== mLSTM cell
 def _group_norm(x, scale, nh, eps=1e-6):
     """Per-head RMS-style groupnorm. x: (..., di)."""
@@ -226,7 +249,10 @@ def _mlstm_block(x, bp, cfg, cache=None, chunkwise=True, plens=None,
     up = jnp.einsum("bsd,du->bsu", xin, bp["w_up"].astype(x.dtype))
     xi, z = up[..., :di], up[..., di:]
     xi = annotate(xi, ("batch", "seq", "lru"))
-    conv_state = None if cache is None else cache["conv"]
+    conv_state = None
+    if cache is not None:
+        conv_state = (_conv_tail_gather(cache["conv"], cache["bt"])
+                      if "bt" in cache else cache["conv"])
     c, new_conv = _causal_conv(xi, bp["conv_w"], bp["conv_b"], conv_state,
                                lengths=plens)
     c = jax.nn.silu(c)
@@ -265,7 +291,15 @@ def _mlstm_block(x, bp, cfg, cache=None, chunkwise=True, plens=None,
     nc = None
     if cache is not None:
         nc = {"conv": new_conv, "C": state[0], "n": state[1], "m": state[2]}
-        if done is not None:
+        if "bt" in cache:
+            dense = {k: nc[k] for k in ("C", "n", "m")}
+            if done is not None:
+                dense = freeze_rows({k: cache[k] for k in dense}, dense,
+                                    done)
+            nc = {"conv": _conv_tail_scatter(cache["conv"], cache["bt"],
+                                             new_conv, done=done),
+                  "bt": cache["bt"], **dense}
+        elif done is not None:
             nc = freeze_rows(cache, nc, done)
     return x, nc
 
@@ -282,7 +316,10 @@ def _slstm_block(x, bp, cfg, cache=None, plens=None, done=None):
     NH = cfg.n_heads
     dh = D // NH
     xin = apply_norm(x, bp["ln"], cfg.norm)
-    conv_state = None if cache is None else cache["conv"]
+    conv_state = None
+    if cache is not None:
+        conv_state = (_conv_tail_gather(cache["conv"], cache["bt"])
+                      if "bt" in cache else cache["conv"])
     c_in, new_conv = _causal_conv(xin, bp["conv_w"], bp["conv_b"], conv_state,
                                   lengths=plens)
     c_in = jax.nn.silu(c_in)
@@ -347,7 +384,15 @@ def _slstm_block(x, bp, cfg, cache=None, plens=None, done=None):
     nc = None
     if cache is not None:
         nc = {"conv": new_conv, "c": cs, "n": ns, "h": hs, "m": ms}
-        if done is not None:
+        if "bt" in cache:
+            dense = {k: nc[k] for k in ("c", "n", "h", "m")}
+            if done is not None:
+                dense = freeze_rows({k: cache[k] for k in dense}, dense,
+                                    done)
+            nc = {"conv": _conv_tail_scatter(cache["conv"], cache["bt"],
+                                             new_conv, done=done),
+                  "bt": cache["bt"], **dense}
+        elif done is not None:
             nc = freeze_rows(cache, nc, done)
     return x, nc
 
@@ -504,17 +549,38 @@ def decode_step_slots(params, tokens, positions, cache, cfg, done=None):
     return logits[:, -1], new_cache
 
 
+def _dense_state_view(cache):
+    """Per-slot dense view of a (possibly paged) xlstm slot cache: paged
+    conv arenas gather back to (L, B, K-1, d) through their single-block
+    tables; everything else passes through.  The speculative hooks stack
+    and gather THIS view — per-slot snapshots, not per-page arenas."""
+    out = {}
+    for gk, gv in cache.items():
+        if "bt" in gv:
+            n_pages = gv["conv"].shape[1]
+            pid = jnp.minimum(gv["bt"][0][:, 0], n_pages - 1)
+            dense = {k: v for k, v in gv.items() if k != "bt"}
+            dense["conv"] = gv["conv"][:, pid]
+            out[gk] = dense
+        else:
+            out[gk] = gv
+    return out
+
+
 def verify_step_slots(params, tokens, positions, cache, cfg, done=None):
     """Speculative verify for the recurrent slot layout: one fused scan of
     the single-token slot decode over the chunk, stacking the per-step
     O(1) slot state (mLSTM C/n/m, sLSTM carries, conv tails — every xlstm
     leaf is O(1)/slot, so stacking all of them is cheap) so
     ``commit_slots`` can roll every row back to its accepted boundary.
+    Paged pools stack the per-slot DENSE view (conv tails gathered
+    through the block table) — snapshots are per slot, never per page.
     Bit-identical to sequential decode by construction."""
     from repro.models.common import spec_verify_scan
+    paged = any("bt" in g for g in cache.values())
     logits, stacked, _ = spec_verify_scan(
         decode_step_slots, params, tokens, positions, cache, cfg,
-        done=done)
+        done=done, stack_filter=_dense_state_view if paged else None)
     return logits, stacked
 
 
@@ -523,10 +589,25 @@ def commit_slots(params, tokens, positions, n_feed, cache, pending, cfg,
     """Commit = gather the stacked verify states at ``n_feed - 1`` per row;
     rows with ``n_feed == 0`` or flagged ``done`` keep their pre-chunk
     state (a recurrent update cannot be re-stored, so rollback is a
-    snapshot gather, not a truncation)."""
+    snapshot gather, not a truncation).  Paged pools gather in the dense
+    per-slot view, then scatter the committed conv tails back to their
+    pages (kept rows re-store their own gathered bytes; evicted rows'
+    sentinel blocks drop)."""
     from repro.models.common import spec_commit_gather
     del params, tokens, positions
-    return spec_commit_gather(cache, pending, n_feed, done=done)
+    if not any("bt" in g for g in cache.values()):
+        return spec_commit_gather(cache, pending, n_feed, done=done)
+    committed = spec_commit_gather(_dense_state_view(cache), pending,
+                                   n_feed, done=done)
+    out = {}
+    for gk, gv in cache.items():
+        grp = dict(committed[gk])
+        if "bt" in gv:
+            grp["conv"] = jax.vmap(_conv_tail_scatter)(
+                gv["conv"], gv["bt"], grp["conv"])
+            grp["bt"] = gv["bt"]
+        out[gk] = grp
+    return out
 
 
 def serve_supported(cfg):
@@ -537,6 +618,20 @@ def serve_supported(cfg):
 
 def slot_cache_layout(cfg):
     return "recurrent"
+
+
+def paged_groups(cfg):
+    """Slot-state protocol: the conv shift tails page (one single-entry
+    block per slot — the tail has no sequence axis, so the whole K-1
+    window is its page); the mLSTM C/n/m and sLSTM carries stay
+    dense-per-slot (O(1) matrix/vector state, nothing to page)."""
+    types = block_types(cfg)
+    out = {}
+    if any(t == "m" for t in types):
+        out["m"] = ("slot", ("conv",))
+    if any(t == "s" for t in types):
+        out["s"] = ("slot", ("conv",))
+    return out
 
 
 def cache_specs(cfg):

@@ -190,25 +190,25 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key, mesh_plan):
     def admit_fn(pools, rows, state, slots, bt_rows, first, plens, rem0,
                  eos_new, keys_new):
         new_pools = []
-        for pool, row, btr in zip(pools, rows, bt_rows):
+        for pool, row, btr, m in zip(pools, rows, bt_rows, paged_key):
             if btr is None:
                 new_pools.append(jax.tree.map(
                     lambda p, r: p.at[:, slots].set(r), pool, row))
             else:
                 new_pools.append(paged_lib.admit_scatter(pool, row, slots,
-                                                         btr))
+                                                         btr, m))
         state = _scatter_state(state, slots, first, plens, rem0, eos_new,
                                keys_new)
         return tuple(new_pools), state
 
     def evict_fn(pools, state, slots, zero_pids):
         new_pools = []
-        for pool, zp in zip(pools, zero_pids):
+        for pool, zp, m in zip(pools, zero_pids, paged_key):
             if zp is None:
                 new_pools.append(jax.tree.map(
                     lambda p: p.at[:, slots].set(0), pool))
             else:
-                new_pools.append(paged_lib.evict_clear(pool, slots, zp))
+                new_pools.append(paged_lib.evict_clear(pool, slots, zp, m))
         tokens, positions, remaining, eos, done, keys = state
         tokens = tokens.at[slots].set(0)
         positions = positions.at[slots].set(0)
@@ -227,17 +227,29 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key, mesh_plan):
     # prefix-hit admission: the shared prompt pages are already resident,
     # so the new slot only runs its private TAIL tokens (at most one
     # page) through decode steps — no bucket prefill dispatch at all.
-    # Only built for the greedy, non-speculative, paged-target engines
-    # that can actually take the path.
+    # Built for every non-speculative paged-target engine: full-KV and
+    # MLA hits alias resident pages directly; windowed (ring) hits first
+    # RECONSTRUCT the ring by copying resident absolute-position pages
+    # into the slot's private ring pages; sampled engines derive the
+    # row's chain on device — (seed, uid) advanced by ``skips`` splits,
+    # exactly mirroring ``prefill_sampled`` — and draw the first token
+    # from the chain instead of argmax, so a hit-admitted request emits
+    # the same tokens as its bucket-prefilled twin.
     hit_admit = None
-    if (paged_key and paged_key[0] is not None and spec_key is None
-            and not sampled):
+    reg_copy = None
+    if paged_key and paged_key[0] is not None and spec_key is None:
         meta0 = paged_key[0]
         fam = get_family(cfg)
+        windowed = bool(getattr(cfg, "window", None))
 
-        def hit_fn(params, pools, state, slots, bt_rows0, tail_tokens,
-                   tail_len, pos0, plens, rem0, eos_new):
-            pool = paged_lib.set_block_tables(pools[0], slots, bt_rows0)
+        def hit_fn(params, pools, state, slots, bt_rows0, src_pids,
+                   dst_pids, tail_tokens, tail_len, pos0, plens, rem0,
+                   eos_new, uids, skips):
+            pool = paged_lib.set_block_tables(pools[0], slots, bt_rows0,
+                                              meta0)
+            if windowed:
+                pool = paged_lib.ring_restore_copy(pool, src_pids,
+                                                   dst_pids, meta0)
             cap = state[0].shape[0]
 
             def scat(vals, fill, dtype):
@@ -250,18 +262,41 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key, mesh_plan):
             p0 = scat(pos0, 0, jnp.int32)
             toks = jnp.zeros((cap, meta0.page), jnp.int32).at[slots].set(
                 tail_tokens, mode="drop")
+            if sampled:
+                uc = scat(uids, 0, jnp.int32)
+                sk = scat(skips, 0, jnp.int32)
+                roots = jax.vmap(lambda u: sampling_lib.request_key(
+                    sampling.seed, u))(uc)
+                # a resume's committed run consumed one split per token
+                roots = jax.lax.fori_loop(
+                    0, jnp.max(sk),
+                    lambda i, ks: jnp.where(
+                        (i < sk)[:, None],
+                        sampling_lib.next_keys(ks)[0], ks),
+                    roots)
+            else:
+                roots = jnp.zeros((cap, 2), jnp.uint32)
 
             def body(carry, j):
-                cache, first = carry
+                cache, first, chain = carry
                 live = wave & (j < tl)
+                last = live & (j == tl - 1)
                 logits, cache = fam.decode_step_slots(
                     params, toks[:, j], p0 + j, cache, cfg, done=~live)
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                first = jnp.where(live & (j == tl - 1), nxt, first)
-                return (cache, first), None
+                if sampled:
+                    chain_new, subs = sampling_lib.next_keys(chain)
+                    nxt = sampling_lib.sample_logits(logits, subs,
+                                                     sampling)
+                    # the chain advances exactly once: on the first
+                    # really-sampled token (the j == tl - 1 draw)
+                    chain = jnp.where(last[:, None], chain_new, chain)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                first = jnp.where(last, nxt, first)
+                return (cache, first, chain), None
 
-            (pool, first), _ = jax.lax.scan(
-                body, (pool, jnp.zeros((cap,), jnp.int32)),
+            (pool, first, chain), _ = jax.lax.scan(
+                body, (pool, jnp.zeros((cap,), jnp.int32), roots),
                 jnp.arange(meta0.page, dtype=jnp.int32))
             tokens, positions, remaining, eos, done, keys = state
             plc = scat(plens, 0, jnp.int32)
@@ -271,13 +306,23 @@ def _jitted_engine_fns(cfg, k, sampling, spec_key, paged_key, mesh_plan):
             positions = jnp.where(wave, plc, positions)
             remaining = jnp.where(wave, rmc, remaining)
             eos = jnp.where(wave, eoc, eos)
-            keys = jnp.where(wave[:, None], jnp.zeros_like(keys), keys)
+            keys = jnp.where(wave[:, None], chain, keys)
             done = jnp.where(wave, (first == eoc) | (rmc <= 0), done)
             return ((pool,) + pools[1:],
                     (tokens, positions, remaining, eos, done, keys), first)
 
         hit_admit = jax.jit(hit_fn, donate_argnums=(1, 2))
-    fns = (loop, prefill, draft_prefill, admit, evict, hit_admit, fb_loop)
+        if windowed:
+            # miss-admission companion: copy the prompt's last intact
+            # full pages out of the (ring-layout) prefill scratch into
+            # registry-only pages, so later admissions can reconstruct
+            def reg_fn(pool0, rows0, reg_pids, reg_blk):
+                return paged_lib.register_copy(pool0, reg_pids, reg_blk,
+                                               rows0, meta0)
+
+            reg_copy = jax.jit(reg_fn, donate_argnums=(0,))
+    fns = (loop, prefill, draft_prefill, admit, evict, hit_admit, fb_loop,
+           reg_copy)
     if mesh_plan is not None:
         fns = tuple(mesh_plan.wrap(f) for f in fns)
     return fns
@@ -501,61 +546,87 @@ class ContinuousBatchingEngine:
         self.decode_kernel = cfg.decode_kernel  # telemetry / bench tag
         self.speculative = speculative
 
-        if pool == "paged" and speculative is not None \
-                and cfg.family != "transformer":
-            # recurrent families commit speculative blocks through
-            # state-restore paths (spec_ring_restore) that have no paged
-            # twin — serve the pair dense rather than corrupt state
-            pool = "dense"
         fams = [self.fam]
         cfgs = [cfg]
         if speculative is not None:
             fams.append(get_family(speculative.cfg))
             cfgs.append(speculative.cfg)
-        budgets = [pages] * len(fams)
-        if pool == "paged" and pages and len(fams) == 2:
-            # an EXPLICIT --pages budget is the whole engine's arena
-            # budget: split it between target and draft by their per-slot
-            # block counts, so the reservation report and backpressure
-            # reflect real memory instead of double-counting the budget
-            # once per pool
-            probe = [paged_lib.pool_meta(
-                jax.eval_shape(lambda f=f, c=c: f.init_cache(
-                    c, capacity, max_len))) for f, c in zip(fams, cfgs)]
-            if all(m is not None for m in probe):
-                nt, nd = probe[0].nblk, probe[1].nblk
-                tgt = max(1, min(int(pages) - 1,
-                                 int(pages) * nt // (nt + nd)))
-                budgets = [tgt, int(pages) - tgt]
+        # Probe every pool's natural paging geometry first: families
+        # DECLARE their pageable cache groups through the slot-state
+        # protocol (``models.paged_groups``), so paging is no longer a
+        # transformer-shaped structural guess — xlstm pages its conv
+        # tails (mLSTM carries stay dense-per-slot), MLA pages its
+        # latent caches, griffin pages its local-attention rings (and
+        # keeps them paged under speculation via the paged ring-restore
+        # commit).  A family that declares nothing stays dense WITH a
+        # named reason instead of a silent ``pool_kind`` flip.
+        probe = [None] * len(fams)
+        reasons = []
+        if pool == "paged":
+            for i, (f, c) in enumerate(zip(fams, cfgs)):
+                probe[i] = paged_lib.pool_meta(
+                    c, jax.eval_shape(lambda f=f, c=c: f.init_cache(
+                        c, capacity, max_len)))
+                if probe[i] is None:
+                    role = "target" if i == 0 else "draft"
+                    reasons.append(
+                        f"{role}: "
+                        f"{paged_lib.pool_fallback_reason(c) or 'unpageable cache layout'}")
+        self.pool_fallback_reason = "; ".join(reasons) or None
+        paged_idx = [i for i, m in enumerate(probe) if m is not None]
+        # ONE page-id space across every paged pool of the engine: page
+        # ``p`` is row ``p`` of each pool's arenas, a request allocates
+        # its worst-case page count once and every pool consumes the
+        # leading slice — so an explicit --pages budget is real shared
+        # memory (draft and target trade pages freely) instead of the
+        # old static per-pool split.
         self.pages_budget = None
+        n_pages = None
+        if paged_idx:
+            n_pages = int(pages) if pages else max(
+                probe[i].n_pages for i in paged_idx)
+            self.pages_budget = n_pages
         pools, metas = [], []
-        for f, c, b in zip(fams, cfgs, budgets):
-            if pool == "paged":
+        for i, (f, c) in enumerate(zip(fams, cfgs)):
+            if probe[i] is not None:
                 p, m = paged_lib.build_paged_pool(f, c, capacity, max_len,
-                                                  b)
+                                                  n_pages=n_pages)
             else:
                 p, m = f.init_cache(c, capacity, max_len), None
             pools.append(p)
             metas.append(m)
-        if pool == "paged" and all(m is not None for m in metas):
-            self.pages_budget = tuple(m.n_pages for m in metas)
         self._pools = tuple(pools)
         self._metas = tuple(metas)
-        self._paged = any(m is not None for m in metas)
-        # "paged" only if a pool actually paged (xlstm / MLA fall back)
+        self._paged = bool(paged_idx)
         self.pool_kind = "paged" if self._paged else "dense"
-        self._allocs = tuple(paged_lib.PageAllocator(m) if m is not None
-                             else None for m in metas)
-        # slot -> per-pool page-id lists owned by the admitted request
+        # pool index -> refcount namespace in the shared allocator
+        self._ns_of = {pi: j for j, pi in enumerate(paged_idx)}
+        self._alloc = paged_lib.PageAllocator(
+            metas[paged_idx[0]], namespaces=len(paged_idx)) \
+            if paged_idx else None
+        # slot -> page-id list owned by the admitted request (one list:
+        # every paged pool consumes its leading slice of the same ids)
         self._slot_pages: Dict[int, list] = {}
-        # release()d pages awaiting their zeroing scatter (rollbacks)
-        self._zero_pending: List[List[int]] = [[] for _ in metas]
-        # shared-prefix admission: only meaningful where the block table
-        # is absolute-position-addressed and decode is deterministic
+        # release()d pages awaiting their zeroing scatter (rollbacks);
+        # a page that hits global zero is zeroed in EVERY paged pool
+        self._zero_pending: List[int] = []
+        # shared-prefix admission: meaningful where the target's seq
+        # pages are absolute-position-addressed (full KV, MLA latents)
+        # or reconstructible (rings with at least one page of slack
+        # over the window — the admission prefill's partial tail page
+        # always clobbers the oldest ring page, so a slack-less ring
+        # has no intact shareable tail).  Sampled engines take the path
+        # too: the hit replays the request's (seed, uid) chain on
+        # device, so hit and miss admissions emit identical tokens.
+        window = getattr(cfg, "window", None)
+        self._windowed = bool(window)
+        ring_ok = True
+        if window and metas[0] is not None:
+            ring_ok = (metas[0].nblk - 1) * metas[0].page + 1 >= window \
+                and metas[0].nblk > 1
         self._prefix_ok = (metas[0] is not None and speculative is None
-                           and self.sampling is None
                            and cfg.family == "transformer"
-                           and not getattr(cfg, "window", None))
+                           and metas[0].page > 0 and ring_ok)
         self._spec_fallback = False  # draft faulted: plain macro decode
         self._arena_degraded = False  # paged arena faulted: no sharing
         # persistent device-resident decode state: (tokens, positions,
@@ -611,7 +682,8 @@ class ContinuousBatchingEngine:
         spec_key = None if speculative is None \
             else (speculative.cfg, speculative.d)
         (self._loop, self._prefill, self._draft_prefill, self._admit,
-         self._evict, self._hit_admit, self._fb_loop) = _jitted_engine_fns(
+         self._evict, self._hit_admit, self._fb_loop,
+         self._reg_copy) = _jitted_engine_fns(
             cfg, self.k, self.sampling, spec_key, self._metas,
             self.mesh_plan)
 
@@ -628,15 +700,15 @@ class ContinuousBatchingEngine:
 
     @property
     def pages_in_use(self) -> int:
-        """Live (refcounted) target-pool pages right now (0 when dense)."""
-        a = self._allocs[0]
-        return a.pages_in_use() if a is not None else 0
+        """Live (refcounted) pages in the shared arena right now (0 when
+        dense)."""
+        return self._alloc.pages_in_use() if self._alloc is not None else 0
 
     @property
     def pages_highwater(self) -> int:
-        """Peak live target-pool pages since construction (0 when dense)."""
-        a = self._allocs[0]
-        return a.highwater if a is not None else 0
+        """Peak live shared-arena pages since construction (0 when
+        dense)."""
+        return self._alloc.highwater if self._alloc is not None else 0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -690,17 +762,17 @@ class ContinuousBatchingEngine:
         if P - nc + req.max_new_tokens > self.max_len:
             return (f"prompt {P - nc} + {req.max_new_tokens} new tokens "
                     f"exceeds max_len {self.max_len}")
-        for meta in self._metas:
-            if meta is None:
-                continue
-            need = paged_lib.pages_needed(P, req.max_new_tokens - nc, meta)
-            if need > meta.n_pages:
+        if self._alloc is not None:
+            need = max(paged_lib.pages_needed(
+                P, req.max_new_tokens - nc, m)
+                for m in self._metas if m is not None)
+            if need > self._alloc.meta.n_pages:
                 # a request no eviction wave can ever make room for must
                 # not enter the queue: _admit_batch would push it back to
                 # the front forever and livelock the whole server
                 return (f"needs {need} pages but the arena holds only "
-                        f"{meta.n_pages} (raise --pages or shrink the "
-                        f"request)")
+                        f"{self._alloc.meta.n_pages} (raise --pages or "
+                        f"shrink the request)")
         return None
 
     def submit(self, req: Request):
@@ -782,27 +854,44 @@ class ContinuousBatchingEngine:
         return [items[i] for i in take]
 
     def _alloc_request(self, req: Request):
-        """Reserve device pages for one request across every paged pool.
+        """Reserve shared-arena pages for one request.
 
-        Returns an admission record, or None when some pool cannot
-        currently supply the pages — with every partial grab rolled back,
-        so backpressure is all-or-nothing per request.  The target pool
-        is probed for a shared-prefix hit first: every full page strictly
-        before the prompt's last token must resolve through the registry
-        (full chain or nothing), in which case the request increfs the
-        resident pages, allocates only its private tail, and rides the
-        no-prefill admission path.
+        Returns an admission record, or None on backpressure (nothing is
+        held — the alloc is all-or-nothing).  A request allocates its
+        WORST-CASE page count across the engine's paged pools once, with
+        a reference in every paged pool's namespace; each pool's block
+        table consumes the leading slice of the same ids (page ``p`` is
+        a row in every pool's arenas), so draft and target trade freely
+        inside one budget.
+
+        The target pool is probed for a shared-prefix hit first.  Full /
+        MLA layouts: every full page strictly before the prompt's last
+        token must resolve through the registry (full chain or nothing);
+        the request increfs the resident pages, allocates only its
+        private tail, and rides the no-prefill admission path.  Ring
+        layouts cannot alias resident pages (the slot's ring keeps
+        wrapping over them), so a ring hit pins the registered tail
+        copies only long enough for ``_admit_hits`` to COPY them into
+        the slot's freshly-allocated private ring pages — the chained
+        digest of the last looked-up page commits to the entire prefix,
+        so matching just the reconstructible tail still proves identity.
         """
         P = len(req.prompt)
         n_new = req.max_new_tokens - req.n_committed
-        info = {"hit": False, "share": 0, "digests": None,
-                "pids": [None] * len(self._pools)}
+        alloc = self._alloc
+        ns_all = tuple(self._ns_of.values())
+        info = {"hit": False, "share": 0, "nreg": 0, "digests": None,
+                "pids": None, "resident": None}
         if self._prefix_ok and not self._arena_degraded:
-            meta, alloc = self._metas[0], self._allocs[0]
+            meta = self._metas[0]
             digests = paged_lib.prefix_digests(req.prompt, meta.page)
             info["digests"] = digests
             share = (P - 1) // meta.page  # >= 1 private tail token stays
-            resident = alloc.lookup(digests[:share]) if share > 0 else None
+            # rings can only reconstruct the last nblk - 1 full pages
+            # (the prefill tail always clobbered the oldest ring page)
+            nreg = min(share, meta.nblk - 1) if self._windowed else share
+            resident = alloc.lookup(digests[share - nreg:share]) \
+                if nreg > 0 else None
             if resident is not None:
                 # Pin the resident pages BEFORE the tail alloc: under
                 # memory pressure alloc() reclaims zero-ref LRU-retained
@@ -812,45 +901,43 @@ class ContinuousBatchingEngine:
                 # this slot, and tail writes would corrupt the prefix KV.
                 alloc.incref(resident)
                 total = paged_lib.pages_needed(P, n_new, meta)
-                tail = alloc.alloc(total - share)
+                # a ring hit's pages are ALL private (resident copies
+                # are sources for the reconstruction, not aliased)
+                tail = alloc.alloc(total if self._windowed
+                                   else total - share, ns=ns_all)
                 if tail is None:
                     # Tail backpressure, NOT a registry miss: unpin and
                     # wait for the next eviction wave.  (A fresh full
                     # alloc of ``total > tail`` pages cannot succeed
                     # either, so don't fall through to the miss path.)
-                    self._zero_pending[0].extend(alloc.release(resident))
+                    self._zero_pending.extend(alloc.release(resident))
                     self.n_prefix_stalls += 1
                     return None
-                info.update(hit=True, share=share)
-                info["pids"][0] = list(resident) + tail
+                info.update(hit=True, share=share, nreg=nreg)
+                if self._windowed:
+                    info["pids"] = tail
+                    info["resident"] = list(resident)
+                else:
+                    info["pids"] = list(resident) + tail
                 self.n_prefix_hits += 1
                 self.n_pages_allocated += len(tail)
                 return info
-            if share > 0:
+            if nreg > 0:
                 self.n_prefix_misses += 1
-        got = []
-        for pi, (meta, alloc) in enumerate(zip(self._metas, self._allocs)):
-            if meta is None:
-                continue
-            # degradation ladder: once the arena has seen a poisoned slot,
-            # sharing is off and every admission reserves its FULL block
-            # table (dense-pool semantics on paged storage) — worst-case
-            # isolation in exchange for capacity
-            need = meta.nblk if self._arena_degraded \
-                else paged_lib.pages_needed(P, n_new, meta)
-            pids = alloc.alloc(need)
-            if pids is None:
-                # roll the earlier pools back; the zeroing rides the next
-                # eviction scatter (before any page can be re-handed out)
-                for pj, pj_pids in got:
-                    self._zero_pending[pj].extend(
-                        self._allocs[pj].release(pj_pids))
-                return None
-            got.append((pi, pids))
-            info["pids"][pi] = pids
-            if pi == 0:
-                self.n_pages_allocated += len(pids)
-        if got and self._arena_degraded:
+        paged_metas = [m for m in self._metas if m is not None]
+        # degradation ladder: once the arena has seen a poisoned slot,
+        # sharing is off and every admission reserves its FULL block
+        # table (dense-pool semantics on paged storage) — worst-case
+        # isolation in exchange for capacity
+        need = max(m.nblk for m in paged_metas) if self._arena_degraded \
+            else max(paged_lib.pages_needed(P, n_new, m)
+                     for m in paged_metas)
+        pids = alloc.alloc(need, ns=ns_all)
+        if pids is None:
+            return None
+        info["pids"] = pids
+        self.n_pages_allocated += len(pids)
+        if self._arena_degraded:
             self.n_degraded_admissions += 1
         return info
 
@@ -922,10 +1009,12 @@ class ContinuousBatchingEngine:
                 eos_new[j] = -1 if r.eos_id is None else r.eos_id
                 slots[j] = self.free.pop()
                 if a is not None:
-                    self._slot_pages[int(slots[j])] = a["pids"]
-                    for pi, pids in enumerate(a["pids"]):
-                        if pids:
-                            bt_rows[pi][j, :len(pids)] = pids
+                    pids = a["pids"]
+                    self._slot_pages[int(slots[j])] = pids
+                    for pi, m in enumerate(self._metas):
+                        if m is not None:
+                            cnt = min(len(pids), m.nblk)
+                            bt_rows[pi][j, :cnt] = pids[:cnt]
             rows = [self.fam.init_cache(self.cfg, npad, self.max_len)]
             # pad-tail cache entries are garbage but never visible: each
             # decode step overwrites its own position before the per-row
@@ -958,6 +1047,46 @@ class ContinuousBatchingEngine:
                     self.speculative.params, jnp.asarray(padded),
                     jnp.asarray(plens), draft_rows))
                 self.n_prefills += 1
+            if (self._windowed and self._prefix_ok
+                    and not self._arena_degraded
+                    and self._reg_copy is not None):
+                # ring prefix cache: the admit scatter is about to write
+                # RING-wrapped pages, which the donor will keep
+                # overwriting — so copy the prompt's last intact full
+                # pages out of the prefill scratch into registry-only
+                # pages first (best-effort: an admission proceeds fine
+                # without registering, it just can't donate hits)
+                meta = self._metas[0]
+                reg_pids = np.full((npad, meta.nblk), meta.sentinel,
+                                   np.int32)
+                reg_blk = np.zeros((npad, meta.nblk), np.int32)
+                reg_records = []
+                for j, (r, a) in enumerate(group):
+                    if a is None or not a["digests"]:
+                        continue
+                    share = (len(r.prompt) - 1) // meta.page
+                    nreg = min(share, meta.nblk - 1)
+                    if nreg <= 0:
+                        continue
+                    got = self._alloc.alloc(nreg)
+                    if got is None:
+                        continue
+                    for t, ab in enumerate(range(share - nreg, share)):
+                        reg_pids[j, t] = got[t]
+                        reg_blk[j, t] = ab % meta.nblk
+                    reg_records.append(
+                        (a["digests"][share - nreg:share], got))
+                if reg_records:
+                    pool0 = self._reg_copy(
+                        self._pools[0], rows[0], jnp.asarray(reg_pids),
+                        jnp.asarray(reg_blk))
+                    self._pools = (pool0,) + self._pools[1:]
+                    for dg, got in reg_records:
+                        self._alloc.register(dg, got)
+                        # registered pages retire to the LRU with their
+                        # bytes intact; a first-writer-wins loser comes
+                        # back on the zero list and is freed
+                        self._zero_pending.extend(self._alloc.release(got))
             self._pools, self._state = self._admit(
                 self._pools, tuple(rows), self._state, jnp.asarray(slots),
                 tuple(None if b is None else jnp.asarray(b)
@@ -982,15 +1111,17 @@ class ContinuousBatchingEngine:
                 self.n_admitted += 1
                 if self.journal is not None:
                     self.journal.record_tokens(r.uid, [int(first_host[j])])
-                if a is not None and self._prefix_ok and a["digests"]:
+                if (a is not None and self._prefix_ok and a["digests"]
+                        and not self._windowed):
                     # pages fully covered by the prompt now hold its
                     # canonical prefill-built KV — make them shareable.
                     # (Tail pages decode-built by the HIT path are never
-                    # registered: only prefill bytes enter the registry.)
+                    # registered: only prefill bytes enter the registry.
+                    # Windowed rings registered via the copy pass above.)
                     reg = len(r.prompt) // self._metas[0].page
                     if reg:
-                        self._allocs[0].register(a["digests"][:reg],
-                                                 a["pids"][0][:reg])
+                        self._alloc.register(a["digests"][:reg],
+                                             a["pids"][:reg])
                 self._finish_if_done(seq, seq.tokens[-1])
             if self.journal is not None:
                 # ride the admission host sync that just happened
@@ -998,37 +1129,66 @@ class ContinuousBatchingEngine:
 
     def _admit_hits(self, pairs):
         """No-prefill admission: point the slots' leading block-table
-        entries at the resident shared pages, then run ONLY the private
-        tail tokens (at most one page of them) through masked decode
-        steps inside one jit — no bucket prefill dispatch at all."""
+        entries at the resident shared pages (full / MLA layouts) or
+        reconstruct the slot's private ring from the registered
+        absolute-position copies (windowed layouts), then run ONLY the
+        private tail tokens (at most one page of them) through masked
+        decode steps inside one jit — no bucket prefill dispatch at
+        all.  Sampled engines derive the first token from the request's
+        (seed, uid) chain inside the same jit."""
         meta = self._metas[0]
         n = len(pairs)
         npad = _pow2(n)
         slots = np.full((npad,), self.capacity, np.int32)
         bt_rows = np.full((npad, meta.nblk), meta.sentinel, np.int32)
+        src_pids = np.full((npad, meta.nblk), meta.sentinel, np.int32)
+        dst_pids = np.full((npad, meta.nblk), meta.sentinel, np.int32)
         tail_tokens = np.zeros((npad, meta.page), np.int32)
         tail_len = np.zeros((npad,), np.int32)
         pos0 = np.zeros((npad,), np.int32)
         plens = np.ones((npad,), np.int32)
         rem0 = np.zeros((npad,), np.int32)
         eos_new = np.full((npad,), -1, np.int32)
+        uids = np.zeros((npad,), np.int32)
+        skips = np.zeros((npad,), np.int32)
         for j, (r, a) in enumerate(pairs):
-            pids = a["pids"][0]
+            pids = a["pids"]
             slots[j] = self.free.pop()
-            self._slot_pages[int(slots[j])] = a["pids"]
+            self._slot_pages[int(slots[j])] = pids
             bt_rows[j, :len(pids)] = pids
             pos0[j] = a["share"] * meta.page
+            if self._windowed:
+                # absolute page ``ab`` was registered at copy ``t`` and
+                # lands in the slot's private ring page for block
+                # ``ab % nblk`` — the exact rotation a sequential fill
+                # of the ring would have left it at
+                for t, ab in enumerate(range(a["share"] - a["nreg"],
+                                             a["share"])):
+                    src_pids[j, t] = a["resident"][t]
+                    dst_pids[j, t] = pids[ab % meta.nblk]
             tail = np.asarray(r.prompt[pos0[j]:], np.int32)
             tail_len[j] = len(tail)
             tail_tokens[j, :len(tail)] = tail
             plens[j] = len(r.prompt)
             rem0[j] = r.max_new_tokens - r.n_committed - 1
             eos_new[j] = -1 if r.eos_id is None else r.eos_id
+            uids[j] = r.uid
+            skips[j] = r.n_committed
         self._pools, self._state, first = self._hit_admit(
             self.params, self._pools, self._state, jnp.asarray(slots),
-            jnp.asarray(bt_rows), jnp.asarray(tail_tokens),
+            jnp.asarray(bt_rows), jnp.asarray(src_pids),
+            jnp.asarray(dst_pids), jnp.asarray(tail_tokens),
             jnp.asarray(tail_len), jnp.asarray(pos0), jnp.asarray(plens),
-            jnp.asarray(rem0), jnp.asarray(eos_new))
+            jnp.asarray(rem0), jnp.asarray(eos_new), jnp.asarray(uids),
+            jnp.asarray(skips))
+        if self._windowed:
+            # the reconstruction copy has consumed the resident pages
+            # (ordering via the donated pool buffer chain); unpin them —
+            # still-registered pages retire back to the LRU intact
+            for _, a in pairs:
+                if a["resident"]:
+                    self._zero_pending.extend(
+                        self._alloc.release(a["resident"]))
         first_host = np.asarray(first)  # capacity-wide: index by slot
         self.n_host_syncs += 1
         t = time.monotonic()
@@ -1088,9 +1248,9 @@ class ContinuousBatchingEngine:
         reservation."""
         self.n_quarantined += 1
         self._retire(seq, "quarantined")
-        if self._metas[0] is not None and not self._arena_degraded:
+        if self._alloc is not None and not self._arena_degraded:
             self._arena_degraded = True
-            self._zero_pending[0].extend(self._allocs[0].flush_registry())
+            self._zero_pending.extend(self._alloc.flush_registry())
             self._prefix_ok = False
 
     def _deadline_of(self, req: Request) -> Optional[float]:
@@ -1162,18 +1322,19 @@ class ContinuousBatchingEngine:
         the cached value) and are absent from the zero list.
         """
         if not self._evict_pending and not (self._paged
-                                            and any(self._zero_pending)):
+                                            and self._zero_pending):
             return
-        zero = [None if m is None else list(zp)
-                for m, zp in zip(self._metas, self._zero_pending)]
-        for zp in self._zero_pending:
-            zp.clear()
+        zero = list(self._zero_pending)
+        self._zero_pending.clear()
         for slot in self._evict_pending:
             pids = self._slot_pages.pop(slot, None)
             if pids:
-                for pi, plist in enumerate(pids):
-                    if plist:
-                        zero[pi].extend(self._allocs[pi].release(plist))
+                # one reference per namespace was taken at admission; a
+                # page crosses GLOBAL zero during exactly one of these
+                # releases and must then be zeroed in EVERY paged pool
+                # (it is a row in each pool's arenas)
+                for ns in self._ns_of.values():
+                    zero.extend(self._alloc.release(pids, ns=ns))
         slots = np.full((self.capacity,), self.capacity, np.int32)
         slots[:len(self._evict_pending)] = self._evict_pending
         if not self._paged:
@@ -1181,26 +1342,27 @@ class ContinuousBatchingEngine:
                 self._pools, self._state, jnp.asarray(slots),
                 (None,) * len(self._pools))
         else:
-            # fixed zero-list shape (capacity * nblk per pool) bounds the
-            # compile count; overflow (possible after alloc rollbacks)
-            # loops — the slot scatter is idempotent
+            # fixed zero-list shape (capacity * max nblk, shared by all
+            # paged pools) bounds the compile count; overflow (possible
+            # after alloc rollbacks) loops — the slot scatter is
+            # idempotent
+            lim = self.capacity * max(m.nblk for m in self._metas
+                                      if m is not None)
             while True:
-                chunk, more = [], False
-                for pi, m in enumerate(self._metas):
+                take = zero[:lim]
+                del zero[:lim]
+                chunk = []
+                for m in self._metas:
                     if m is None:
                         chunk.append(None)
                         continue
-                    lim = self.capacity * m.nblk
                     zp = np.full((lim,), m.sentinel, np.int32)
-                    takek = zero[pi][:lim]
-                    zp[:len(takek)] = takek
-                    del zero[pi][:lim]
-                    more = more or bool(zero[pi])
+                    zp[:len(take)] = take
                     chunk.append(jnp.asarray(zp))
                 self._pools, self._state = self._evict(
                     self._pools, self._state, jnp.asarray(slots),
                     tuple(chunk))
-                if not more:
+                if not zero:
                     break
         self.free.extend(self._evict_pending)
         self._evict_pending.clear()
@@ -1227,6 +1389,12 @@ class ContinuousBatchingEngine:
         while self._inflight:
             self._process(self._inflight.popleft())
         self._flush_evictions()
+        # page-residency delta: pages live at quiesce are all LOST by the
+        # swap — cache rows are internal activations of the OLD function
+        # (grown params + re-laid geometry invalidate every byte), so
+        # "carried" is structurally zero and the visible cost of a live
+        # upgrade is the re-prefill page bill of the resume wave.
+        pages_at_swap = self.pages_in_use
         resumes: List[Request] = []
         for seq in sorted(self.active.values(),
                           key=lambda s: (s.t_first, s.req.uid)):
@@ -1245,11 +1413,12 @@ class ContinuousBatchingEngine:
         self._configure(mgr.cfg_tgt, mgr.grown_params, spec)
         if spec is not None and any(self._invalid_reason(r) is not None
                                     for r in resumes):
-            # enabling the post-swap draft split an explicit --pages
-            # arena under an in-flight request's page need; zero-drop
+            # enabling the post-swap draft raised the shared-arena page
+            # need (a request reserves max(need) across pools) above an
+            # explicit --pages budget for an in-flight resume; zero-drop
             # beats free speculation, so swap without the draft
-            mgr.disable_spec("draft arena split would evict an "
-                             "in-flight request")
+            mgr.disable_spec("draft page need exceeds the shared arena "
+                             "for an in-flight request")
             self._configure(mgr.cfg_tgt, mgr.grown_params, None)
         # queued (never-admitted) requests were validated under the OLD
         # geometry; re-validate so one that became unservable cannot
@@ -1279,7 +1448,16 @@ class ContinuousBatchingEngine:
             self.journal.flush()
         pause_ms = (time.perf_counter() - t0) * 1e3
         self.last_upgrade_pause_ms = pause_ms
-        mgr._swapped(self, pause_ms, resumes)
+        pages_reprefill = 0
+        if self._alloc is not None:
+            pages_reprefill = sum(
+                max(paged_lib.pages_needed(len(r.prompt),
+                                           r.max_new_tokens, m)
+                    for m in self._metas if m is not None)
+                for r in resumes)
+        mgr._swapped(self, pause_ms, resumes,
+                     pages_resident=pages_at_swap,
+                     pages_reprefilled=pages_reprefill)
 
     # ---------------------------------------------------------------- faults
     def _inject(self, f):
@@ -1319,8 +1497,10 @@ class ContinuousBatchingEngine:
         meta = self._metas[f.pool]
         # paged pools poison the slot's first page (attention reads it
         # every step); the page id also guards dense engines, where it
-        # is simply unused
-        pid = self._slot_pages[slot][f.pool][0] if meta is not None else 0
+        # is simply unused.  The shared id space means the slot's first
+        # page is a row of EVERY paged pool, so the same id is right for
+        # whichever pool the fault targets.
+        pid = self._slot_pages[slot][0] if meta is not None else 0
         pools = list(self._pools)
         pools[f.pool] = self._poison_jit(pools[f.pool], jnp.int32(slot),
                                          jnp.int32(pid))

@@ -15,7 +15,11 @@ target.  This module exploits that pair at serve time:
     ``commit_slots``: KV layouts scatter only the accepted positions
     (rollback = "never wrote it"), recurrent layouts gather the stacked
     per-step state at the accepted boundary (``freeze_rows``-style
-    snapshot/restore);
+    snapshot/restore).  Paged pools commit the same way through block
+    tables — ring layouts via the paged ``spec_ring_restore`` twin
+    (``models/common.py``), so griffin + speculative serves paged, and a
+    draft/target pair draws from ONE shared page arena (per-engine
+    refcount namespaces; see ``serve/paged.py``);
   * per-slot eos / budget stopping is folded into the acceptance mask, so
     a slot that finishes mid-chunk freezes exactly there — the same
     contract as the macro decode loop.

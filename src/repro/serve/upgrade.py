@@ -195,6 +195,16 @@ class UpgradeManager:
         self.grow_seconds: Optional[float] = None
         self.pause_ms: Optional[float] = None
         self.resumed: Optional[int] = None
+        # page-residency delta of the swap (paged engines; zeros when
+        # dense): pages_resident_at_swap were live at quiesce and are all
+        # invalidated (cache bytes are activations of the pre-growth
+        # function), pages_carried is therefore structurally 0, and
+        # pages_reprefilled is the page bill the resume wave pays to
+        # rebuild state under the grown model — the measurable cost of
+        # the zero-drop guarantee.
+        self.pages_resident_at_swap: Optional[int] = None
+        self.pages_carried: Optional[int] = None
+        self.pages_reprefilled: Optional[int] = None
         self.tokens_at_swap: Optional[int] = None
         self.t_swap: Optional[float] = None
         self._ready = threading.Event()
@@ -216,7 +226,8 @@ class UpgradeManager:
 
     def disable_spec(self, why: str) -> None:
         """Called by the swap when enabling the draft would violate the
-        zero-drop guarantee (e.g. an explicit --pages arena split)."""
+        zero-drop guarantee (e.g. the draft's page need pushing a
+        resume's shared-arena reservation past an explicit --pages)."""
         self._spec_enabled = False
         self.spec_reason = why
 
@@ -320,11 +331,15 @@ class UpgradeManager:
         return True
 
     def _swapped(self, engine: ContinuousBatchingEngine, pause_ms: float,
-                 resumes) -> None:
+                 resumes, *, pages_resident: int = 0,
+                 pages_reprefilled: int = 0) -> None:
         """Engine callback at the end of ``_apply_upgrade``."""
         self.pause_ms = pause_ms
         self.resumed = len(resumes)
         self.resumed_requests = list(resumes)
+        self.pages_resident_at_swap = int(pages_resident)
+        self.pages_carried = 0
+        self.pages_reprefilled = int(pages_reprefilled)
         self.tokens_at_swap = engine.lifetime_totals()["n_tokens"]
         self.t_swap = time.monotonic()
         self._set_state("swapped")

@@ -1,15 +1,20 @@
 """Paged slot-pool invariants: block-table KV + copy-on-write prefix cache.
 
-The paged pool re-lays the engine's sequence-indexed cache groups as a
-shared page arena plus per-slot block tables (``pool="paged"``).  Its
-contract mirrors the dense pool's: *token-exactness* — for any trace,
-greedy tokens equal both the dense engine's and the sequential
-``generate()`` loop's, across transformer full-KV, ring-window, griffin,
-and speculative chunk-verify serving, in the jnp path and the Pallas
-interpreter path alike.  On top of that sit the pool's own invariants:
-all-or-nothing page allocation with backpressure (never a partial
-admission), refcounted page release on eviction, and prefix-cache hits
-that skip re-prefill without changing a single token.
+The paged pool re-lays every cache group a family DECLARES pageable
+(``models.paged_groups``) over ONE shared page arena plus per-slot block
+tables (``pool="paged"``).  Its contract mirrors the dense pool's:
+*token-exactness* — for any trace, greedy tokens equal both the dense
+engine's and the sequential ``generate()`` loop's, across transformer
+full-KV, MLA latent, ring-window, griffin, xlstm slot-tail, and
+speculative chunk-verify serving (griffin pairs included), in the jnp
+path and the Pallas interpreter path alike.  On top of that sit the
+pool's own invariants: all-or-nothing page allocation with backpressure
+(never a partial admission), refcounted page release on eviction across
+the draft/target namespaces of a shared arena, prefix-cache hits — full
+KV, ring tail-restore, and sampled replay — that skip re-prefill without
+changing a single token, and the allocator conservation law (free +
+held + LRU-retained == n_pages, live block tables only ever referencing
+held pages).
 """
 import collections
 import time
@@ -104,6 +109,58 @@ def _griffin_cfg():
                        block_pattern=("rec", "rec", "attn"))
 
 
+def _griffin_rec_cfg():
+    """All-recurrent griffin: servable, but with NO pageable cache group
+    (the one remaining honest dense-fallback case in the zoo)."""
+    return ModelConfig(name="griffin-rec-only", family="griffin",
+                       n_layers=2, d_model=48, n_heads=4, n_kv_heads=1,
+                       d_ff=96, vocab_size=97, lru_width=48, window=6,
+                       act="geglu", attn_chunk=8, scale_embeddings=True,
+                       block_pattern=("rec", "rec"))
+
+
+def _xlstm_cfg():
+    return ModelConfig(name="xlstm-paged", family="xlstm", n_layers=2,
+                       d_model=48, n_heads=4, n_kv_heads=4, d_ff=0,
+                       vocab_size=97, proj_factor=2.0, attn_chunk=8,
+                       block_pattern=("m", "s"))
+
+
+def _window9_cfg():
+    """window=9 over a 16-deep ring (page 8, nblk 2): the smallest
+    geometry where the ring retains one full UNCLOBBERED page —
+    ``(nblk-1)*page + 1 >= window`` — so ring prefix sharing can fire
+    (window=8/ring=8/nblk=1 can never hit: the prompt's partial tail
+    page always overwrites the only ring page)."""
+    return ModelConfig(name="win9-paged", n_layers=2, d_model=48,
+                       n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=97,
+                       window=9, attn_chunk=8)
+
+
+def _arena_invariants(engine):
+    """The allocator conservation law, checked against device state:
+    free ∪ held ∪ LRU-retained partitions the page-id space, pages
+    pending a zeroing scatter are already free, and every non-sentinel
+    block-table entry of a LIVE slot references a held page."""
+    alloc = engine._alloc
+    n = alloc.meta.n_pages
+    free, lru = set(alloc.free), set(alloc.lru)
+    held = {p for p in range(n) if alloc.refcount[p].sum() > 0}
+    assert len(alloc.free) == len(free)  # no duplicate free entries
+    assert not (free & held) and not (free & lru) and not (held & lru)
+    assert free | held | lru == set(range(n))
+    assert set(engine._zero_pending) <= free
+    live = set()
+    for pool, meta in zip(engine._pools, engine._metas):
+        if meta is None:
+            continue
+        for g in meta.groups:
+            bt = np.asarray(pool[g.path[0]]["bt"][0])
+            for slot in engine.active:
+                live |= {int(x) for x in bt[slot] if int(x) < n}
+    assert live <= held, (live, held)
+
+
 def _params(cfg):
     from repro.models import get_family
     return get_family(cfg).init(jax.random.PRNGKey(0), cfg)
@@ -152,20 +209,51 @@ def test_paged_griffin_mixed_groups():
     _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
 
 
-def test_unpageable_family_serves_dense():
-    """A family with no sequence-indexed cache group (xlstm: O(1)
-    recurrent state only) degrades to the dense pool — reported via
-    ``pool_kind`` — and still serves token-exactly."""
-    cfg = ModelConfig(name="xlstm-paged", family="xlstm", n_layers=2,
-                      d_model=48, n_heads=4, n_kv_heads=4, d_ff=0,
-                      vocab_size=97, proj_factor=2.0, attn_chunk=8,
-                      block_pattern=("m", "s"))
+def test_paged_xlstm_slot_groups_parity():
+    """xlstm pages its conv-tail SLOT groups (one whole tail per page,
+    nblk=1) while the mLSTM/sLSTM carries stay dense-per-slot — the
+    family serves paged now instead of silently flipping dense —
+    token-exact vs the dense pool and sequential generate()."""
+    cfg = _xlstm_cfg()
+    params = _params(cfg)
+    reqs = _requests(cfg, [(3, 6), (9, 2), (5, 8), (12, 4), (4, 7)])
+    got_d, got_p, engine = _run_both(cfg, params, reqs, capacity=2)
+    assert engine.pool_kind == "paged"
+    assert engine.pool_fallback_reason is None
+    # both blocks page their conv tails; carries stay dense in-place
+    paged_groups = [g for g in engine.pool.values()
+                    if isinstance(g, dict) and "bt" in g]
+    assert len(paged_groups) == 2
+    assert all(len(g) > 2 for g in paged_groups)  # dense carries ride along
+    _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
+
+
+def test_paged_mla_latent_parity():
+    """MLA pages its latent caches (ckv/kr) — absorbed decode consumes
+    the paged latents through a layout gather, token-exact vs dense and
+    sequential."""
+    from repro.configs.base import get_config
+    cfg = get_config("deepseek-v3-671b-smoke")
+    params = _params(cfg)
+    reqs = _requests(cfg, [(3, 6), (9, 2), (5, 8), (11, 4)])
+    got_d, got_p, engine = _run_both(cfg, params, reqs, capacity=2)
+    assert engine.pool_kind == "paged"
+    _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
+
+
+def test_unpageable_config_serves_dense_with_named_reason():
+    """A config with no pageable cache group (all-recurrent griffin:
+    O(1) state only) degrades to the dense pool WITH a named
+    ``pool_fallback_reason`` — the silent ``pool_kind`` flip is retired —
+    and still serves token-exactly."""
+    cfg = _griffin_rec_cfg()
     params = _params(cfg)
     reqs = _requests(cfg, [(3, 6), (9, 2), (5, 8)])
     engine = ContinuousBatchingEngine(cfg, params, capacity=2,
                                       max_len=MAX_LEN, prefill_bucket=4,
                                       k=4, pool="paged")
     assert engine.pool_kind == "dense"
+    assert "no pageable cache groups" in engine.pool_fallback_reason
     got = engine.run(reqs)
     want = _sequential(cfg, params, reqs)
     for uid in want:
@@ -188,17 +276,29 @@ def test_paged_speculative_chunk_verify(gpt_micro_cfg, gpt_micro_big_cfg):
     _assert_equal(got_d, got_p, _sequential(cfg_t, params_t, reqs))
 
 
-def test_paged_griffin_speculative_falls_back_dense():
-    """Griffin + speculative commits blocks through state-restore paths
-    with no paged twin — the engine must serve dense, not corrupt."""
+@pytest.mark.parametrize("d", [2, 4])
+def test_paged_griffin_speculative_parity(d):
+    """Griffin + speculative no longer forces dense: the paged
+    ``spec_ring_restore`` twin commits/rolls back verify blocks directly
+    in the paged local-attention rings.  Token-exact vs the dense spec
+    engine and sequential generate() at both depths, with generations
+    long enough to wrap the window ring several times."""
     cfg = _griffin_cfg()
     params = _params(cfg)
-    cfg_d = ModelConfig(name="draft-97", n_layers=1, d_model=32, n_heads=2,
-                        n_kv_heads=2, d_ff=64, vocab_size=97, attn_chunk=8)
-    engine = ContinuousBatchingEngine(
-        cfg, params, capacity=2, max_len=MAX_LEN, k=2, pool="paged",
-        speculative=SpeculativeConfig(cfg_d, _params(cfg_d), d=2))
-    assert engine.pool_kind == "dense"
+    from repro.models import get_family
+    cfg_d = _griffin_cfg().replace(name="griffin-draft")
+    # a DISAGREEING draft (different init): rejections exercise the paged
+    # ring rollback, not just the all-accept fast path
+    params_d = get_family(cfg_d).init(jax.random.PRNGKey(3), cfg_d)
+    # window 6 -> an 8-deep ring: gens of 12-14 wrap it repeatedly
+    specs = [(3, 14), (10, 8), (6, 12), (12, 4)]
+    reqs = _requests(cfg, specs, seed0=85)
+    got_d, got_p, engine = _run_both(
+        cfg, params, reqs, capacity=2, k=2,
+        speculative=SpeculativeConfig(cfg_d, params_d, d=d))
+    assert engine.pool_kind == "paged"
+    assert engine.pool_fallback_reason is None
+    _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
 
 
 @pytest.mark.parametrize("window", [None, 8])
@@ -304,9 +404,9 @@ def test_prefix_hit_under_pressure_pins_resident_pages(
     def checked(self, req):
         info = orig(self, req)
         if info is not None:
-            for pids in info["pids"]:
-                if pids and len(set(pids)) != len(pids):
-                    double_booked.append((req.uid, list(pids)))
+            pids = list(info["pids"]) + list(info.get("resident") or [])
+            if pids and len(set(pids)) != len(pids):
+                double_booked.append((req.uid, pids))
         return info
 
     monkeypatch.setattr(ContinuousBatchingEngine, "_alloc_request",
@@ -370,7 +470,7 @@ def test_cow_divergence_and_refcount_release(qwen_smoke_cfg,
     # all requests retired: flush releases every slot's pages; only
     # zero-ref registered pages may linger (LRU-retained for reuse)
     engine._flush_evictions()
-    alloc = engine._allocs[0]
+    alloc = engine._alloc
     assert engine.pages_in_use == 0
     assert not engine._slot_pages
     # and the retained pages are reclaimable: a fresh burst fits
@@ -478,11 +578,195 @@ def test_paged_pool_specs_match_engine(qwen_smoke_cfg, qwen_smoke_params):
     spec = specs_lib.paged_slot_pool_specs(cfg, 2, MAX_LEN)
     assert jax.tree.map(lambda s: (s.shape, str(s.dtype)), spec) \
         == jax.tree.map(lambda a: (a.shape, str(a.dtype)), engine.pool)
-    xcfg = ModelConfig(name="xlstm-spec", family="xlstm", n_layers=2,
-                       d_model=48, n_heads=4, n_kv_heads=4, d_ff=0,
-                       vocab_size=97, proj_factor=2.0, attn_chunk=8,
-                       block_pattern=("m", "s"))
-    assert specs_lib.paged_slot_pool_specs(xcfg, 2, MAX_LEN) is None
+    # slot-group families (xlstm conv tails) page too, and the abstract
+    # specs track their engine pools the same way
+    xcfg = _xlstm_cfg().replace(name="xlstm-spec")
+    xengine = ContinuousBatchingEngine(xcfg, _params(xcfg), capacity=2,
+                                       max_len=MAX_LEN, prefill_bucket=4,
+                                       pool="paged")
+    xspec = specs_lib.paged_slot_pool_specs(xcfg, 2, MAX_LEN)
+    assert jax.tree.map(lambda s: (s.shape, str(s.dtype)), xspec) \
+        == jax.tree.map(lambda a: (a.shape, str(a.dtype)), xengine.pool)
+    # a config with nothing pageable reports None, matching the engine's
+    # named dense fallback
+    assert specs_lib.paged_slot_pool_specs(
+        _griffin_rec_cfg(), 2, MAX_LEN) is None
+
+
+def test_ring_prefix_hit_tail_restore_token_exact():
+    """Windowed prefix sharing: admission registers absolute-position
+    copies of the ring's registrable tail pages, and later identical
+    prefixes HIT — the new slot's ring is reconstructed from the resident
+    pages plus a short tail replay, skipping the full prefill.  Fewer
+    prefill batches, hit rate > 0, tokens exactly equal to the dense
+    engine's and generate()'s."""
+    cfg = _window9_cfg()
+    params = _params(cfg)
+    prompt = lm_batch(cfg.vocab_size, 1, 13, seed=800)[0]
+    reqs = [Request(uid=i, prompt=prompt.copy(), max_new_tokens=6)
+            for i in range(6)]
+    got_d, got_p, engine = _run_both(cfg, params, reqs, capacity=2,
+                                     pages=8)
+    assert engine.pool_kind == "paged" and engine._windowed
+    assert engine.n_prefix_hits > 0
+    assert engine.prefix_hit_rate > 0
+    dense = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                     max_len=MAX_LEN, prefill_bucket=4,
+                                     k=4, pool="dense")
+    dense.run(_clone(reqs, uid0=100))
+    assert engine.n_prefills < dense.n_prefills  # prefill batches drop
+    _arena_invariants(engine)
+    _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
+
+
+def test_ring_too_tight_for_sharing_stays_exact():
+    """window=8 over an 8-deep single-page ring can NEVER serve a prefix
+    hit (the prompt's partial tail page always clobbers the one ring
+    page) — the slack gate must keep sharing off rather than serve
+    garbage, and the trace stays token-exact."""
+    cfg = _window_cfg()
+    params = _params(cfg)
+    prompt = lm_batch(cfg.vocab_size, 1, 13, seed=810)[0]
+    reqs = [Request(uid=i, prompt=prompt.copy(), max_new_tokens=6)
+            for i in range(4)]
+    got_d, got_p, engine = _run_both(cfg, params, reqs, capacity=2,
+                                     pages=8)
+    assert not engine._prefix_ok  # (nblk-1)*page + 1 < window
+    assert engine.n_prefix_hits == 0
+    _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
+
+
+def test_sampled_prefix_hit_chain_exact_replay(qwen_smoke_cfg,
+                                               qwen_smoke_params):
+    """Prefix hits no longer require greedy decode: a sampled admission
+    replays the skipped prefill's PRNG chain (one advance per sampled
+    prompt-tail draw, exactly as ``prefill_sampled`` would have), so a
+    hit emits the very token sequence a miss would have — asserted
+    against a dense SAMPLED engine and hit rate > 0."""
+    from repro.serve.sampling import SamplingParams
+    cfg, params = qwen_smoke_cfg, qwen_smoke_params
+    sp = SamplingParams(temperature=0.9, top_k=12, seed=11)
+    prompt = lm_batch(cfg.vocab_size, 1, 19, seed=820)[0]
+    reqs = [Request(uid=i, prompt=prompt.copy(), max_new_tokens=6)
+            for i in range(6)]
+    got_d, got_p, engine = _run_both(cfg, params, reqs, capacity=2,
+                                     pages=16, sampling=sp)
+    assert engine.n_prefix_hits > 0 and engine.prefix_hit_rate > 0
+    dense = ContinuousBatchingEngine(cfg, params, capacity=2,
+                                     max_len=MAX_LEN, prefill_bucket=4,
+                                     k=4, pool="dense", sampling=sp)
+    dense.run(_clone(reqs, uid0=100))
+    assert engine.n_prefills < dense.n_prefills
+    # per-uid chains: identical prompts still sample DISTINCT sequences
+    outs = {tuple(np.asarray(got_p[u]).tolist()) for u in got_p}
+    assert len(outs) > 1
+    _assert_equal(got_d, got_p)
+
+
+def test_shared_arena_draft_target_trade_pages(gpt_micro_cfg):
+    """Speculative serving allocates from ONE physical arena: a request
+    books its worst-case page count once, holding a reference in BOTH
+    engine namespaces, and pages freed when draft+target retire a slot
+    are immediately reusable by the next admission — a tight ``--pages``
+    budget that a static split would deadlock serves the whole trace
+    without backpressure."""
+    from repro.models import get_family
+    cfg = gpt_micro_cfg
+    params = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    params_d = get_family(cfg).init(jax.random.PRNGKey(7), cfg)
+    specs = [(9, 8), (10, 7), (11, 6), (9, 5), (12, 4), (10, 8)]
+    reqs = _requests(cfg, specs, seed0=830)
+    # 3 pages per request shared across both pools; 6 pages run 2 slots
+    got_d, got_p, engine = _run_both(
+        cfg, params, reqs, capacity=2, k=2, pages=6,
+        speculative=SpeculativeConfig(cfg.replace(name="gpt-micro-draft"),
+                                      params_d, d=2))
+    assert engine.pool_kind == "paged"
+    assert engine._alloc.namespaces == 2
+    assert engine.pages_highwater <= 6
+    assert set(got_p) == {r.uid for r in reqs}  # nobody starved
+    # page ids were RECYCLED across waves (one id space, not a split)
+    assert engine.n_pages_allocated > 6
+    # both pools' block tables resolved the SAME page ids while live
+    # (checked post-hoc via the allocator: every page that was ever
+    # allocated carried a reference in both namespaces)
+    _arena_invariants(engine)
+    engine._flush_evictions()
+    assert engine.pages_in_use == 0
+    _assert_equal(got_d, got_p, _sequential(cfg, params, reqs))
+
+
+def test_shared_arena_namespace_release_contract():
+    """Allocator-level twin of the trade test: a page allocated into
+    both namespaces survives the draft's release (still held by the
+    target), frees + zeroes only on the LAST namespace's release, and is
+    immediately reallocatable."""
+    alloc = PageAllocator(PoolMeta(page=8, nblk=2, n_pages=4),
+                          namespaces=2)
+    a = alloc.alloc(3, ns=(0, 1))
+    assert len(a) == 3 and alloc.pages_in_use() == 3
+    assert alloc.release(a, ns=1) == []  # draft retires: target holds on
+    assert alloc.pages_in_use() == 3
+    zero = alloc.release(a, ns=0)        # target retires: free + zero
+    assert sorted(zero) == sorted(a) and alloc.pages_in_use() == 0
+    b = alloc.alloc(4, ns=(0,))          # every page immediately reusable
+    assert b is not None and alloc.alloc(1) is None
+    assert alloc.highwater == 4
+
+
+def test_page_allocator_conservation_property():
+    """Property-style sweep: under a random interleaving of alloc /
+    release / register / incref / flush ops, the allocator never
+    violates conservation (free ∪ held ∪ LRU-retained partitions the id
+    space, disjointly) and the registry stays a bijection onto resident
+    pages."""
+    rng = np.random.default_rng(0)
+    meta = PoolMeta(page=8, nblk=4, n_pages=16)
+    alloc = PageAllocator(meta, namespaces=2)
+    digs = prefix_digests(np.arange(64 * 8, dtype=np.int32), 8)
+    held = []
+
+    def check():
+        n = meta.n_pages
+        free, lru = set(alloc.free), set(alloc.lru)
+        in_use = {p for p in range(n) if alloc.refcount[p].sum() > 0}
+        assert len(alloc.free) == len(free)
+        assert not (free & in_use) and not (free & lru)
+        assert not (lru & in_use)
+        assert free | in_use | lru == set(range(n))
+        assert (alloc.refcount >= 0).all()
+        for pid, d in alloc.page_key.items():
+            assert alloc.registry.get(d) == pid
+        assert len(alloc.registry) == len(alloc.page_key)
+        assert alloc.pages_in_use() == len(in_use)
+
+    for step in range(400):
+        op = int(rng.integers(5))
+        if op == 0:
+            ns = ((0,), (0, 1))[int(rng.integers(2))]
+            got = alloc.alloc(int(rng.integers(1, 5)), ns=ns)
+            if got is not None:
+                held.append((got, ns))
+                if rng.integers(2):
+                    j = int(rng.integers(len(digs) - len(got)))
+                    alloc.register(digs[j:j + len(got)], got)
+        elif op == 1 and held:
+            pids, ns = held.pop(int(rng.integers(len(held))))
+            for i in ns:
+                alloc.release(pids, ns=i)
+        elif op == 2 and alloc.lru:
+            pid = next(iter(alloc.lru))
+            alloc.incref([pid])
+            held.append(([pid], (0,)))
+        elif op == 3 and not rng.integers(8):
+            alloc.flush_registry()
+        check()
+    for pids, ns in held:  # drain: everything comes back
+        for i in ns:
+            alloc.release(pids, ns=i)
+    alloc.flush_registry()
+    assert alloc.pages_in_use() == 0
+    assert len(alloc.free) == meta.n_pages
 
 
 def test_oversize_rejection_is_resubmittable(qwen_smoke_cfg,
